@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: timing, artifact persistence, CSV rows."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts")
+
+
+def save_artifact(name: str, obj) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def csv_row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.2f},{derived}"
+
+
+def rmse(a, b):
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    return float(np.sqrt(np.mean((a - b) ** 2)))

@@ -1,0 +1,217 @@
+"""Paper Table 2: Multiple Superimposed Oscillators, 6 methods, full grid.
+
+Setup follows the paper exactly (Gallicchio et al. 2017 frequencies; N=100,
+T = 400 train (100 washout) / 300 valid / 300 test; grid of Table 1:
+input_scaling {0.01, 0.1, 1}, leak {0.1..1.0}, spectral radius {0.1..1.0},
+ridge alpha 1e-11..1e0; 10 seeds).  Methods:
+
+  normal        — standard dense-W linear ESN (Eq. 9 ridge)
+  diagonalized  — same W eigendecomposed, EET readout (Eq. 14 metric)
+  uniform / golden / noisy_golden / sim — DPG spectra (Algorithms 1/3 + Sim)
+
+Vectorization notes: all (sr, leak) combos are batched through one scan;
+states are linear in input_scaling for a LINEAR reservoir (Theorem 5 /
+§3.3 — the paper's own trick, here exact for all methods), so one collection
+serves all three scalings; 12 alphas share one (generalized) eigh.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ridge as ridge_mod
+from repro.core import scan as scan_mod
+from repro.core import spectral
+
+from . import _util
+
+ALPHAS_FREQ = [0.2, 0.331, 0.42, 0.51, 0.63, 0.74, 0.85, 0.97, 1.08, 1.19,
+               1.27, 1.32]
+SCALES = np.array([0.01, 0.1, 1.0])
+LEAKS = np.array([0.1, 0.3, 0.5, 0.7, 0.9, 1.0])
+SRS = np.array([0.1, 0.3, 0.5, 0.7, 0.9, 1.0])
+RIDGES = 10.0 ** np.arange(-11, 1)
+N = 100
+T_TRAIN, T_VALID, T_TEST, WASHOUT = 400, 300, 300, 100
+METHODS = ["normal", "diagonalized", "uniform", "golden", "noisy_golden", "sim"]
+
+
+def mso_series(k: int, t: int) -> np.ndarray:
+    ts = np.arange(t)
+    return sum(np.sin(a * ts) for a in ALPHAS_FREQ[:k])
+
+
+# --------------------------------------------------------------------------- #
+# Batched state collection + selection                                         #
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=())
+def _states_normal(w0, w_in, u, srs, leaks):
+    """w0: (N,N) radius-1; returns states (n_sr*n_lr, T, N)."""
+    def one(sr, lr):
+        w = sr * w0 * lr + (1.0 - lr) * jnp.eye(N)
+        win = lr * w_in
+
+        def step(r, ut):
+            r = r @ w + ut * win
+            return r, r
+
+        _, states = jax.lax.scan(step, jnp.zeros(N), u)
+        return states
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    return f(srs, leaks).reshape(len(srs) * len(leaks), -1, N)
+
+
+@jax.jit
+def _states_diag(lam_r, lam_c, win_r, win_c, u, srs, leaks, noise_c):
+    """Complex diagonal states -> realified feature layout.
+
+    lam at sr=1; lam(sr) = sr*lam + noise (noise only on complex slots —
+    Algorithm 3 adds it after radius scaling).  Returns (combos, T, N)."""
+    def one(sr, lr):
+        lr_ = lr
+        lamr = lr_ * (sr * lam_r) + (1.0 - lr_)
+        lamc = lr_ * (sr * lam_c + noise_c) + (1.0 - lr_)
+        xr = u[:, None] * (lr_ * win_r)[None]
+        xc = u[:, None] * (lr_ * win_c)[None]
+        hr = scan_mod.diag_scan_sequential(lamr, xr, time_axis=0)
+        hc = scan_mod.diag_scan_sequential(lamc, xc, time_axis=0)
+        return jnp.concatenate([hr, hc.real, hc.imag], axis=-1)
+
+    f = jax.vmap(jax.vmap(one, in_axes=(None, 0)), in_axes=(0, None))
+    out = f(srs, leaks)
+    return out.reshape(len(srs) * len(leaks), u.shape[0], -1)
+
+
+def _fit_select(states, y, scales, metric=None):
+    """states: (C, T, N); picks best (combo, scale, alpha) on valid RMSE,
+    returns test RMSE.  States are linear in input scaling => states*s."""
+    t_all = states.shape[1]
+    i_tr0, i_tr1 = WASHOUT, T_TRAIN
+    i_v0, i_v1 = T_TRAIN, T_TRAIN + T_VALID
+    i_s0, i_s1 = i_v1, i_v1 + T_TEST
+
+    def per_combo_scale(st, s):
+        x = jnp.concatenate([jnp.ones((t_all, 1)), st * s], axis=-1)
+        g, c = ridge_mod.gram(x[i_tr0:i_tr1], y[i_tr0:i_tr1])
+        if metric is None:
+            w = ridge_mod.ridge_solve_multi(g, c, RIDGES)          # (A, F, 1)
+        else:
+            w = ridge_mod.ridge_solve_general_multi(g, c, metric, RIDGES)
+        pred = jnp.einsum("tf,afd->atd", x, w)                     # (A, T, 1)
+        err_v = jnp.sqrt(jnp.mean(
+            (pred[:, i_v0:i_v1] - y[None, i_v0:i_v1]) ** 2, axis=(1, 2)))
+        err_s = jnp.sqrt(jnp.mean(
+            (pred[:, i_s0:i_s1] - y[None, i_s0:i_s1]) ** 2, axis=(1, 2)))
+        return err_v, err_s
+
+    f = jax.jit(jax.vmap(jax.vmap(per_combo_scale, in_axes=(None, 0)),
+                         in_axes=(0, None)))
+    err_v, err_s = f(states, jnp.asarray(scales))   # (C, S, A)
+    err_v = jnp.where(jnp.isfinite(err_v), err_v, jnp.inf)
+    idx = jnp.argmin(err_v.reshape(-1))
+    return float(err_s.reshape(-1)[idx])
+
+
+def _metric_from_q(q):
+    n = q.shape[0]
+    m = np.zeros((n + 1, n + 1))
+    m[0, 0] = 1.0
+    m[1:, 1:] = q.T @ q
+    return jnp.asarray(m)
+
+
+def _q_from_parts(p_real_cols, p_cpx_cols):
+    """Q in the feature layout [reals | Re v (ni) | Im v (ni)]."""
+    q = np.concatenate([p_real_cols.real, p_cpx_cols.real, p_cpx_cols.imag],
+                       axis=1)
+    return q
+
+
+def run_task(k: int, method: str, seeds=range(10)):
+    u_full = mso_series(k, T_TRAIN + T_VALID + T_TEST + 1)
+    u = jnp.asarray(u_full[:-1])
+    y = jnp.asarray(u_full[1:, None])
+    srs = jnp.asarray(SRS)
+    leaks = jnp.asarray(LEAKS)
+    test_rmses = []
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        if method == "normal":
+            w0 = spectral.generate_reservoir_matrix(N, 1.0, rng)
+            w_in = rng.uniform(-1, 1, size=N)
+            states = _states_normal(jnp.asarray(w0), jnp.asarray(w_in), u,
+                                    srs, leaks)
+            test_rmses.append(_fit_select(states, y, SCALES))
+            continue
+        # diagonal family — build (lam@sr=1, P) once per seed
+        noise_c = None
+        if method == "diagonalized":
+            w0 = spectral.generate_reservoir_matrix(N, 1.0, rng)
+            from repro.core.basis import EigenBasis
+            eb = EigenBasis.from_matrix(w0)
+            lam_r = eb.spectrum.lam_real
+            lam_c = eb.spectrum.lam_cpx
+            p_r = eb.p[:, :eb.n_real]
+            p_c = eb.p[:, eb.n_real:eb.n_real + eb.n_cpx]
+        else:
+            dist = {"uniform": "uniform", "golden": "golden",
+                    "noisy_golden": "golden", "sim": "sim"}[method]
+            spec = (spectral.uniform_eigenvalues(N, 1.0, rng)
+                    if dist == "uniform" else
+                    spectral.golden_eigenvalues(N, 1.0, rng, sigma=0.0)
+                    if dist == "golden" else
+                    spectral.sim_eigenvalues(N, 1.0, rng))
+            lam_r, lam_c = spec.lam_real, spec.lam_cpx
+            p = spectral.random_eigenvectors(N, spec.n_real, rng)
+            p_r = p[:, :spec.n_real]
+            p_c = p[:, spec.n_real:spec.n_real + spec.n_cpx]
+        if method == "noisy_golden":
+            ni = len(lam_c)
+            noise = rng.normal(0, 0.2, ni) + 1j * rng.normal(0, 0.2, ni)
+            noise_c = jnp.asarray(noise)
+        if noise_c is None:
+            noise_c = jnp.zeros(len(lam_c), jnp.complex128)
+        w_in = rng.uniform(-1, 1, size=N)
+        # transformed input weights: [W_in]_P = w_in @ P, split real/cpx parts
+        win_r = jnp.asarray((w_in @ p_r).real)
+        win_c = jnp.asarray(w_in @ p_c)
+        states = _states_diag(jnp.asarray(lam_r), jnp.asarray(lam_c),
+                              win_r, win_c, u, srs, leaks, noise_c)
+        metric = _metric_from_q(_q_from_parts(p_r, p_c))
+        test_rmses.append(_fit_select(states, y, SCALES, metric=metric))
+    return float(np.mean(test_rmses))
+
+
+def run(tasks=range(1, 13), seeds=range(10), methods=METHODS):
+    table = {}
+    for k in tasks:
+        table[f"MSO{k}"] = {}
+        for m in methods:
+            table[f"MSO{k}"][m] = run_task(k, m, seeds)
+    _util.save_artifact("mso_table2.json", table)
+    return table
+
+
+def main(quick=False):
+    if quick:
+        table = run(tasks=[1, 3, 5], seeds=range(3))
+    else:
+        table = run()
+    rows = []
+    for task, res in table.items():
+        best = min(res, key=res.get)
+        for m, v in res.items():
+            rows.append(_util.csv_row(f"mso.{task}.{m}", 0.0,
+                                      f"rmse={v:.3g}{'*' if m == best else ''}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(quick=True):
+        print(r)

@@ -1,0 +1,132 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts (§Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Sources: compiled.cost_analysis() gives per-device HLO FLOPs/bytes with
+while-loop bodies counted ONCE (verified empirically) — the 2/4-unit unrolled
+probes give the exact per-layer body cost, extrapolated to full depth:
+
+    flops(L) = rest + L * body,   body = (P4 - P2) / (L4 - L2)
+
+collective bytes come from parsing the optimized HLO (trip-count-adjusted).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import REGISTRY, SHAPES
+
+from . import _util
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+DRYRUN = os.path.join(_util.ARTIFACTS, "dryrun.jsonl")
+
+
+def load_records(path=DRYRUN):
+    recs = {}
+    probes = {}
+    if not os.path.exists(path):
+        return recs, probes
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except Exception:
+                continue
+            key = (r.get("arch"), r.get("shape"))
+            if r.get("status") == "probe" or str(r.get("mesh", "")).startswith(
+                    "probe"):
+                if r.get("status") in ("probe", "ok"):
+                    probes.setdefault(key, {})[r["probe_units"]] = r["cost"]
+            elif r.get("status") in ("ok", "skipped", "error"):
+                recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs, probes
+
+
+def corrected_cost(rec, probes):
+    """Per-device (flops, bytes) with scan-depth extrapolation via probes."""
+    arch, shape = rec["arch"], rec["shape"]
+    cfg = REGISTRY[arch]
+    raw_f = rec["cost"]["flops"]
+    raw_b = rec["cost"]["bytes_accessed"]
+    pr = probes.get((arch, shape))
+    if not pr or 2 not in pr or 4 not in pr:
+        return raw_f, raw_b, "raw"
+    pat = len(cfg.block_pattern)
+    l2, l4 = 2 * pat, 4 * pat
+    body_f = (pr[4]["flops"] - pr[2]["flops"]) / (l4 - l2)
+    body_b = (pr[4]["bytes_accessed"] - pr[2]["bytes_accessed"]) / (l4 - l2)
+    rest_f = pr[2]["flops"] - l2 * body_f
+    rest_b = pr[2]["bytes_accessed"] - l2 * body_b
+    f = rest_f + cfg.n_layers * body_f
+    b = rest_b + cfg.n_layers * body_b
+    # Guard: extrapolation must not undercut the raw report.
+    return max(f, raw_f), max(b, raw_b), "probe-extrapolated"
+
+
+def model_flops(cfg, cell):
+    """6 * N_active * D (training) / 2 * N_active * D (inference)."""
+    n = cfg.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6 if cell.kind == "train" else 2
+    return mult * n * tokens
+
+
+def roofline_row(rec, probes):
+    cfg = REGISTRY[rec["arch"]]
+    cell = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    f_dev, b_dev, basis = corrected_cost(rec, probes)
+    coll = rec["collectives"]["total_bytes"]  # per-device program bytes
+    t_compute = f_dev / PEAK_FLOPS
+    t_memory = b_dev / HBM_BW
+    t_coll = coll / ICI_BW
+    mf = model_flops(cfg, cell)
+    hlo_global = f_dev * n_dev
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # roofline fraction: useful model flops vs what the dominant term allows
+    ideal_s = mf / (n_dev * PEAK_FLOPS)
+    frac = ideal_s / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "basis": basis,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": frac,
+        "peak_gib_per_dev": rec["memory"]["peak_bytes"] / 2 ** 30,
+    }
+
+
+def main(quick=False):
+    recs, probes = load_records()
+    rows = []
+    table = []
+    for key, rec in sorted(recs.items()):
+        if rec.get("status") != "ok" or rec.get("mesh") != "single":
+            continue
+        row = roofline_row(rec, probes)
+        table.append(row)
+        rows.append(_util.csv_row(
+            f"roofline.{row['arch']}.{row['shape']}",
+            row[row["dominant"] + "_s"] * 1e6,
+            f"dominant={row['dominant']};frac={row['roofline_fraction']:.3f};"
+            f"useful={row['useful_ratio']:.2f}"))
+    _util.save_artifact("roofline.json", table)
+    if not rows:
+        rows.append(_util.csv_row("roofline.pending", 0.0,
+                                  "run repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,69 @@
+"""Serving example: batched prefill + decode with KV/state caches.
+
+Serves a small hybrid model (recurrentgemma-style: RG-LRU + local attention —
+the paper's diagonal recurrence gives O(1)-per-token decode states) over a
+batch of concurrent requests with different prompt lengths (left-padded into
+one batch), then decodes 32 tokens for all of them in lock-step.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import lm
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config("recurrentgemma-2b"), vocab=512)
+    params, _ = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    batch_size, max_prompt, gen_len = 4, 24, 32
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(8, max_prompt))
+               for _ in range(batch_size)]
+
+    # one-token-at-a-time prefill via the decode path (state caches make the
+    # recurrent layers O(1) per token; attention uses the ring KV buffer)
+    cache = lm.make_decode_cache(params, cfg, batch_size,
+                                 max_prompt + gen_len)
+    step = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+
+    maxlen = max(len(p) for p in prompts)
+    toks = np.zeros((batch_size, maxlen), np.int32)
+    for i, p in enumerate(prompts):   # right-align (left-pad with 0)
+        toks[i, maxlen - len(p):] = p
+
+    t0 = time.time()
+    logits = None
+    for t in range(maxlen):
+        logits, cache = step(params, cache, jnp.asarray(toks[:, t:t + 1]))
+    prefill_s = time.time() - t0
+
+    # greedy decode, all requests in lock-step
+    out = []
+    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(gen_len):
+        out.append(np.asarray(cur)[:, 0])
+        logits, cache = step(params, cache, cur)
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    decode_s = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    print(f"served {batch_size} requests: prefill {maxlen} steps in "
+          f"{prefill_s:.2f}s, decoded {gen_len} tokens in {decode_s:.2f}s "
+          f"({batch_size * gen_len / decode_s:.1f} tok/s on CPU)")
+    print("sample continuations:")
+    for i in range(batch_size):
+        print(f"  req{i}: ...{prompts[i][-5:].tolist()} -> "
+              f"{gen[i, :10].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+if __name__ == "__main__":
+    main()

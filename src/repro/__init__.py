@@ -1,0 +1,4 @@
+"""repro: 'Linear Reservoir: A Diagonalization-Based Optimization' at fleet
+scale — faithful ESN reproduction (EWT/EET/DPG) + the diagonal recurrence as
+a first-class TPU sequence-mixing primitive."""
+__version__ = "1.0.0"

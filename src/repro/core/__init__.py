@@ -1,0 +1,10 @@
+"""Core library: the paper's diagonalization-based linear reservoir optimization."""
+from . import basis, esn, ridge, scan, spectral
+from .basis import EigenBasis
+from .esn import ESNConfig, LinearESN
+from .spectral import Spectrum, dpg
+
+__all__ = [
+    "basis", "esn", "ridge", "scan", "spectral",
+    "EigenBasis", "ESNConfig", "LinearESN", "Spectrum", "dpg",
+]

@@ -1,0 +1,302 @@
+"""Linear Echo State Networks — standard and diagonalized (the paper's §2/§4).
+
+Four ways to build the same model:
+
+* ``LinearESN.standard(cfg)``        — dense W, O(N^2) step (the paper's baseline).
+* ``LinearESN.diagonalized(cfg)``    — same W, eigendecomposed; O(N) step.
+  Readout trained directly in the eigenbasis = **EET**; or transplanted from a
+  trained standard model via ``ewt_from`` = **EWT**.
+* ``LinearESN.dpg(cfg, distribution)`` — **DPG**: sample (Lambda, P) directly
+  (uniform / golden / noisy_golden / sim), never building W.
+
+The diagonal model runs entirely in the real Q basis (Appendix A memory-view
+trick): states are real vectors ``[real slots | (re, im) pairs]``, the recurrence
+is ``scan.diag_scan_q`` and readout training uses the generalized ridge with metric
+``blockdiag(I, Q^T Q)`` (Eq. 29) — numerically identical to standard ridge + EWT.
+
+Row-vector convention throughout (as the paper): r (T, N), W_in (D_in, N),
+W (N, N) acting on the right, W_out (N', D_out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ridge as ridge_mod
+from . import scan as scan_mod
+from .basis import EigenBasis
+from .spectral import Spectrum, dpg as dpg_gen, generate_reservoir_matrix
+
+__all__ = ["ESNConfig", "LinearESN"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ESNConfig:
+    n: int
+    d_in: int = 1
+    d_out: int = 1
+    spectral_radius: float = 0.9
+    leak: float = 1.0
+    input_scaling: float = 1.0
+    connectivity: float = 1.0
+    input_connectivity: float = 1.0
+    use_bias: bool = True
+    use_feedback: bool = False
+    feedback_scaling: float = 1.0
+    ridge_alpha: float = 1e-8
+    seed: int = 0
+
+    @property
+    def n_features(self) -> int:
+        return self.n + int(self.use_bias) + (self.d_out if self.use_feedback else 0)
+
+
+def _gen_input_matrix(rng, d, n, scale, connectivity):
+    w = rng.uniform(-1.0, 1.0, size=(d, n)) * scale
+    if connectivity < 1.0:
+        w *= rng.uniform(0.0, 1.0, size=(d, n)) < connectivity
+    return w
+
+
+class LinearESN:
+    """A linear ESN in either 'standard' (dense W) or 'diag' (Q-basis) mode."""
+
+    def __init__(self, cfg: ESNConfig, mode: str, **kw):
+        self.cfg = cfg
+        self.mode = mode
+        self.w_out: Optional[jnp.ndarray] = None  # (N', D_out)
+        for k, v in kw.items():
+            setattr(self, k, v)
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def standard(cfg: ESNConfig) -> "LinearESN":
+        rng = np.random.default_rng(cfg.seed)
+        w = generate_reservoir_matrix(cfg.n, cfg.spectral_radius, rng,
+                                      cfg.connectivity)
+        w_in = _gen_input_matrix(rng, cfg.d_in, cfg.n, cfg.input_scaling,
+                                 cfg.input_connectivity)
+        w_fb = (_gen_input_matrix(rng, cfg.d_out, cfg.n, cfg.feedback_scaling, 1.0)
+                if cfg.use_feedback else None)
+        lr = cfg.leak
+        w_eff = lr * w + (1.0 - lr) * np.eye(cfg.n)
+        return LinearESN(
+            cfg, "standard",
+            w=jnp.asarray(w_eff), w_raw=w,
+            w_in=jnp.asarray(lr * w_in), w_in_raw=w_in,
+            w_fb=None if w_fb is None else jnp.asarray(lr * w_fb), w_fb_raw=w_fb,
+        )
+
+    @staticmethod
+    def _diag_from_basis(cfg: ESNConfig, basis: EigenBasis, w_in_raw, w_fb_raw
+                         ) -> "LinearESN":
+        lr = cfg.leak
+        # Leak acts in the eigendomain: eig(lr W + (1-lr) I) = lr L + (1-lr),
+        # same eigenvectors — no re-decomposition needed.
+        lam_real = lr * basis.spectrum.lam_real + (1.0 - lr)
+        lam_cpx = lr * basis.spectrum.lam_cpx + (1.0 - lr)
+        lam_q = scan_mod.pack_lambda_q(jnp.asarray(lam_real), jnp.asarray(lam_cpx))
+        win_q = jnp.asarray(basis.win_to_q(lr * w_in_raw))
+        wfb_q = (jnp.asarray(basis.win_to_q(lr * w_fb_raw))
+                 if w_fb_raw is not None else None)
+        return LinearESN(
+            cfg, "diag",
+            basis=basis, lam_q=lam_q, n_real=basis.n_real,
+            win_q=win_q, wfb_q=wfb_q,
+            qtq=jnp.asarray(basis.qtq()),
+            w_in_raw=w_in_raw, w_fb_raw=w_fb_raw,
+        )
+
+    @staticmethod
+    def diagonalized(cfg: ESNConfig) -> "LinearESN":
+        """Generate a standard W, then diagonalize (EWT/EET path, paper §4.2-4.3)."""
+        rng = np.random.default_rng(cfg.seed)
+        w = generate_reservoir_matrix(cfg.n, cfg.spectral_radius, rng,
+                                      cfg.connectivity)
+        w_in = _gen_input_matrix(rng, cfg.d_in, cfg.n, cfg.input_scaling,
+                                 cfg.input_connectivity)
+        w_fb = (_gen_input_matrix(rng, cfg.d_out, cfg.n, cfg.feedback_scaling, 1.0)
+                if cfg.use_feedback else None)
+        basis = EigenBasis.from_matrix(w)
+        return LinearESN._diag_from_basis(cfg, basis, w_in, w_fb)
+
+    @staticmethod
+    def dpg(cfg: ESNConfig, distribution: str = "noisy_golden",
+            sigma: float = 0.2) -> "LinearESN":
+        """Direct Parameter Generation (paper §4.4) — no W is ever built."""
+        spec, p = dpg_gen(cfg.n, cfg.spectral_radius, cfg.seed, distribution,
+                          sigma=sigma, connectivity=cfg.connectivity)
+        rng = np.random.default_rng(cfg.seed + 1)
+        w_in = _gen_input_matrix(rng, cfg.d_in, cfg.n, cfg.input_scaling,
+                                 cfg.input_connectivity)
+        w_fb = (_gen_input_matrix(rng, cfg.d_out, cfg.n, cfg.feedback_scaling, 1.0)
+                if cfg.use_feedback else None)
+        basis = EigenBasis.from_spectral(spec, p)
+        return LinearESN._diag_from_basis(cfg, basis, w_in, w_fb)
+
+    def ewt_from(self, trained_standard: "LinearESN") -> "LinearESN":
+        """EWT (paper §4.2): transplant a trained standard readout into this
+        diagonal model (must share the same underlying W/W_in)."""
+        assert self.mode == "diag" and trained_standard.w_out is not None
+        w_out = np.asarray(trained_standard.w_out)
+        n_extra = w_out.shape[0] - self.cfg.n
+        top = w_out[:n_extra]
+        res = self.basis.wout_res_to_q(w_out[n_extra:])  # Q^-1 W_out,res (real)
+        self.w_out = jnp.asarray(np.concatenate([top, res], axis=0))
+        return self
+
+    # ------------------------------------------------------------------- run
+    def run(self, u, y_teacher=None, *, method: str = "sequential",
+            chunk: int = 128):
+        """Collect reservoir states for input u (T, D_in).  Returns (T, N) —
+        raw states (standard mode) or Q-basis states (diag mode)."""
+        u = jnp.asarray(u)
+        cfg = self.cfg
+        if cfg.use_feedback:
+            if y_teacher is None:
+                raise ValueError("feedback ESN needs teacher outputs to collect "
+                                 "states (closed-loop: use .generate)")
+            y_prev = jnp.concatenate(
+                [jnp.zeros((1, cfg.d_out), u.dtype), y_teacher[:-1]], axis=0)
+        if self.mode == "standard":
+            if cfg.use_feedback:
+                drive = u @ self.w_in + y_prev @ self.w_fb
+            else:
+                drive = u @ self.w_in
+
+            def step(r, d):
+                r = r @ self.w + d
+                return r, r
+
+            r0 = jnp.zeros((cfg.n,), drive.dtype)
+            _, states = jax.lax.scan(step, r0, drive)
+            return states
+        # diag mode — element-wise recurrence in the Q basis.
+        if cfg.use_feedback:
+            drive = u @ self.win_q + y_prev @ self.wfb_q
+        else:
+            drive = u @ self.win_q
+        return scan_mod.diag_scan_q(self.lam_q, drive, self.n_real,
+                                    method=method, chunk=chunk, time_axis=-2)
+
+    def features(self, states, y_teacher=None):
+        """X(t) = [1 | y(t-1) | r(t)] (paper Eq. 7) from collected states."""
+        cfg = self.cfg
+        cols = []
+        if cfg.use_bias:
+            cols.append(jnp.ones((states.shape[0], 1), states.dtype))
+        if cfg.use_feedback:
+            y_prev = jnp.concatenate(
+                [jnp.zeros((1, cfg.d_out), states.dtype), y_teacher[:-1]], axis=0)
+            cols.append(y_prev)
+        cols.append(states)
+        return jnp.concatenate(cols, axis=-1)
+
+    def _metric(self):
+        """EET regularizer metric blockdiag(I, Q^T Q) (Eq. 29)."""
+        cfg = self.cfg
+        n_extra = cfg.n_features - cfg.n
+        m = jnp.zeros((cfg.n_features, cfg.n_features), self.qtq.dtype)
+        m = m.at[jnp.arange(n_extra), jnp.arange(n_extra)].set(1.0)
+        return m.at[n_extra:, n_extra:].set(self.qtq)
+
+    # ------------------------------------------------------------------- fit
+    def fit(self, u, y, washout: int = 0, alpha: Optional[float] = None,
+            method: str = "sequential"):
+        """Ridge-train the readout.  Standard mode: Eq. 9.  Diag mode: EET
+        (Eq. 29, generalized metric) — numerically equal to standard+EWT."""
+        u = jnp.asarray(u)
+        y = jnp.asarray(y)
+        alpha = self.cfg.ridge_alpha if alpha is None else alpha
+        states = self.run(u, y_teacher=y if self.cfg.use_feedback else None,
+                          method=method)
+        x = self.features(states, y_teacher=y)[washout:]
+        yt = y[washout:]
+        g, c = ridge_mod.gram(x, yt)
+        if self.mode == "standard":
+            self.w_out = ridge_mod.ridge_solve(g, c, alpha)
+        else:
+            self.w_out = ridge_mod.ridge_solve_general(g, c, self._metric(), alpha)
+        return self
+
+    def predict(self, u, y_teacher=None, method: str = "sequential"):
+        assert self.w_out is not None, "fit() first"
+        states = self.run(u, y_teacher=y_teacher, method=method)
+        x = self.features(states, y_teacher=y_teacher)
+        return x @ self.w_out
+
+    # -------------------------------------------------------------- generate
+    def generate(self, n_steps: int, u_warm, y_warm):
+        """Closed-loop generation: feed predicted y back as next input
+        (output-as-input autonomy, D_in == D_out). Sequential by necessity."""
+        assert self.w_out is not None
+        cfg = self.cfg
+        states = self.run(u_warm, y_teacher=y_warm if cfg.use_feedback else None)
+        r = states[-1]
+        x_last = self.features(states[-1:], y_teacher=(
+            y_warm[-1:] if cfg.use_feedback else None))
+        y = (x_last @ self.w_out)[0]
+
+        def step(carry, _):
+            r, y = carry
+            if self.mode == "standard":
+                d = y[None] @ self.w_in
+                if cfg.use_feedback:
+                    d = d + y[None] @ self.w_fb
+                r = r @ self.w + d[0]
+            else:
+                d = y[None] @ self.win_q
+                if cfg.use_feedback:
+                    d = d + y[None] @ self.wfb_q
+                r = scan_mod.realified_multiply(r, self.lam_q, self.n_real) + d[0]
+            cols = []
+            if cfg.use_bias:
+                cols.append(jnp.ones((1,), r.dtype))
+            if cfg.use_feedback:
+                cols.append(y)
+            cols.append(r)
+            x = jnp.concatenate(cols)
+            y_new = x @ self.w_out
+            return (r, y_new), y_new
+
+        _, ys = jax.lax.scan(step, (r, y), None, length=n_steps)
+        return ys
+
+    # ----------------------------------------------- Theorem 5 (W_in-free R)
+    def collect_r_states(self, u, *, method: str = "sequential"):
+        """R(t) per §3.3 (diag mode): states independent of W_in.
+        Returns (T, D_in, N) in Q layout."""
+        assert self.mode == "diag"
+        u = jnp.asarray(u)
+        t, d_in = u.shape
+        nr = self.n_real
+        n = self.cfg.n
+        # Input term in Q layout: u_d added to every real slot and to the Re lane
+        # of every pair slot (adding a real scalar to a complex coordinate).
+        mask = np.zeros((n,))
+        mask[:nr] = 1.0
+        mask[nr::2] = 1.0
+        x = u[:, :, None] * jnp.asarray(mask)[None, None, :]
+        # x is (T, D_in, N): time is axis 0 here (D_in is a batch dim).
+        return scan_mod.diag_scan_q(self.lam_q, x, nr, method=method, time_axis=0)
+
+    def states_from_r(self, r_states, w_in_raw=None):
+        """Theorem 5: r(t) = sum_d row_d(W_in) (.) row_d(R(t)) — apply W_in
+        *after* the recurrence.  w_in_raw (D_in, N) real, un-leaked."""
+        w_in = self.cfg.leak * jnp.asarray(
+            self.w_in_raw if w_in_raw is None else w_in_raw)
+        # Pack each W_in row like a coefficient vector: reals then (re, im) pairs
+        # of [W_in]_P.  [W_in]_P = W_in P; its Q packing is exactly W_in Q.
+        win_q = w_in @ jnp.asarray(self.basis.q())  # (D_in, N)
+        nr = self.n_real
+
+        def one_row(rq_d, win_d):
+            return scan_mod.realified_multiply(rq_d, win_d, nr)
+
+        # r_states: (T, D_in, N); win_q: (D_in, N)
+        contrib = jax.vmap(one_row, in_axes=(1, 0), out_axes=1)(r_states, win_q)
+        return contrib.sum(axis=1)

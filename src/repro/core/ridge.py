@@ -1,0 +1,121 @@
+"""Ridge regression solvers for readout training (paper Eq. 9 / 14 / 20 / 29).
+
+Standard ESN readout:      W_out = (X^T X + alpha I)^-1 X^T Y
+EET (eigenbasis) readout:  [W_out]_B = ([X]_B^T [X]_B + alpha M)^-1 [X]_B^T Y
+with the metric M = blockdiag(I, B^T B) for basis B (P complex or Q real).
+
+Design points:
+
+* Everything is expressed over the sufficient statistics ``G = X^T X`` (N'xN') and
+  ``C = X^T Y`` (N'xD_out), accumulated in streaming fashion over time/batch chunks.
+  This is what makes readout training *distributed-friendly*: shards accumulate
+  local (G, C) and a single ``psum`` finishes the job — one all-reduce of O(N'^2)
+  bytes regardless of sequence length.
+* Multi-alpha solving (the paper's grid searches sweep 12 alphas) is done with one
+  eigendecomposition of G (generalized to the metric M via Cholesky whitening),
+  after which every alpha costs two small matmuls.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gram",
+    "gram_streaming",
+    "ridge_solve",
+    "ridge_solve_multi",
+    "ridge_solve_general",
+    "ridge_solve_general_multi",
+]
+
+
+def gram(x, y):
+    """(G, C) = (X^T X, X^T Y).  x: (T, N'), y: (T, D_out). Complex-safe (plain
+    transpose, as the paper's Eq. 14 — NOT conjugate transpose)."""
+    xt = jnp.swapaxes(x, -1, -2)
+    return xt @ x, xt @ y
+
+
+def gram_streaming(x, y, chunk: int = 4096):
+    """Streaming accumulation of (G, C) over time chunks via lax.scan.
+
+    Keeps peak memory at O(chunk * N') — the shape a sharded data pipeline feeds.
+    """
+    t = x.shape[0]
+    n, d = x.shape[1], y.shape[1]
+    nc = t // chunk
+    rem = t - nc * chunk
+    dtype = jnp.result_type(x.dtype, y.dtype)
+    g = jnp.zeros((n, n), dtype)
+    c = jnp.zeros((n, d), dtype)
+    if nc:
+        xc = x[: nc * chunk].reshape(nc, chunk, n)
+        yc = y[: nc * chunk].reshape(nc, chunk, d)
+
+        def step(carry, xy):
+            gi, ci = carry
+            xi, yi = xy
+            return (gi + xi.T @ xi, ci + xi.T @ yi), None
+
+        (g, c), _ = jax.lax.scan(step, (g, c), (xc, yc))
+    if rem:
+        xr, yr = x[nc * chunk :], y[nc * chunk :]
+        g = g + xr.T @ xr
+        c = c + xr.T @ yr
+    return g, c
+
+
+def ridge_solve(g, c, alpha: float):
+    """W = (G + alpha I)^-1 C, SPD path (Cholesky) for real, LU for complex."""
+    n = g.shape[0]
+    a = g + alpha * jnp.eye(n, dtype=g.dtype)
+    if jnp.iscomplexobj(g):
+        return jnp.linalg.solve(a, c)
+    return jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a), c)
+
+
+def ridge_solve_multi(g, c, alphas):
+    """Solve for every alpha with ONE eigh of G.
+
+    G = U diag(s) U^T (real symmetric);  W(alpha) = U diag(1/(s+alpha)) U^T C.
+    Returns (n_alphas, N', D_out).
+    """
+    s, u = jnp.linalg.eigh(g)
+    uc = u.T @ c  # (N', D)
+    alphas = jnp.asarray(alphas, dtype=s.dtype)
+    scaled = uc[None] / (s[None, :, None] + alphas[:, None, None])
+    return jnp.einsum("ij,ajd->aid", u, scaled)
+
+
+def ridge_solve_general(g, c, m, alpha: float):
+    """W = (G + alpha M)^-1 C for SPD metric M (EET regularizer, Eq. 14/29)."""
+    a = g + alpha * m
+    if jnp.iscomplexobj(a):
+        return jnp.linalg.solve(a, c)
+    return jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a), c)
+
+
+def ridge_solve_general_multi(g, c, m, alphas):
+    """Multi-alpha generalized ridge via Cholesky whitening of the metric.
+
+    M = L L^T;  (G + alpha M)^-1 = L^-T (G' + alpha I)^-1 L^-1 with
+    G' = L^-1 G L^-T, so one eigh of G' serves every alpha.
+    Real-path only (use the Q basis; Appendix A keeps training 100% real).
+    """
+    l = jnp.linalg.cholesky(m)
+    gl = jax.scipy.linalg.solve_triangular(l, g, lower=True)
+    gp = jax.scipy.linalg.solve_triangular(l, gl.T, lower=True).T  # L^-1 G L^-T
+    gp = 0.5 * (gp + gp.T)
+    cl = jax.scipy.linalg.solve_triangular(l, c, lower=True)
+    s, u = jnp.linalg.eigh(gp)
+    uc = u.T @ cl
+    alphas = jnp.asarray(alphas, dtype=s.dtype)
+    scaled = uc[None] / (s[None, :, None] + alphas[:, None, None])
+    w_white = jnp.einsum("ij,ajd->aid", u, scaled)  # (A, N', D)
+    # Map back: W = L^-T W_white.
+    return jax.vmap(
+        lambda wa: jax.scipy.linalg.solve_triangular(l.T, wa, lower=False)
+    )(w_white)

@@ -1,0 +1,299 @@
+"""Diagonal linear recurrence — the paper's O(N) reservoir step, three ways.
+
+The recurrence (Corollary 2):      h_t = a_t (.) h_{t-1} + x_t
+with diagonal coefficients ``a`` (the eigenvalues Lambda, or per-timestep gates for
+RG-LRU-style layers).  Because the update is element-wise it is associative over
+time (Appendix B), which yields three execution strategies:
+
+* ``sequential``  — lax.scan, O(T) depth, minimal FLOPs.  Decode / small T.
+* ``associative`` — lax.associative_scan on (a, b) pairs with the composition
+                    (a1,b1)*(a2,b2) = (a2 a1, a2 b1 + b2).  O(log T) depth,
+                    O(T log T) work.  The paper's Appendix B parallelization.
+* ``chunked``     — work-efficient two-pass: per-chunk local scan + cumulative
+                    coefficient products, then a sequential carry scan over chunk
+                    summaries, then a broadcast fix-up.  This mirrors exactly what
+                    the Pallas TPU kernel does (time chunks walked sequentially by
+                    the grid with the carry in VMEM scratch).
+
+All functions accept real or complex ``a``/``x``.  The Appendix-A "memory view"
+realified form (complex conjugate pairs stored as (re, im) lanes — TPU has no
+complex VPU dtype) is provided via ``pack_lambda_q`` / ``realified_multiply`` /
+``diag_scan_q``.
+
+Shapes: ``x`` is ``(..., T, N)`` (time on axis -2). ``a`` is ``(N,)`` (static
+coefficients) or broadcast-compatible with ``x`` (e.g. ``(T, N)`` shared across
+batch, or ``(..., T, N)`` for input-dependent gates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "diag_scan",
+    "diag_scan_sequential",
+    "diag_scan_associative",
+    "diag_scan_chunked",
+    "pack_lambda_q",
+    "realified_multiply",
+    "diag_scan_q",
+]
+
+
+def _move_time_front(x, time_axis: int):
+    return jnp.moveaxis(x, time_axis, 0)
+
+
+def _move_time_back(x, time_axis: int):
+    return jnp.moveaxis(x, 0, time_axis)
+
+
+# --------------------------------------------------------------------------- #
+# Sequential (lax.scan)                                                        #
+# --------------------------------------------------------------------------- #
+def diag_scan_sequential(a, x, h0=None, *, time_axis: int = -2, reverse: bool = False):
+    """h_t = a_t * h_{t-1} + x_t via lax.scan.  Returns all states, shape of x."""
+    xt = _move_time_front(x, time_axis)  # (T, ..., N)
+    t = xt.shape[0]
+    static_a = a.ndim == 1
+    if not static_a:
+        at = _move_time_front(jnp.broadcast_to(a, x.shape), time_axis)
+    carry_shape = jnp.broadcast_shapes(xt.shape[1:], a.shape if static_a else at.shape[1:])
+    dtype = jnp.result_type(a.dtype, x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros(carry_shape, dtype)
+    else:
+        h0 = jnp.broadcast_to(h0, carry_shape).astype(dtype)
+
+    if static_a:
+        def step(h, xi):
+            h = a * h + xi
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, xt, reverse=reverse)
+    else:
+        def step(h, axi):
+            ai, xi = axi
+            h = ai * h + xi
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, (at, xt), reverse=reverse)
+    return _move_time_back(hs, time_axis)
+
+
+# --------------------------------------------------------------------------- #
+# Associative scan (Appendix B)                                                #
+# --------------------------------------------------------------------------- #
+def _compose(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def diag_scan_associative(a, x, h0=None, *, time_axis: int = -2, reverse: bool = False):
+    """Time-parallel scan: O(log T) depth.  ``a`` broadcast over batch is kept
+    unmaterialized (associative_scan composes with broadcasting)."""
+    xt = _move_time_front(x, time_axis)
+    t = xt.shape[0]
+    dtype = jnp.result_type(a.dtype, x.dtype)
+    xt = xt.astype(dtype)
+    if a.ndim == 1:
+        at = jnp.broadcast_to(a, xt.shape).astype(dtype)
+    else:
+        at = _move_time_front(jnp.broadcast_to(a, x.shape), time_axis).astype(dtype)
+    if h0 is not None:
+        # Fold the initial state into the first element: h_1 = a_1 h_0 + x_1.
+        first = xt[0] + at[0] * h0
+        xt = xt.at[0].set(first.astype(dtype))
+    _, hs = jax.lax.associative_scan(_compose, (at, xt), axis=0, reverse=reverse)
+    return _move_time_back(hs, time_axis)
+
+
+# --------------------------------------------------------------------------- #
+# Chunked two-pass scan (work-efficient; mirrors the Pallas kernel)            #
+# --------------------------------------------------------------------------- #
+def diag_scan_chunked(
+    a, x, h0=None, *, chunk: int = 128, time_axis: int = -2, reverse: bool = False
+):
+    """Work-efficient chunked scan.
+
+    Pass 1: within each chunk, local scan from zero + cumulative products A.
+    Pass 2: sequential scan over the ``T/chunk`` chunk carries (cheap).
+    Pass 3: h[c, t] = local[c, t] + A[c, t] * carry_in[c].
+    """
+    if reverse:
+        # Reverse = flip, forward scan with flipped coefficients, flip back.
+        a_f = a if a.ndim == 1 else jnp.flip(a, axis=time_axis)
+        x_f = jnp.flip(x, axis=time_axis)
+        out = diag_scan_chunked(a_f, x_f, h0, chunk=chunk, time_axis=time_axis)
+        return jnp.flip(out, axis=time_axis)
+
+    xt = _move_time_front(x, time_axis)  # (T, B..., N)
+    t = xt.shape[0]
+    if t % chunk != 0:
+        pad = chunk - t % chunk
+        xt = jnp.concatenate([xt, jnp.zeros((pad,) + xt.shape[1:], xt.dtype)], 0)
+        if a.ndim != 1:
+            at_full = _move_time_front(jnp.broadcast_to(a, x.shape), time_axis)
+            # Pad coefficients with ones so padded steps are harmless.
+            at_full = jnp.concatenate(
+                [at_full, jnp.ones((pad,) + at_full.shape[1:], at_full.dtype)], 0
+            )
+        t_pad = t + pad
+    else:
+        pad = 0
+        t_pad = t
+        if a.ndim != 1:
+            at_full = _move_time_front(jnp.broadcast_to(a, x.shape), time_axis)
+
+    nc = t_pad // chunk
+    dtype = jnp.result_type(a.dtype, x.dtype)
+    xc = xt.reshape((nc, chunk) + xt.shape[1:]).astype(dtype)  # (nc, tc, B..., N)
+
+    if a.ndim == 1:
+        # Static coefficients: powers a^(k+1) for k in [0, chunk).
+        powers = a[None, :] ** jnp.arange(1, chunk + 1, dtype=a.real.dtype)[:, None]
+        powers = powers.astype(dtype)  # (tc, N)
+
+        def local(h, xi):
+            h = a * h + xi
+            return h, h
+
+        def chunk_local(xck):  # (tc, B..., N) -> local states from zero
+            zero = jnp.zeros(xck.shape[1:], dtype)
+            _, hs = jax.lax.scan(local, zero, xck)
+            return hs
+
+        locals_ = jax.vmap(chunk_local)(xc)  # (nc, tc, B..., N)
+        a_cum = jnp.broadcast_to(
+            powers.reshape((1, chunk) + (1,) * (xc.ndim - 3) + (xc.shape[-1],)),
+            xc.shape,
+        )
+    else:
+        ac = at_full.reshape((nc, chunk) + at_full.shape[1:]).astype(dtype)
+
+        def chunk_local(ack, xck):
+            zero = jnp.zeros(jnp.broadcast_shapes(ack.shape[1:], xck.shape[1:]), dtype)
+
+            def local(h, axi):
+                ai, xi = axi
+                h = ai * h + xi
+                return h, h
+
+            _, hs = jax.lax.scan(local, zero, (ack, xck))
+            return hs
+
+        locals_ = jax.vmap(chunk_local)(ac, xc)
+        a_cum = jnp.cumprod(ac, axis=1)
+        a_cum = jnp.broadcast_to(a_cum, locals_.shape)
+
+    # Pass 2: carries across chunks.
+    last_local = locals_[:, -1]   # (nc, B..., N)
+    last_prod = a_cum[:, -1]      # (nc, B..., N)
+    if h0 is None:
+        carry0 = jnp.zeros(last_local.shape[1:], dtype)
+    else:
+        carry0 = jnp.broadcast_to(h0, last_local.shape[1:]).astype(dtype)
+
+    def carry_step(c, lp):
+        last_l, last_p = lp
+        c_out = last_l + last_p * c
+        return c_out, c
+
+    _, carry_in = jax.lax.scan(carry_step, carry0, (last_local, last_prod))
+    # carry_in[c] = state entering chunk c (i.e. h at the end of chunk c-1).
+
+    hs = locals_ + a_cum * carry_in[:, None]
+    hs = hs.reshape((t_pad,) + xt.shape[1:])
+    if pad:
+        hs = hs[:t]
+    return _move_time_back(hs, time_axis)
+
+
+def diag_scan(a, x, h0=None, *, method: str = "sequential", chunk: int = 128,
+              time_axis: int = -2, reverse: bool = False):
+    """Dispatch across the three strategies (same numerics, different schedules)."""
+    if method == "sequential":
+        return diag_scan_sequential(a, x, h0, time_axis=time_axis, reverse=reverse)
+    if method == "associative":
+        return diag_scan_associative(a, x, h0, time_axis=time_axis, reverse=reverse)
+    if method == "chunked":
+        return diag_scan_chunked(a, x, h0, chunk=chunk, time_axis=time_axis,
+                                 reverse=reverse)
+    raise ValueError(f"unknown scan method {method!r}")
+
+
+# --------------------------------------------------------------------------- #
+# Appendix-A realified (Q-basis) arithmetic                                    #
+# --------------------------------------------------------------------------- #
+def pack_lambda_q(lam_real, lam_cpx):
+    """Pack (L_real (nr,), L_cpx (ni,)) into the Q-layout coefficient vector.
+
+    Layout: [L_real | Re mu_1, Im mu_1, ..., Re mu_ni, Im mu_ni]   (N,) real.
+    """
+    lam_real = jnp.asarray(lam_real)
+    lam_cpx = jnp.asarray(lam_cpx)
+    pairs = jnp.stack([lam_cpx.real, lam_cpx.imag], axis=-1).reshape(-1)
+    return jnp.concatenate([lam_real, pairs.astype(lam_real.dtype)], axis=0)
+
+
+def realified_multiply(h, lam_q, n_real: int):
+    """One Q-basis recurrence multiply: real slots scale, pair slots rotate.
+
+    ``h``: (..., N) real; ``lam_q``: (N,) packed (see pack_lambda_q).
+    Equivalent to the complex element-wise multiply in the P basis (Appendix A) —
+    the TPU-native version of the paper's memory-view trick (2 lanes + rotation
+    instead of a complex dtype).
+    """
+    hr = h[..., :n_real] * lam_q[:n_real]
+    pairs = h[..., n_real:].reshape(h.shape[:-1] + (-1, 2))
+    lp = lam_q[n_real:].reshape(-1, 2)
+    ar, ai = lp[:, 0], lp[:, 1]
+    pr, pi = pairs[..., 0], pairs[..., 1]
+    out_r = pr * ar - pi * ai
+    out_i = pr * ai + pi * ar
+    hp = jnp.stack([out_r, out_i], axis=-1).reshape(h.shape[:-1] + (-1,))
+    return jnp.concatenate([hr, hp], axis=-1)
+
+
+def diag_scan_q(lam_q, x_q, n_real: int, h0=None, *, method: str = "sequential",
+                chunk: int = 128, time_axis: int = -2):
+    """Q-basis (all-real) scan.  Internally views pairs as complex for the
+    parallel methods (the combine law is complex multiplication), sequential
+    stays fully realified."""
+    if method == "sequential":
+        xt = _move_time_front(x_q, time_axis)
+        if h0 is None:
+            h0 = jnp.zeros(xt.shape[1:], x_q.dtype)
+
+        def step(h, xi):
+            h = realified_multiply(h, lam_q, n_real) + xi
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, xt)
+        return _move_time_back(hs, time_axis)
+
+    # Parallel methods: split, run real scan on reals + complex scan on pairs.
+    nr = n_real
+    a_r = lam_q[:nr]
+    lp = lam_q[nr:].reshape(-1, 2)
+    a_c = jax.lax.complex(lp[:, 0], lp[:, 1])
+    x_r = x_q[..., :nr]
+    xp = x_q[..., nr:].reshape(x_q.shape[:-1] + (-1, 2))
+    x_c = jax.lax.complex(xp[..., 0], xp[..., 1])
+    h0_r = None if h0 is None else h0[..., :nr]
+    if h0 is None:
+        h0_c = None
+    else:
+        hp = h0[..., nr:].reshape(h0.shape[:-1] + (-1, 2))
+        h0_c = jax.lax.complex(hp[..., 0], hp[..., 1])
+    hs_r = diag_scan(a_r, x_r, h0_r, method=method, chunk=chunk, time_axis=time_axis)
+    hs_c = diag_scan(a_c, x_c, h0_c, method=method, chunk=chunk, time_axis=time_axis)
+    hs_p = jnp.stack([hs_c.real, hs_c.imag], axis=-1).reshape(
+        hs_c.shape[:-1] + (-1,)
+    )
+    return jnp.concatenate([hs_r.astype(x_q.dtype), hs_p.astype(x_q.dtype)], axis=-1)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+diag_scan        — the paper's O(N) diagonal recurrence (chunked, VMEM carry).
+flash_attention  — blocked online-softmax attention (GQA/causal/window).
+ops              — jit'd wrappers + custom VJPs.   ref — pure-jnp oracles.
+"""
+from . import ops, ref
+from .ops import diag_scan, flash_attention
+
+__all__ = ["ops", "ref", "diag_scan", "flash_attention"]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: chunked diagonal (complex-pair) linear recurrence.
+
+The paper's O(N) reservoir step as a TPU kernel.  Complex state is realified
+into separate (re, im) f32 lane arrays (TPU VPU has no complex dtype —
+Appendix A's memory-view trick becomes two lanes + a 2x2 rotation).
+
+Grid layout: (batch_tiles, state_tiles, time_chunks), time innermost and
+*sequential* ("arbitrary" dimension semantics): the carry lives in VMEM scratch
+and persists across time-chunk grid steps, so the state never round-trips to
+HBM inside a (batch, state) tile — per-chunk HBM traffic is exactly the
+inputs/outputs (the TPU-native meaning of "the update is O(N)").
+
+Block shapes default to (8 batch, 256 time, 128 state) — the state tile matches
+the 128-wide VPU lanes and the f32 VMEM budget is
+   (bb*bt*bn) * 4 arrays * 4B = 8*256*128*16B = 4 MiB  « 128 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["diag_scan_pallas_raw"]
+
+
+def _kernel(h0_re_ref, h0_im_ref, a_re_ref, a_im_ref, x_re_ref, x_im_ref,
+            o_re_ref, o_im_ref, carry_re, carry_im, *, block_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_re[...] = h0_re_ref[...]
+        carry_im[...] = h0_im_ref[...]
+
+    def body(t, carry):
+        hr, hi = carry
+        ar = a_re_ref[:, t, :]
+        ai = a_im_ref[:, t, :]
+        xr = x_re_ref[:, t, :]
+        xi = x_im_ref[:, t, :]
+        # Complex multiply on (re, im) lanes + accumulate input.
+        new_r = ar * hr - ai * hi + xr
+        new_i = ar * hi + ai * hr + xi
+        o_re_ref[:, t, :] = new_r
+        o_im_ref[:, t, :] = new_i
+        return new_r, new_i
+
+    hr, hi = jax.lax.fori_loop(
+        0, block_t, body, (carry_re[...], carry_im[...]))
+    carry_re[...] = hr
+    carry_im[...] = hi
+
+
+def diag_scan_pallas_raw(a_re, a_im, x_re, x_im, h0_re, h0_im, *,
+                         block_b: int = 8, block_t: int = 256,
+                         block_n: int = 128, interpret: bool | None = None):
+    """h_t = a_t * h_{t-1} + x_t on realified complex lanes.
+
+    All of a_*, x_*: (B, T, N) f32/f64; h0_*: (B, N).  Returns (h_re, h_im)
+    with shape (B, T, N).  Caller handles broadcasting/padding (see ops.py).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, n = x_re.shape
+    assert b % block_b == 0 and t % block_t == 0 and n % block_n == 0, (
+        (b, t, n), (block_b, block_t, block_n))
+    grid = (b // block_b, n // block_n, t // block_t)
+
+    def xmap(ib, in_, it):
+        return (ib, it, in_)
+
+    def hmap(ib, in_, it):
+        return (ib, in_)
+
+    x_spec = pl.BlockSpec((block_b, block_t, block_n), xmap)
+    h_spec = pl.BlockSpec((block_b, block_n), hmap)
+    out_shape = [jax.ShapeDtypeStruct((b, t, n), x_re.dtype)] * 2
+
+    kernel = functools.partial(_kernel, block_t=block_t)
+    kw = {}
+    if not interpret:
+        try:
+            kw["compiler_params"] = pltpu.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+        except AttributeError:  # older jax naming
+            kw["compiler_params"] = pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+    o_re, o_im = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[h_spec, h_spec, x_spec, x_spec, x_spec, x_spec],
+        out_specs=[x_spec, x_spec],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_n), x_re.dtype),
+            pltpu.VMEM((block_b, block_n), x_re.dtype),
+        ],
+        interpret=interpret,
+        **kw,
+    )(h0_re, h0_im, a_re, a_im, x_re, x_im)
+    return o_re, o_im

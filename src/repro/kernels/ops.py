@@ -1,0 +1,164 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+* ``diag_scan`` — padding/broadcast + realify + custom VJP (the backward of a
+  diagonal recurrence is the same recurrence run in reverse with conjugated,
+  shifted coefficients — so the kernel serves its own gradient).
+* ``flash_attention`` — padding + GQA plumbing; backward falls back to
+  recompute-with-the-jnp-oracle (standard flash recompute strategy; the
+  forward hot-spot is the kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as ref_mod
+from .diag_scan import diag_scan_pallas_raw
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["diag_scan", "flash_attention"]
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def diag_scan(a, x, h0=None, *, block_b: int = 8, block_t: int = 256,
+              block_n: int = 128, interpret: bool | None = None):
+    """h_t = a_t h_{t-1} + x_t on TPU via the Pallas kernel.
+
+    a: (N,) / (T, N) / (B, T, N), real or complex; x: (B, T, N).
+    Returns all states (B, T, N) in the promoted dtype.  Differentiable in
+    (a, x, h0).
+    """
+    b, t, n = x.shape
+    out_dtype = jnp.result_type(a.dtype, x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((b, n), out_dtype)
+    return _diag_scan_vjp(a, x, jnp.broadcast_to(h0, (b, n)).astype(out_dtype),
+                          block_b, block_t, block_n, interpret)
+
+
+def _split(z, real_dtype):
+    if jnp.iscomplexobj(z):
+        return z.real.astype(real_dtype), z.imag.astype(real_dtype)
+    return z.astype(real_dtype), jnp.zeros_like(z, real_dtype)
+
+
+def _scan_padded(a_full, x, h0, block_b, block_t, block_n, interpret):
+    b, t, n = x.shape
+    out_dtype = jnp.result_type(a_full.dtype, x.dtype)
+    is_cpx = jnp.issubdtype(out_dtype, jnp.complexfloating)
+    real_dtype = jnp.float64 if out_dtype in (jnp.complex128, jnp.float64) \
+        else jnp.float32
+    a_re, a_im = _split(a_full, real_dtype)
+    x_re, x_im = _split(x, real_dtype)
+    h_re, h_im = _split(h0, real_dtype)
+    bp, tp, np_ = _round_up(b, block_b), _round_up(t, block_t), _round_up(n, block_n)
+    pad = ((0, bp - b), (0, tp - t), (0, np_ - n))
+    hpad = ((0, bp - b), (0, np_ - n))
+    args = [jnp.pad(v, pad) for v in (a_re, a_im, x_re, x_im)]
+    h0s = [jnp.pad(v, hpad) for v in (h_re, h_im)]
+    o_re, o_im = diag_scan_pallas_raw(
+        *args, *h0s, block_b=block_b, block_t=block_t, block_n=block_n,
+        interpret=interpret)
+    o_re, o_im = o_re[:b, :t, :n], o_im[:b, :t, :n]
+    if is_cpx:
+        return jax.lax.complex(o_re, o_im).astype(out_dtype)
+    return o_re.astype(out_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _diag_scan_vjp(a, x, h0, block_b, block_t, block_n, interpret):
+    return _fwd(a, x, h0, block_b, block_t, block_n, interpret)[0]
+
+
+def _fwd(a, x, h0, block_b, block_t, block_n, interpret):
+    b, t, n = x.shape
+    a_full = jnp.broadcast_to(a, (b, t, n))
+    out = _scan_padded(a_full, x, h0, block_b, block_t, block_n, interpret)
+    return out, (a, h0, out)
+
+
+def _bwd(block_b, block_t, block_n, interpret, res, g):
+    a, h0, h = res
+    b, t, n = g.shape
+    a_full = jnp.broadcast_to(a, (b, t, n))
+    # s_t = g_t + a_{t+1} s_{t+1}  — forward scan on flipped arrays with
+    # right-shifted coefficients.  (JAX's holomorphic-VJP convention carries NO
+    # conjugation: vjp of y = a*x is (a*g, x*g) — verified against autodiff.)
+    a_f = jnp.flip(a_full, axis=1)
+    coeff = jnp.concatenate([jnp.zeros_like(a_f[:, :1]), a_f[:, :-1]], axis=1)
+    g_f = jnp.flip(g, axis=1)
+    h0z = jnp.zeros_like(h0)
+    s_f = _scan_padded(coeff, g_f.astype(h.dtype), h0z, block_b, block_t,
+                       block_n, interpret)
+    s = jnp.flip(s_f, axis=1)
+    dx = s.astype(g.dtype)
+    # da_t = s_t * h_{t-1};  h_{-1} = h0.
+    h_prev = jnp.concatenate([h0[:, None], h[:, :-1]], axis=1)
+    da_full = s * h_prev
+    if a.ndim == 1:
+        da = da_full.sum(axis=(0, 1))
+    elif a.ndim == 2:
+        da = da_full.sum(axis=0)
+    else:
+        da = da_full
+    if not jnp.iscomplexobj(a):
+        da = da.real
+    dh0 = a_full[:, 0] * s[:, 0]
+    if not jnp.iscomplexobj(h0):
+        dh0 = dh0.real
+    return da.astype(a.dtype), dx, dh0.astype(h0.dtype)
+
+
+_diag_scan_vjp.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention wrapper                                                      #
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
+                    block_q=128, block_k=128, interpret=None):
+    """Blocked online-softmax attention (GQA/causal/window), padded as needed."""
+    return _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k,
+                   interpret)[0]
+
+
+def _fa_pad_call(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    sqp, skvp = _round_up(sq, block_q), _round_up(skv, block_k)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        kv_len=skv, scale=d ** -0.5, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:, :, :sq]
+
+
+def _fa_fwd(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    out = _fa_pad_call(q, k, v, causal, window, q_offset, block_q, block_k,
+                       interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, q_offset, block_q, block_k, interpret, res, g):
+    q, k, v = res
+
+    # Recompute-based backward through the jnp oracle (flash recompute).
+    def f(q, k, v):
+        return ref_mod.attention_ref(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

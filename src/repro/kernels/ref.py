@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["diag_scan_ref", "attention_ref"]
+
+
+def diag_scan_ref(a, x, h0=None):
+    """h_t = a_t * h_{t-1} + x_t via lax.scan.  a: (N,) or like x; x: (..., T, N)
+    with time on axis -2.  Real or complex."""
+    xt = jnp.moveaxis(x, -2, 0)
+    dtype = jnp.result_type(a.dtype, x.dtype)
+    if a.ndim == 1:
+        at = jnp.broadcast_to(a, xt.shape)
+    else:
+        at = jnp.moveaxis(jnp.broadcast_to(a, x.shape), -2, 0)
+    h = (jnp.zeros(xt.shape[1:], dtype) if h0 is None
+         else jnp.broadcast_to(h0, xt.shape[1:]).astype(dtype))
+
+    def step(h, ax):
+        ai, xi = ax
+        h = ai * h + xi
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (at.astype(dtype), xt.astype(dtype)))
+    return jnp.moveaxis(hs, 0, -2)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):
+    """Dense softmax attention with GQA/causal/window — the flash oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  f32 accumulation.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # Rows with no valid key: softmax of all -1e30 is uniform garbage; zero them.
+    any_valid = mask.any(axis=-1)
+    p = jnp.where(any_valid[None, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

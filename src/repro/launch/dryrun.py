@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+against 512 placeholder host devices; record memory_analysis, cost_analysis
+and the HLO collective schedule for the roofline report.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # full sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # one mesh only
+
+Results append to artifacts/dryrun.jsonl (one JSON object per cell), so a
+crashed sweep resumes where it left off (--resume skips completed cells).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, REGISTRY, get_config, shape_cells
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import rules
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128,1024]' -> bytes.  Tuple shapes handled by the caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum output bytes of every collective op in the optimized HLO, with
+    while-loop trip-count multiplicity (scan-over-layers!) applied.
+
+    Returns (per_kind_bytes, static_bytes, details).
+    """
+    # 1. map computation name -> trip count for while bodies/conditions.
+    trip = {}
+    # while loops: find "while(...)" ops referencing condition/body computations
+    for m in re.finditer(
+            r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)", hlo_text):
+        cond, body = m.groups()
+        # find the condition computation text; its compare against a constant
+        # gives the trip count.
+        cm = re.search(
+            re.escape(cond) + r"[^{]*\{(.*?)\n\}", hlo_text, re.S)
+        count = 1
+        if cm:
+            consts = [int(c) for c in
+                      re.findall(r"constant\((\d+)\)", cm.group(1))]
+            if consts:
+                count = max(consts)
+        trip[body] = count
+    # 2. walk computations, accumulate collective bytes.
+    per_kind = {k: 0 for k in COLLECTIVES}
+    static = 0
+    details = []
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        if line.startswith(("%", "ENTRY")) and "{" in line:
+            m2 = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m2:
+                comp = m2.group(1)
+        for kind in COLLECTIVES:
+            token = f" {kind}("
+            alt = f" {kind}-start("
+            hit = token in line or alt in line
+            if not hit:
+                continue
+            # `%name = f32[8,64]{1,0} all-gather(...)` or tuple outputs
+            # `%name = (f32[..], f32[..]) all-reduce(...)`: the OUTPUT shape
+            # sits between '=' and the op token.
+            after_eq = line.split("=", 1)
+            seg = after_eq[1] if len(after_eq) == 2 else line
+            seg = seg.split(kind)[0]
+            shapes = re.findall(r"(\w+\[[\d,]*\])", seg)
+            if not shapes:
+                continue
+            nbytes = sum(_shape_bytes(s) for s in shapes)
+            mult = trip.get(comp, 1)
+            per_kind[kind] += nbytes * mult
+            static += nbytes
+            details.append({"kind": kind, "bytes": nbytes, "mult": mult,
+                            "comp": comp})
+            break
+    details.sort(key=lambda d: -d["bytes"] * d["mult"])
+    return per_kind, static, details
+
+
+def run_probe(arch: str, shape_name: str, n_units: int):
+    """Cost probe: same cell, but a SHALLOW UNROLLED stack (n_units x pattern
+    layers, scan_layers=False, associative recurrences, unrolled KV-chunk
+    scans) so HLO cost analysis is exact.  Two probes (2 and 4 units) give the
+    per-layer body cost by differencing; the roofline extrapolates to full
+    depth.  Single-pod only (the roofline table is single-pod)."""
+    import dataclasses as dc
+
+    from repro.models import attention as attn_mod
+    cfg = get_config(arch)
+    cells = {c.name: c for c in shape_cells(cfg)}
+    if shape_name not in cells:
+        return None
+    cell = cells[shape_name]
+    pat = len(cfg.block_pattern)
+    probe_cfg = dc.replace(cfg, n_layers=n_units * pat, scan_layers=False,
+                           encoder_layers=min(cfg.encoder_layers, n_units)
+                           if cfg.is_encoder_decoder else 0)
+    mesh = make_production_mesh(multi_pod=False)
+    old_unroll = attn_mod.UNROLL_SCANS
+    old_scan = rules.SCAN_METHOD
+    attn_mod.UNROLL_SCANS = True
+    rules.SCAN_METHOD = "associative"
+    try:
+        lowered, _ = rules.lower_cell(mesh, probe_cfg, cell, donate=False)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+    finally:
+        attn_mod.UNROLL_SCANS = old_unroll
+        rules.SCAN_METHOD = old_scan
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "single",
+        "status": "probe", "probe_units": n_units,
+        "probe_layers": n_units * pat,
+        "cost": {"flops": float(cost.get("flops", 0.0)),
+                 "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, donate=True):
+    cfg = get_config(arch)
+    cells = {c.name: c for c in shape_cells(cfg)}
+    if shape_name not in cells:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(full-attention arch; see DESIGN.md)"}
+    cell = cells[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, meta = rules.lower_cell(mesh, cfg, cell, donate=donate)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    per_kind, static_bytes, details = parse_collectives(hlo)
+    n_dev = mesh.devices.size
+    rec = {
+        **meta,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": int(n_dev),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                              getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collectives": {
+            "per_kind_bytes": per_kind,
+            "total_bytes": int(sum(per_kind.values())),
+            "static_bytes": int(static_bytes),
+            "n_ops": len(details),
+            "top_ops": details[:6],
+        },
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "tokens": cell.global_batch * (cell.seq_len
+                                           if cell.kind != "decode" else 1),
+        },
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--include-esn", action="store_true",
+                    help="also dry-run the paper's linear-esn LM config")
+    ap.add_argument("--probes", action="store_true",
+                    help="also run 2/4-unit unrolled cost probes (single-pod)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    if args.include_esn and "linear-esn" not in archs:
+        archs.append("linear-esn")
+    shapes = ([args.shape] if args.shape
+              else ["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for multi in meshes:
+                    key = (arch, shape, "multi" if multi else "single")
+                    if key in done:
+                        continue
+                    print(f"[dryrun] {key} ...", flush=True)
+                    try:
+                        rec = run_cell(arch, shape, multi)
+                    except Exception as e:  # a failure here is a bug — record it
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "multi" if multi else "single",
+                               "status": "error", "error": repr(e),
+                               "traceback": traceback.format_exc()[-2000:]}
+                        n_fail += 1
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    status = rec.get("status")
+                    extra = ""
+                    if status == "ok":
+                        mem_gb = rec["memory"]["peak_bytes"] / 2**30
+                        extra = (f" compile={rec['compile_s']}s "
+                                 f"peak={mem_gb:.2f}GiB/dev "
+                                 f"flops={rec['cost']['flops']:.3g}")
+                    print(f"[dryrun] {key} -> {status}{extra}", flush=True)
+                if args.probes:
+                    for n_units in (2, 4):
+                        pkey = (arch, shape, f"probe{n_units}")
+                        if pkey in done:
+                            continue
+                        try:
+                            rec = run_probe(arch, shape, n_units)
+                        except Exception as e:
+                            rec = {"arch": arch, "shape": shape,
+                                   "mesh": f"probe{n_units}",
+                                   "status": "error", "error": repr(e)}
+                            n_fail += 1
+                        if rec is None:
+                            continue
+                        rec["mesh"] = f"probe{n_units}"
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                        print(f"[dryrun] {pkey} -> {rec.get('status')}",
+                              flush=True)
+    print(f"[dryrun] complete, {n_fail} failures", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

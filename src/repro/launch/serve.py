@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + decode with KV/state caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+        --smoke --batch 4 --gen 32
+
+Runs a continuous-batching-style loop on whatever fleet is available: all
+requests prefill token-synchronously, then decode in lock-step (recurrent
+archs carry O(1) state; attention archs carry ring/full KV caches).  On a
+TPU fleet the same code runs under the production mesh with the decode
+sharding profile (weights TP-sharded, KV sequence-sharded — see
+sharding/rules.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.is_encoder_decoder:
+        raise SystemExit("enc-dec serving needs audio frames; use the "
+                         "decoder-only archs for this driver")
+    params, _ = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+
+    cache = lm.make_decode_cache(params, cfg, args.batch,
+                                 args.prompt_len + args.gen)
+    step = jax.jit(lambda p, c, t: lm.decode_step(p, cfg, c, t))
+
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, jnp.asarray(prompts[:, t:t + 1]))
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = []
+    t0 = time.time()
+    for _ in range(args.gen):
+        out.append(np.asarray(cur)[:, 0])
+        logits, cache = step(params, cache, cur)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None].astype(
+                jnp.int32)
+        else:
+            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    toks = np.stack(out, 1)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prefill={args.prompt_len}tok in {t_prefill:.2f}s  "
+          f"decode={args.gen}tok in {t_decode:.2f}s "
+          f"({args.batch * args.gen / max(t_decode, 1e-9):.1f} tok/s)")
+    for i in range(min(args.batch, 4)):
+        print(f"  req{i}: {toks[i, :12].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+if __name__ == "__main__":
+    main()

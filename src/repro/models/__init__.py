@@ -1,0 +1,4 @@
+"""Model stack: blocks, LM assembly, attention."""
+from . import attention, blocks, lm
+
+__all__ = ["attention", "blocks", "lm"]

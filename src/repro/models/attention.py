@@ -1,0 +1,310 @@
+"""Attention for the LM stack: memory-efficient jnp flash (custom VJP), dense
+reference, decode-with-cache, and RoPE.
+
+``jnp_flash`` is the compile-path attention used by the dry-run/training step:
+online-softmax over KV chunks with a flash-style manual backward (recompute per
+chunk; nothing O(S^2) is ever materialized or saved).  The Pallas kernel
+(`repro.kernels.flash_attention`) is the TPU hot-spot twin validated against
+the same oracle; the jnp version is what `.lower()` sees so HLO cost analysis
+reflects the blocked schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Cost-probe switch: the dry-run's unrolled probes set this so inner KV-chunk
+# scans unroll (XLA cost_analysis counts while bodies once; unrolling makes
+# HLO flop counts exact).  Never enabled in production paths.
+UNROLL_SCANS = False
+
+
+# --------------------------------------------------------------------------- #
+# RoPE                                                                         #
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if ang.ndim == 2:  # (S, D/2) -> broadcast over B, H
+        ang = ang[None, None]
+    else:  # (B, S, D/2)
+        ang = ang[:, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Dense reference (small shapes, decode)                                       #
+# --------------------------------------------------------------------------- #
+def _mask(sq, skv, causal, window, q_offset, kv_len=None):
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    if kv_len is not None:
+        m &= k_pos < kv_len
+    return m
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    kv_len=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).  f32 softmax; GQA by reshape.
+
+    kv_len may be a traced scalar (decode: valid cache prefix)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    qf = q.reshape(b, hkv, group, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    m = _mask(sq, skv, causal, window, q_offset, kv_len)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows emit zeros (matches the flash/l==0 convention)
+    any_valid = m.any(axis=-1)
+    p = jnp.where(any_valid[None, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(b, hq, sq, d)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=None,
+                     ring=False):
+    """One-token decode: q (B, Hq, 1, D) against a (B, Hkv, S_max, D) cache.
+
+    cur_len: traced scalar — number of valid cache entries (new token already
+    written at cur_len-1).  ring=True: the cache is a circular window buffer
+    (size == window); every slot written so far is in-window by construction
+    (positions live in the RoPE'd keys, and softmax is permutation-invariant),
+    so the mask is just "slot has been written".
+    """
+    q_offset = cur_len - 1
+    b, hq, one, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    group = hq // hkv
+    qf = q.reshape(b, hkv, group, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    k_pos = jnp.arange(smax)[None, None, None, :]
+    if ring:
+        m = k_pos < cur_len  # all-true once the ring has wrapped
+    else:
+        m = k_pos < cur_len
+        if window is not None:
+            m &= k_pos > q_offset - window
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, hq, 1, d)
+
+
+# --------------------------------------------------------------------------- #
+# jnp flash attention with custom VJP (compile-path workhorse)                 #
+# --------------------------------------------------------------------------- #
+def _flash_fwd_scan(q, k, v, causal, window, q_offset, block_k, kv_len=None):
+    """Returns (out, lse).  q: (B,Hkv,G,Sq,D); k/v: (B,Hkv,Skv,D).
+    kv_len: number of REAL keys (padded tail masked out)."""
+    b, hkv, g, sq, d = q.shape
+    skv = k.shape[2]
+    nk = skv // block_k
+    scale = d ** -0.5
+    kc = k.reshape(b, hkv, nk, block_k, d)
+    vc = v.reshape(b, hkv, nk, block_k, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, kv):
+        m_prev, l_prev, acc = carry
+        ki, vi, ik = kv
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q, ki,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = ik * block_k + jnp.arange(block_k)
+        msk = jnp.ones((sq, block_k), bool)
+        if causal:
+            msk &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            msk &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            msk &= (k_pos < kv_len)[None, :]
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # explicit re-mask: for fully-masked rows exp(s - m) would be 1
+        p = jnp.where(msk[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)),
+        unroll=nk if UNROLL_SCANS else 1)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / safe_l[..., None]
+    lse = m + jnp.log(safe_l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def jnp_flash(q, k, v, causal=True, window=None, q_offset=0, block_k=512,
+              kv_len=None):
+    """Flash attention in pure jnp.  q: (B,Hq,Sq,D); k/v: (B,Hkv,Skv,D).
+    Skv must be a multiple of block_k (model code pads/chooses blocks);
+    kv_len masks the padded tail."""
+    out, _ = _jf_fwd(q, k, v, causal, window, q_offset, block_k, kv_len)
+    return out
+
+
+def _jf_fwd(q, k, v, causal, window, q_offset, block_k, kv_len=None):
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    out, lse = _flash_fwd_scan(qg, k, v, causal, window, q_offset, block_k,
+                               kv_len)
+    out = out.astype(q.dtype).reshape(b, hq, sq, d)
+    return out, (q, k, v, out, lse)
+
+
+def _jf_bwd(causal, window, q_offset, block_k, kv_len, res, dout):
+    q, k, v, out, lse = res
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    skv = k.shape[2]
+    nk = skv // block_k
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    og = out.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    dog = dout.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    delta = jnp.sum(og * dog, axis=-1)  # (b,hkv,g,sq)
+    kc = jnp.moveaxis(k.reshape(b, hkv, nk, block_k, d), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, hkv, nk, block_k, d), 2, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(dq_acc, kvi):
+        ki, vi, ik = kvi
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = ik * block_k + jnp.arange(block_k)
+        msk = jnp.ones((sq, block_k), bool)
+        if causal:
+            msk &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            msk &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            msk &= (k_pos < kv_len)[None, :]
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        p = jnp.where(msk[None, None, None], jnp.exp(s - lse[..., None]), 0.0)  # (b,hkv,g,sq,bk)
+        dv_i = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vf)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf)
+        dk_i = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, jnp.arange(nk)),
+                                    unroll=nk if UNROLL_SCANS else 1)
+    dq = dq.reshape(b, hq, sq, d).astype(q.dtype)
+    dk = jnp.moveaxis(dk_c, 0, 2).reshape(b, hkv, skv, d).astype(k.dtype)
+    dv = jnp.moveaxis(dv_c, 0, 2).reshape(b, hkv, skv, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+jnp_flash.defvjp(_jf_fwd, _jf_bwd)
+
+
+# Beyond-paper perf switch (see EXPERIMENTS.md §Perf): q-chunked execution
+# with STATIC per-chunk KV bounds — upper-triangle blocks (causal) and
+# out-of-window blocks (SWA/local) are never computed, so HLO flops genuinely
+# drop ~2x for causal and ~S/window for banded attention.
+BANDED = True
+BAND_Q_CHUNK = 1024
+
+
+def _banded_attention(q, k, v, causal, window, q_offset, block_k):
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    cq = min(BAND_Q_CHUNK, sq)
+    nq = (sq + cq - 1) // cq
+    outs = []
+    for i in range(nq):
+        q0, q1 = i * cq, min((i + 1) * cq, sq)
+        qi = q[:, :, q0:q1]
+        hi_pos = q_offset + q1  # exclusive upper bound of visible keys
+        lo_pos = 0
+        if window is not None:
+            lo_pos = max(0, q_offset + q0 - window + 1)
+        lo = (lo_pos // block_k) * block_k
+        hi = min(((hi_pos + block_k - 1) // block_k) * block_k, skv) \
+            if causal else skv
+        if hi <= lo:
+            outs.append(jnp.zeros_like(qi))
+            continue
+        ki = k[:, :, lo:hi]
+        vi = v[:, :, lo:hi]
+        # positions shift: keys now start at lo.  lo and hi are block-aligned
+        # (skv % block_k == 0 guard), so no padding/kv_len is ever needed.
+        outs.append(jnp_flash(qi, ki, vi, causal, window,
+                              q_offset + q0 - lo, block_k, None))
+    return jnp.concatenate(outs, axis=2)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0,
+              impl: str = "auto", block_k: int = 512):
+    """Front door.  Chooses dense vs flash; pads Skv to block_k as needed."""
+    skv = k.shape[2]
+    if impl == "auto":
+        impl = "flash" if skv >= 1024 else "dense"
+    if impl == "dense":
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    if BANDED and causal and skv % block_k == 0 and skv > block_k:
+        return _banded_attention(q, k, v, causal, window, q_offset, block_k)
+    kv_len = None
+    if skv % block_k != 0:
+        if causal and q_offset + q.shape[2] <= skv:
+            # padded keys sit beyond every query position -> masked by
+            # causality; no explicit length mask needed.
+            pad = block_k - skv % block_k
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        else:
+            # queries extend past the key range, or non-causal: try the
+            # largest divisor of skv <= block_k; else pad WITH a length mask.
+            div = max((d for d in range(1, block_k + 1) if skv % d == 0),
+                      default=1)
+            if div >= 64:
+                block_k = div
+            else:
+                pad = block_k - skv % block_k
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                kv_len = skv
+    return jnp_flash(q, k, v, causal, window, q_offset, block_k, kv_len)

@@ -1,0 +1,2 @@
+from . import rules
+__all__ = ["rules"]

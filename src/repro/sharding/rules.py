@@ -1,0 +1,235 @@
+"""Per-architecture sharding profiles + jit'd step builders with explicit
+in/out shardings.
+
+Parallelism map (mesh axes (pod, data, model)):
+  DP    — batch over (pod, data); gradient psum handled by XLA from specs.
+  FSDP  — >=10B-param archs additionally shard weights over `data` (ZeRO-3;
+          XLA inserts per-layer all-gathers inside the layer scan).
+  TP    — heads / d_ff / vocab / recurrent-state over `model`; falls back to
+          head_dim (contraction) sharding when head counts don't divide.
+  EP    — MoE experts over `model` via the shard_map layer (one psum/layer).
+  SP    — sequence sharding of the residual stream over `model` for large-d
+          archs (what keeps 80-layer scan carries from exhausting HBM), and
+          of decode KV caches over `model` (flash-decoding style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeCell
+from repro.models import lm
+from repro.models.blocks import ShardProfile
+from repro.train import optimizer as opt_mod
+
+FSDP_THRESHOLD = 10e9  # params
+
+# Scan strategy for recurrent mixers inside step functions; the dry-run's
+# cost probes switch this to "associative" (no while loops -> exact HLO cost).
+SCAN_METHOD = "chunked"
+
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    """Everything the launcher needs to lower one (arch x shape x mesh) cell."""
+    cfg: ArchConfig
+    cell: ShapeCell
+    prof: ShardProfile
+    batch_axes: tuple          # dp axes actually used for this batch size
+    seq_shard: bool            # SP of the residual stream
+    optimizer: str             # adamw | adafactor
+
+
+def make_profile(mesh, cfg: ArchConfig, *, seq_shard=None) -> ShardProfile:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = "model" if "model" in axes else None
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    fsdp = "data" if cfg.param_count() > FSDP_THRESHOLD and "data" in axes \
+        else None
+    return ShardProfile(mesh=mesh, tp=tp, fsdp=fsdp, dp=dp,
+                        tp_size=axes.get("model", 1))
+
+
+def plan_cell(mesh, cfg: ArchConfig, cell: ShapeCell) -> CellPlan:
+    prof = make_profile(mesh, cfg)
+    # Batch axes: largest dp prefix whose product divides the global batch.
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = []
+    prod = 1
+    for a in prof.dp:
+        if cell.global_batch % (prod * sizes[a]) == 0:
+            dp.append(a)
+            prod *= sizes[a]
+    dp = tuple(dp)
+    # SP of the residual stream for big-d archs on full-sequence passes
+    # (keeps 80-layer scan-carry activations from exhausting HBM).
+    seq_shard = (cell.kind in ("train", "prefill") and cfg.d_model >= 4096
+                 and cell.seq_len % prof.tp_size == 0)
+    # Perf iteration (§Perf, qwen2 decode): FSDP all-gathers every layer's
+    # weights to produce ONE token — for decode, weights stay TP-sharded and
+    # data-replicated instead (the per-device weight residency fits once the
+    # KV cache is sequence-sharded).
+    fsdp = None if cell.kind == "decode" else prof.fsdp
+    prof = dataclasses.replace(prof, dp=dp, fsdp=fsdp,
+                               seq="model" if seq_shard else None)
+    optimizer = "adafactor" if cfg.param_count() > 100e9 else "adamw"
+    return CellPlan(cfg, cell, prof, dp, seq_shard, optimizer)
+
+
+# --------------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)                     #
+# --------------------------------------------------------------------------- #
+def batch_structs(cfg: ArchConfig, cell: ShapeCell):
+    b, s = cell.global_batch, cell.seq_len
+    sd = jax.ShapeDtypeStruct
+    act_dtype = jnp.dtype(cfg.dtype)
+    batch = {}
+    if cell.kind == "decode":
+        batch["tokens"] = sd((b, 1), jnp.int32)
+        return batch
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = sd((b, s, cfg.d_model), act_dtype)
+        if cell.kind == "train":
+            batch["labels"] = sd((b, s), jnp.int32)
+    else:
+        batch["tokens"] = sd((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = sd((b, cfg.encoder_seq, cfg.d_model), act_dtype)
+    return batch
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, plan: CellPlan):
+    dp = plan.batch_axes or None
+    specs = {}
+    structs = batch_structs(cfg, cell)
+    for k, v in structs.items():
+        specs[k] = P(dp, *([None] * (len(v.shape) - 1)))
+    return specs
+
+
+def params_abstract(cfg: ArchConfig, prof: ShardProfile):
+    """(param ShapeDtypeStructs, param PartitionSpecs) with zero allocation."""
+    holder = {}
+
+    def f(key):
+        p, s = lm.init_params(key, cfg, prof)
+        holder["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, holder["specs"]
+
+
+def opt_state_specs(opt, param_specs):
+    if isinstance(opt, opt_mod.AdamW):
+        return {"m": param_specs, "v": param_specs, "step": P()}
+    # Adafactor: vr drops the last dim, vc drops the second-to-last.
+    def one(spec):
+        spec_t = tuple(spec)
+        if len(spec_t) >= 2:
+            return {"vr": P(*spec_t[:-1]), "vc": P(*(spec_t[:-2] + spec_t[-1:]))}
+        return {"v": P(*spec_t)}
+
+    f = jax.tree.map(one, param_specs, is_leaf=lambda x: isinstance(x, P))
+    return {"f": f, "step": P()}
+
+
+def _sharding_tree(mesh, specs):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------- #
+# Step builders                                                                #
+# --------------------------------------------------------------------------- #
+def make_train_step(plan: CellPlan, opt):
+    cfg, prof = plan.cfg, plan.prof
+    sp_prof = dataclasses.replace(prof)  # (seq-sharding handled via constraint)
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch, prof, remat=True,
+                              scan_method=SCAN_METHOD,
+                              attn_impl="flash" if plan.cell.seq_len >= 1024
+                              else "dense")
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_mod.apply_updates(params, updates)
+        return params, opt_state, l, metrics
+
+    return train_step
+
+
+def make_prefill_step(plan: CellPlan):
+    cfg, prof = plan.cfg, plan.prof
+
+    def prefill_step(params, batch):
+        logits, caches, _ = lm.forward(
+            params, cfg, batch, prof, mode="prefill", scan_method=SCAN_METHOD,
+            attn_impl="flash")
+        return logits[:, -1], caches
+
+    return prefill_step
+
+
+def make_decode_step(plan: CellPlan):
+    cfg, prof = plan.cfg, plan.prof
+
+    def decode_step(params, cache, batch):
+        logits, cache = lm.decode_step(params, cfg, cache, batch["tokens"],
+                                       prof)
+        return logits, cache
+
+    return decode_step
+
+
+def lower_cell(mesh, cfg: ArchConfig, cell: ShapeCell, *, donate=True):
+    """Build + jit + lower one cell.  Returns (lowered, meta dict)."""
+    plan = plan_cell(mesh, cfg, cell)
+    prof = plan.prof
+    p_shapes, p_specs = params_abstract(cfg, prof)
+    p_sh = _sharding_tree(mesh, p_specs)
+    b_specs = batch_specs(cfg, cell, plan)
+    b_sh = _sharding_tree(mesh, b_specs)
+    b_structs = batch_structs(cfg, cell)
+    meta = {"arch": cfg.name, "shape": cell.name, "kind": cell.kind,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "optimizer": plan.optimizer, "fsdp": prof.fsdp,
+            "dp_axes": list(plan.batch_axes), "seq_shard": plan.seq_shard}
+
+    if cell.kind == "train":
+        opt = opt_mod.make_optimizer(plan.optimizer)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_specs = opt_state_specs(opt, p_specs)
+        o_sh = _sharding_tree(mesh, o_specs)
+        step = make_train_step(plan, opt)
+        jitted = jax.jit(
+            step, in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None, None),
+            donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(p_shapes, o_shapes, b_structs)
+    elif cell.kind == "prefill":
+        step = make_prefill_step(plan)
+        cache_specs = lm.cache_specs(cfg, prof)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=None)
+        lowered = jitted.lower(p_shapes, b_structs)
+    else:  # decode
+        step = make_decode_step(plan)
+        c_shapes = jax.eval_shape(
+            lambda: lm.make_decode_cache(None, cfg, cell.global_batch,
+                                         cell.seq_len, prof))
+        c_specs = lm.cache_specs(cfg, prof)
+        c_sh = _sharding_tree(mesh, c_specs)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(None, c_sh),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(p_shapes, c_shapes, b_structs)
+    return lowered, meta

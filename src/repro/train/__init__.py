@@ -1,0 +1,2 @@
+from . import optimizer
+__all__ = ["optimizer"]

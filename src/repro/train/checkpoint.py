@@ -1,0 +1,140 @@
+"""Sharded checkpointing: npz shards + JSON manifest, atomic, async, elastic.
+
+Layout:
+    <dir>/step_00000100/
+        manifest.json      — tree structure, shapes, dtypes, step
+        shard_<proc>.npz   — this process's addressable array data
+        _COMPLETE          — written last (atomicity marker)
+
+Restore is device-count-agnostic (arrays are saved whole per process on this
+single-process container; on a multi-host fleet each process saves its local
+shards and restore re-assembles via device_put with the TARGET sharding) —
+this is what makes elastic re-mesh (resume on a different fleet size) work.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _to_native(arr):
+    """npz can't persist ml_dtypes (bf16 etc.); view them as unsigned ints of
+    the same width and record the true dtype in the manifest."""
+    if arr.dtype.kind in "biufc":
+        return arr, str(arr.dtype)
+    true = str(arr.dtype)
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}")), true
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         async_: bool = False) -> str:
+    """Write a checkpoint; returns its path.  async_=True returns immediately
+    (daemon thread finishes the write; join via wait_pending())."""
+    flat, _ = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+
+    def _write():
+        path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        stored = {}
+        manifest = {"step": step, "arrays": {}}
+        for k, v in arrays.items():
+            sv, true_dtype = _to_native(v)
+            stored[k] = sv
+            manifest["arrays"][k] = {"shape": list(v.shape),
+                                     "dtype": true_dtype}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **stored)
+        with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+        return os.path.join(ckpt_dir, f"step_{step:08d}")
+    _write()
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+_PENDING: list = []
+
+
+def wait_pending():
+    for t in list(_PENDING):
+        t.join()
+        _PENDING.remove(t)
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)$", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "_COMPLETE")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for the TARGET mesh (elastic re-mesh)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = _flatten(like)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh, _ = _flatten(shardings)
+    leaves = []
+    for key, ref in flat_like.items():
+        arr = data[key]
+        true_dtype = manifest["arrays"][key]["dtype"]
+        if str(arr.dtype) != true_dtype:  # ml_dtypes stored as uint view
+            arr = arr.view(jax.numpy.dtype(true_dtype))
+        assert tuple(arr.shape) == tuple(ref.shape), (key, arr.shape, ref.shape)
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[key]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

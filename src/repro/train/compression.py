@@ -1,0 +1,47 @@
+"""Int8 gradient compression with error feedback.
+
+At fleet scale the DP gradient all-reduce is the largest single collective;
+quantizing the payload to int8 (per-tensor absmax scaling) cuts it 2-4x.
+Error feedback (Seide et al. 2014; Karimireddy et al. 2019) accumulates the
+quantization residual locally and re-injects it next step, preserving
+convergence.
+
+``compress_decompress_ef`` models the full round trip (what the wire would
+carry) so numerics tests on one host are exactly the fleet semantics; in the
+sharded trainer the int8 payload is what crosses the `data` axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ef(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(x):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress_ef(grads, ef_state):
+    """Returns (decompressed grads, new ef_state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize(corrected)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree.map(one, grads, ef_state)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree.map(lambda t: t[1], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return out, ef

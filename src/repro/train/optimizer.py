@@ -1,0 +1,156 @@
+"""Pure-JAX optimizers: AdamW (fp32 moments) and Adafactor (factored second
+moments — the only thing that makes 1T-param training states fit a 512-chip
+v5e fleet), plus global-norm clipping and LR schedules.
+
+API mirrors optax minimally: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; ``apply_updates``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------------- #
+# Schedules                                                                    #
+# --------------------------------------------------------------------------- #
+def cosine_schedule(base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+# --------------------------------------------------------------------------- #
+# AdamW                                                                        #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                    # float or schedule fn
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moments, no first moment)                         #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Any = 1e-3
+    decay: float = 0.8       # t^-decay second-moment running rate
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, p):
+        return p.ndim >= 2
+
+    def init(self, params):
+        def one(p):
+            if self._factored(p):
+                # factor the trailing two dims; leading dims (layer stacks,
+                # experts) ride along.
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def one(g, f, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + self.eps
+            if self._factored(p):
+                vr = beta * f["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * g2.mean(axis=-2)
+                mean_r = jnp.maximum(vr.mean(axis=-1, keepdims=True), self.eps)
+                u = gf / (jnp.sqrt(vr / mean_r)[..., :, None]
+                          * jnp.sqrt(vc)[..., None, :])
+                newf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(v)
+                newf = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), newf
+
+        pairs = jax.tree.map(one, grads, state["f"], params,
+                             is_leaf=lambda x: isinstance(x, jnp.ndarray) or
+                             (isinstance(x, dict) and ("v" in x or "vr" in x)))
+        # tree of (update, newf) tuples at param leaves -> split
+        updates = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        newfs = jax.tree.map(lambda t: t[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"f": newfs, "step": step}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def make_optimizer(name: str, lr=3e-4, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr, **kw)
+    raise ValueError(name)

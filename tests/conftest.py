@@ -1,0 +1,8 @@
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches must
+# see 1 device; only launch/dryrun.py forces 512 placeholder devices.
+import jax
+
+# The reservoir/ridge math validates the paper's FP-precision claims (ridge
+# alphas down to 1e-11); x64 is required for that.  LM-stack tests pass explicit
+# dtypes everywhere, so flipping the default is safe for them.
+jax.config.update("jax_enable_x64", True)

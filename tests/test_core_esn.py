@@ -1,0 +1,183 @@
+"""The paper's central equivalences (Theorems 1, 5; Eqs. 14/19/29).
+
+* Diagonalized model reproduces standard linear-ESN states exactly (via Q basis).
+* EWT: standard-trained readout transplanted into the eigenbasis gives identical
+  predictions.
+* EET: readout trained directly in the eigenbasis (generalized ridge, metric
+  blockdiag(I, Q^T Q)) equals standard ridge + EWT.
+* DPG produces a real, stable reservoir with the requested spectral radius.
+* Theorem 5: W_in can be applied after the recurrence.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ridge as ridge_mod
+from repro.core.basis import EigenBasis
+from repro.core.esn import ESNConfig, LinearESN
+from repro.core.spectral import generate_reservoir_matrix
+
+
+def _mso(t, k=3):
+    alphas = [0.2, 0.331, 0.42, 0.51, 0.63]
+    ts = np.arange(t)
+    return sum(np.sin(a * ts) for a in alphas[:k])
+
+
+def _xy(t=400, k=3):
+    u = _mso(t + 1, k)
+    return u[:-1, None], u[1:, None]
+
+
+CFG = ESNConfig(n=60, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-8, seed=42)
+
+
+def test_diag_states_match_standard():
+    u, y = _xy()
+    std = LinearESN.standard(CFG)
+    dia = LinearESN.diagonalized(CFG)
+    r_std = np.asarray(std.run(u))
+    r_q = np.asarray(dia.run(u))
+    # Map Q states back to the original basis.
+    r_back = np.asarray(dia.basis.state_from_q(r_q))
+    np.testing.assert_allclose(r_back, r_std, rtol=1e-7, atol=1e-8)
+
+
+def test_ewt_predictions_match_standard():
+    u, y = _xy()
+    std = LinearESN.standard(CFG).fit(u, y, washout=50)
+    dia = LinearESN.diagonalized(CFG).ewt_from(std)
+    np.testing.assert_allclose(np.asarray(dia.predict(u)),
+                               np.asarray(std.predict(u)), rtol=1e-6, atol=1e-8)
+
+
+def test_eet_equals_standard_ridge_plus_ewt():
+    u, y = _xy()
+    # Weight-space identity (Eq. 14): checked at a well-conditioned alpha — the
+    # identity is exact in math; FP error scales with cond(X^T X)/alpha.
+    std = LinearESN.standard(CFG).fit(u, y, washout=50, alpha=1e-4)
+    ewt = LinearESN.diagonalized(CFG).ewt_from(std)
+    eet = LinearESN.diagonalized(CFG).fit(u, y, washout=50, alpha=1e-4)
+    np.testing.assert_allclose(np.asarray(eet.w_out), np.asarray(ewt.w_out),
+                               rtol=1e-4, atol=1e-7)
+    # Prediction equivalence at the aggressive paper-style alpha (1e-8): the
+    # readout may differ in near-null directions but predictions must agree.
+    std2 = LinearESN.standard(CFG).fit(u, y, washout=50)
+    eet2 = LinearESN.diagonalized(CFG).fit(u, y, washout=50)
+    p_std = np.asarray(std2.predict(u))
+    p_eet = np.asarray(eet2.predict(u))
+    scale = np.abs(p_std).max()
+    np.testing.assert_allclose(p_eet / scale, p_std / scale, atol=2e-5)
+
+
+def test_eet_learns_mso():
+    """End-to-end sanity: a diagonal linear ESN actually solves MSO3."""
+    u, y = _xy(t=700, k=3)
+    m = LinearESN.diagonalized(
+        ESNConfig(n=100, spectral_radius=1.0, leak=1.0, input_scaling=0.1,
+                  ridge_alpha=1e-9, seed=7))
+    m.fit(u[:400], y[:400], washout=100)
+    pred = np.asarray(m.predict(u))[400:]
+    rmse = float(np.sqrt(np.mean((pred - np.asarray(y[400:])) ** 2)))
+    assert rmse < 1e-3, rmse
+
+
+@pytest.mark.parametrize("dist", ["uniform", "golden", "noisy_golden", "sim"])
+def test_dpg_reconstruction_real_and_stable(dist):
+    m = LinearESN.dpg(ESNConfig(n=50, spectral_radius=0.9, seed=3), dist)
+    w = m.basis.reconstruct_w()
+    # W = P diag(L) P^-1 must be real (conjugate-pair structure).
+    wc = (m.basis.p * m.basis.lam_full()[None, :]) @ m.basis.p_inv
+    assert np.max(np.abs(wc.imag)) < 1e-8
+    sr = np.max(np.abs(np.linalg.eigvals(w)))
+    expect = m.basis.spectrum.spectral_radius()
+    np.testing.assert_allclose(sr, expect, rtol=1e-6)
+    if dist != "noisy_golden":  # noise may push slightly past sr by design
+        assert sr <= 0.9 + 1e-6
+
+
+@pytest.mark.parametrize("dist", ["uniform", "noisy_golden"])
+def test_dpg_solves_mso(dist):
+    u, y = _xy(t=700, k=2)
+    # noisy_golden adds noise AFTER radius scaling (paper Alg. 3) so sr=1.0 can
+    # leave the unit disk and diverge over long horizons; use a mild sigma here
+    # (the MSO benchmark's grid search is where sigma=0.2 is exercised).
+    m = LinearESN.dpg(
+        ESNConfig(n=100, spectral_radius=0.95, input_scaling=0.1,
+                  ridge_alpha=1e-9, seed=11), dist, sigma=0.05)
+    m.fit(u[:400], y[:400], washout=100)
+    pred = np.asarray(m.predict(u))[400:]
+    rmse = float(np.sqrt(np.mean((pred - np.asarray(y[400:])) ** 2)))
+    assert rmse < 1e-3, rmse
+
+
+def test_theorem5_win_after_recurrence():
+    """r(t) = 1^T (W_in (.) R(t)) — W_in applied after the temporal update."""
+    u, _ = _xy(t=200, k=2)
+    dia = LinearESN.diagonalized(
+        ESNConfig(n=40, d_in=1, spectral_radius=0.9, leak=0.7, input_scaling=0.3,
+                  seed=5))
+    direct = np.asarray(dia.run(u))
+    r_states = dia.collect_r_states(u)
+    recovered = np.asarray(dia.states_from_r(r_states))
+    np.testing.assert_allclose(recovered, direct, rtol=1e-7, atol=1e-9)
+
+
+def test_feedback_equivalence():
+    """[W_fb]_Q transform preserved under diagonalization (teacher-forced)."""
+    cfg = ESNConfig(n=40, spectral_radius=0.8, leak=0.9, use_feedback=True,
+                    feedback_scaling=0.1, seed=9)
+    u, y = _xy(t=300, k=2)
+    std = LinearESN.standard(cfg)
+    dia = LinearESN.diagonalized(cfg)
+    r_std = np.asarray(std.run(u, y_teacher=y))
+    r_q = np.asarray(dia.run(u, y_teacher=y))
+    np.testing.assert_allclose(np.asarray(dia.basis.state_from_q(r_q)), r_std,
+                               rtol=1e-7, atol=1e-8)
+    std.fit(u, y, washout=50)
+    dia.fit(u, y, washout=50)
+    p_std = np.asarray(std.predict(u, y_teacher=y))
+    p_dia = np.asarray(dia.predict(u, y_teacher=y))
+    scale = np.abs(p_std).max()
+    np.testing.assert_allclose(p_dia / scale, p_std / scale, atol=2e-5)
+
+
+def test_leak_matches_explicit_matrix():
+    """Leak reparametrization (Eq. 4): diag-mode leak == explicit lr W + (1-lr) I."""
+    cfg = ESNConfig(n=30, spectral_radius=0.9, leak=0.35, seed=13)
+    u, _ = _xy(t=150, k=2)
+    rng = np.random.default_rng(cfg.seed)
+    w = generate_reservoir_matrix(cfg.n, cfg.spectral_radius, rng, 1.0)
+    dia = LinearESN.diagonalized(cfg)
+    std = LinearESN.standard(cfg)
+    np.testing.assert_allclose(np.asarray(std.w),
+                               cfg.leak * w + (1 - cfg.leak) * np.eye(cfg.n),
+                               rtol=1e-12)
+    r_std = np.asarray(std.run(u))
+    r_back = np.asarray(dia.basis.state_from_q(np.asarray(dia.run(u))))
+    np.testing.assert_allclose(r_back, r_std, rtol=1e-7, atol=1e-8)
+
+
+def test_generate_closed_loop_runs():
+    u, y = _xy(t=500, k=1)
+    m = LinearESN.diagonalized(
+        ESNConfig(n=80, spectral_radius=1.0, input_scaling=0.5, ridge_alpha=1e-10,
+                  seed=21))
+    m.fit(u[:300], y[:300], washout=100)
+    gen = np.asarray(m.generate(100, u[:300], y[:300]))
+    want = np.asarray(y[300:400])
+    rmse = float(np.sqrt(np.mean((gen - want) ** 2)))
+    assert np.isfinite(gen).all()
+    assert rmse < 0.5, rmse  # closed-loop MSO1 stays on the sine
+
+
+def test_parallel_state_collection_matches_sequential():
+    """Appendix B: associative/chunked state collection == sequential."""
+    u, _ = _xy(t=256, k=3)
+    dia = LinearESN.diagonalized(CFG)
+    seq = np.asarray(dia.run(u, method="sequential"))
+    ass = np.asarray(dia.run(u, method="associative"))
+    chk = np.asarray(dia.run(u, method="chunked", chunk=32))
+    np.testing.assert_allclose(ass, seq, rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(chk, seq, rtol=1e-8, atol=1e-10)

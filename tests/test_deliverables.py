@@ -1,0 +1,49 @@
+"""Deliverable integrity: the dry-run artifact must cover every assigned
+(arch x shape x mesh) cell with ok/documented-skip status."""
+import json
+import os
+
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, shape_cells
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun.jsonl")
+
+
+@pytest.mark.skipif(not os.path.exists(ART),
+                    reason="run repro.launch.dryrun first")
+def test_dryrun_covers_all_cells():
+    recs = {}
+    with open(ART) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") in ("single", "multi"):
+                recs[(r["arch"], r["shape"], r["mesh"])] = r["status"]
+    missing, failed = [], []
+    for arch in ASSIGNED:
+        cfg = REGISTRY[arch]
+        live = {c.name for c in shape_cells(cfg)}
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            for mesh in ("single", "multi"):
+                st = recs.get((arch, shape, mesh))
+                if st is None:
+                    missing.append((arch, shape, mesh))
+                elif shape in live and st != "ok":
+                    failed.append((arch, shape, mesh, st))
+                elif shape not in live and st not in ("skipped", "ok"):
+                    failed.append((arch, shape, mesh, st))
+    assert not missing, f"cells never dry-run: {missing}"
+    assert not failed, f"cells not ok: {failed}"
+
+
+@pytest.mark.skipif(not os.path.exists(ART),
+                    reason="run repro.launch.dryrun first")
+def test_dryrun_records_roofline_inputs():
+    with open(ART) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "ok" and r.get("mesh") == "single":
+                assert r["cost"]["flops"] > 0, r["arch"]
+                assert r["memory"]["peak_bytes"] > 0, r["arch"]
+                assert "total_bytes" in r["collectives"], r["arch"]

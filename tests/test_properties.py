@@ -1,0 +1,173 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ridge as ridge_mod
+from repro.core import scan as scan_mod
+from repro.core import spectral
+from repro.core.basis import EigenBasis
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------- #
+# Spectral generation invariants (Algorithms 1-3)                              #
+# --------------------------------------------------------------------------- #
+@SET
+@given(n=st.integers(4, 200), sr=st.floats(0.1, 1.5), seed=st.integers(0, 99),
+       dist=st.sampled_from(["uniform", "golden"]))
+def test_spectrum_radius_and_parity(n, sr, seed, dist):
+    rng = np.random.default_rng(seed)
+    spec = (spectral.uniform_eigenvalues(n, sr, rng) if dist == "uniform"
+            else spectral.golden_eigenvalues(n, sr, rng))
+    assert spec.n == n
+    assert (n - spec.n_real) % 2 == 0
+    assert spec.spectral_radius() <= sr + 1e-9
+    if dist == "golden" and spec.n_cpx + spec.n_real > 0:
+        # golden rescales so the radius is EXACTLY sr
+        np.testing.assert_allclose(spec.spectral_radius(), sr, rtol=1e-9)
+    # complex representatives live in the upper half plane
+    assert (spec.lam_cpx.imag >= 0).all()
+
+
+@SET
+@given(n=st.integers(4, 60), seed=st.integers(0, 99),
+       dist=st.sampled_from(["uniform", "golden", "noisy_golden", "sim"]))
+def test_dpg_reconstructs_real_matrix(n, seed, dist):
+    spec, p = spectral.dpg(n, 0.9, seed, dist)
+    eb = EigenBasis.from_spectral(spec, p)
+    wc = (eb.p * eb.lam_full()[None, :]) @ eb.p_inv
+    assert np.max(np.abs(wc.imag)) < 1e-7 * max(1.0, np.max(np.abs(wc.real)))
+
+
+@SET
+@given(n=st.integers(4, 40), seed=st.integers(0, 99))
+def test_eigenbasis_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    w = spectral.generate_reservoir_matrix(n, 0.9, rng)
+    eb = EigenBasis.from_matrix(w)
+    np.testing.assert_allclose(eb.reconstruct_w(), w, rtol=1e-6, atol=1e-8)
+    # Q-basis transform roundtrip
+    r = rng.normal(size=(3, n))
+    rq = eb.state_to_q(r)
+    np.testing.assert_allclose(eb.state_from_q(rq), r, rtol=1e-6, atol=1e-8)
+
+
+# --------------------------------------------------------------------------- #
+# Scan equivalences (Appendix B)                                               #
+# --------------------------------------------------------------------------- #
+@SET
+@given(t=st.integers(1, 80), n=st.integers(1, 24), b=st.integers(1, 3),
+       chunk=st.integers(1, 32), seed=st.integers(0, 99),
+       complex_=st.booleans())
+def test_scan_methods_agree(t, n, b, chunk, seed, complex_):
+    rng = np.random.default_rng(seed)
+    if complex_:
+        a = 0.9 * np.exp(1j * rng.uniform(0, np.pi, n))
+        x = rng.normal(size=(b, t, n)) + 1j * rng.normal(size=(b, t, n))
+    else:
+        a = rng.uniform(-0.99, 0.99, size=n)
+        x = rng.normal(size=(b, t, n))
+    seq = scan_mod.diag_scan(jnp.asarray(a), jnp.asarray(x),
+                             method="sequential")
+    ass = scan_mod.diag_scan(jnp.asarray(a), jnp.asarray(x),
+                             method="associative")
+    chk = scan_mod.diag_scan(jnp.asarray(a), jnp.asarray(x), method="chunked",
+                             chunk=chunk)
+    np.testing.assert_allclose(np.asarray(ass), np.asarray(seq), rtol=1e-8,
+                               atol=1e-8)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(seq), rtol=1e-8,
+                               atol=1e-8)
+
+
+@SET
+@given(nr=st.integers(0, 8), ni=st.integers(0, 8), seed=st.integers(0, 99))
+def test_realified_multiply_is_complex_multiply(nr, ni, seed):
+    if nr + ni == 0:
+        return
+    rng = np.random.default_rng(seed)
+    lam_r = rng.uniform(-1, 1, nr)
+    lam_c = rng.normal(size=ni) + 1j * rng.normal(size=ni)
+    lam_q = scan_mod.pack_lambda_q(jnp.asarray(lam_r), jnp.asarray(lam_c))
+    h_r = rng.normal(size=nr)
+    h_c = rng.normal(size=ni) + 1j * rng.normal(size=ni)
+    h_q = np.concatenate([h_r, np.stack([h_c.real, h_c.imag], -1).ravel()])
+    got = np.asarray(scan_mod.realified_multiply(jnp.asarray(h_q), lam_q, nr))
+    want_c = h_c * lam_c
+    want = np.concatenate(
+        [h_r * lam_r, np.stack([want_c.real, want_c.imag], -1).ravel()])
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# Ridge solver invariants                                                      #
+# --------------------------------------------------------------------------- #
+@SET
+@given(n=st.integers(2, 20), t=st.integers(25, 60), d=st.integers(1, 3),
+       seed=st.integers(0, 99))
+def test_multi_alpha_matches_direct(n, t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, n))
+    y = rng.normal(size=(t, d))
+    g, c = ridge_mod.gram(jnp.asarray(x), jnp.asarray(y))
+    alphas = [1e-6, 1e-2, 1.0]
+    multi = ridge_mod.ridge_solve_multi(g, c, alphas)
+    for i, a in enumerate(alphas):
+        direct = ridge_mod.ridge_solve(g, c, a)
+        np.testing.assert_allclose(np.asarray(multi[i]), np.asarray(direct),
+                                   rtol=1e-6, atol=1e-8)
+
+
+@SET
+@given(n=st.integers(2, 15), t=st.integers(20, 50), seed=st.integers(0, 99))
+def test_generalized_ridge_with_identity_metric(n, t, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, n))
+    y = rng.normal(size=(t, 1))
+    g, c = ridge_mod.gram(jnp.asarray(x), jnp.asarray(y))
+    m = jnp.eye(n)
+    alphas = [1e-4, 1e-1]
+    gen = ridge_mod.ridge_solve_general_multi(g, c, m, alphas)
+    plain = ridge_mod.ridge_solve_multi(g, c, alphas)
+    np.testing.assert_allclose(np.asarray(gen), np.asarray(plain), rtol=1e-5,
+                               atol=1e-7)
+
+
+@SET
+@given(t=st.integers(10, 100), chunk=st.integers(1, 40),
+       seed=st.integers(0, 99))
+def test_streaming_gram_matches_direct(t, chunk, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, 7)))
+    y = jnp.asarray(rng.normal(size=(t, 2)))
+    g1, c1 = ridge_mod.gram(x, y)
+    g2, c2 = ridge_mod.gram_streaming(x, y, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g1), rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c1), rtol=1e-10)
+
+
+# --------------------------------------------------------------------------- #
+# Attention invariants                                                         #
+# --------------------------------------------------------------------------- #
+@SET
+@given(sq=st.integers(1, 24), skv=st.integers(8, 48), hq=st.sampled_from([1, 2, 4]),
+       hkv=st.sampled_from([1, 2]), seed=st.integers(0, 50),
+       window=st.sampled_from([None, 4, 8]))
+def test_flash_matches_dense(sq, skv, hq, hkv, seed, window):
+    if hq % hkv:
+        return
+    from repro.models import attention as A
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, hq, sq, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, hkv, skv, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, hkv, skv, 8)), jnp.float32)
+    off = max(skv - sq, 0)
+    dense = A.dense_attention(q, k, v, causal=True, window=window,
+                              q_offset=off)
+    flash = A.attention(q, k, v, causal=True, window=window, q_offset=off,
+                        impl="flash", block_k=8)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
