@@ -30,8 +30,8 @@ from repro.core import spectral
 
 from . import _util
 
-ALPHAS_FREQ = [0.2, 0.331, 0.42, 0.51, 0.63, 0.74, 0.85, 0.97, 1.08, 1.19,
-               1.27, 1.32]
+from repro.data.signals import ALPHAS_FREQ, mso_series  # noqa: F401  (re-exported)
+
 SCALES = np.array([0.01, 0.1, 1.0])
 LEAKS = np.array([0.1, 0.3, 0.5, 0.7, 0.9, 1.0])
 SRS = np.array([0.1, 0.3, 0.5, 0.7, 0.9, 1.0])
@@ -39,11 +39,6 @@ RIDGES = 10.0 ** np.arange(-11, 1)
 N = 100
 T_TRAIN, T_VALID, T_TEST, WASHOUT = 400, 300, 300, 100
 METHODS = ["normal", "diagonalized", "uniform", "golden", "noisy_golden", "sim"]
-
-
-def mso_series(k: int, t: int) -> np.ndarray:
-    ts = np.arange(t)
-    return sum(np.sin(a * ts) for a in ALPHAS_FREQ[:k])
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,146 @@
+"""ReservoirEngine serving throughput vs the old lock-step loop.
+
+Measures the two serving phases the engine separates:
+
+* **prefill** — engine: one time-parallel scan per session (backend from
+  ``serve.dispatch``) vs lock-step: a per-token python loop over the jit'd
+  batched step (what ``launch/serve.py`` did before the engine existed).
+* **decode**  — engine: ``decode_closed_loop`` (one ``lax.scan`` over the
+  whole slot arena) vs lock-step: per-token python-loop ``decode_step``.
+
+Plus the full session lifecycle (admit -> prefill -> decode -> evict with
+queued admission) as sessions/sec.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.esn import ESNConfig, LinearESN
+from repro.serve import ReservoirEngine
+
+from repro.data.signals import mso_series
+
+from . import _util
+
+
+def _build(n):
+    cfg = ESNConfig(n=n, spectral_radius=0.95, leak=0.9, input_scaling=0.5,
+                    ridge_alpha=1e-8, seed=0)
+    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    sig = mso_series(3, 2001)
+    model.fit(sig[:-1, None], sig[1:, None], washout=100)
+    return model, sig
+
+
+def main(quick: bool = False):
+    n = 256 if quick else 1024
+    slots = 4 if quick else 8
+    prompt_t = 256 if quick else 1024
+    gen_t = 32 if quick else 128
+    sessions = 2 * slots
+    model, sig = _build(n)
+    rng = np.random.default_rng(0)
+    prompts = [sig[o:o + prompt_t, None] for o in
+               rng.integers(0, len(sig) - prompt_t, size=sessions)]
+
+    res = {"n": n, "slots": slots, "prompt_t": prompt_t, "gen_t": gen_t,
+           "sessions": sessions}
+    rows = []
+
+    # ---------------- prefill: engine scan vs per-token lock-step loop
+    eng = ReservoirEngine(model, max_slots=slots)
+    for s in range(slots):
+        eng.add_session(s)
+
+    def engine_prefill():
+        for s in range(slots):
+            eng.states = eng.states.at[eng.sessions[s].slot].set(0.0)
+            eng.prefill(s, prompts[s])
+        return eng.states
+
+    eng_pre_us = _util.timeit(engine_prefill, reps=3, warmup=1)
+
+    lock = ReservoirEngine(model, max_slots=slots)
+    for s in range(slots):
+        lock.add_session(s)
+
+    def lockstep_prefill():
+        out = None
+        for t in range(prompt_t):
+            out = lock.decode_step(
+                {s: prompts[s][t] for s in range(slots)})
+        return out[0]
+
+    lock_pre_us = _util.timeit(lockstep_prefill, reps=3, warmup=1)
+    pre_tok = slots * prompt_t
+    res["prefill"] = {"engine_us": eng_pre_us, "lockstep_us": lock_pre_us,
+                      "tokens": pre_tok}
+    rows.append(_util.csv_row(
+        "serve.prefill.engine", eng_pre_us,
+        f"tok_s={pre_tok / (eng_pre_us * 1e-6):.0f}"))
+    rows.append(_util.csv_row(
+        "serve.prefill.lockstep", lock_pre_us,
+        f"tok_s={pre_tok / (lock_pre_us * 1e-6):.0f};"
+        f"engine_speedup=x{lock_pre_us / eng_pre_us:.2f}"))
+
+    # ---------------- decode: batched closed loop vs per-token loop
+    def engine_decode():
+        ys = eng.decode_closed_loop(gen_t)
+        return ys[0]
+
+    eng_dec_us = _util.timeit(engine_decode, reps=3, warmup=1)
+
+    def lockstep_decode():
+        out = None
+        for _ in range(gen_t):
+            ys = lock.decode_step(
+                {s: np.asarray(lock.y_prev[lock.sessions[s].slot])
+                 for s in range(slots)})
+            out = ys[0]
+        return out
+
+    lock_dec_us = _util.timeit(lockstep_decode, reps=3, warmup=1)
+    dec_tok = slots * gen_t
+    res["decode"] = {"engine_us": eng_dec_us, "lockstep_us": lock_dec_us,
+                     "tokens": dec_tok}
+    rows.append(_util.csv_row(
+        "serve.decode.engine", eng_dec_us,
+        f"tok_s={dec_tok / (eng_dec_us * 1e-6):.0f}"))
+    rows.append(_util.csv_row(
+        "serve.decode.lockstep", lock_dec_us,
+        f"tok_s={dec_tok / (lock_dec_us * 1e-6):.0f};"
+        f"engine_speedup=x{lock_dec_us / eng_dec_us:.2f}"))
+
+    # ---------------- full lifecycle with queued admission
+    life_eng = ReservoirEngine(model, max_slots=slots)
+
+    def lifecycle():
+        e = life_eng
+        e.reset()
+        for s in range(sessions):
+            e.add_session(s)
+        while e.active_sessions:
+            wave = list(e.active_sessions)
+            for s in wave:
+                e.prefill(s, prompts[s % len(prompts)])
+            e.decode_closed_loop(gen_t, sids=wave)
+            for s in wave:
+                e.evict(s)
+        return e.states
+
+    life_us = _util.timeit(lifecycle, reps=2, warmup=1)
+    res["lifecycle"] = {"us": life_us, "sessions": sessions}
+    rows.append(_util.csv_row(
+        "serve.lifecycle", life_us,
+        f"sessions_s={sessions / (life_us * 1e-6):.1f}"))
+
+    _util.save_artifact("serve_engine.json", res)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(quick=True):
+        print(r)

@@ -12,12 +12,11 @@ import numpy as np
 jax.config.update("jax_enable_x64", True)
 
 from repro.core import ESNConfig, LinearESN
+from repro.data.signals import mso_series
 
 
 def mso(t, k=3):
-    freqs = [0.2, 0.331, 0.42]
-    ts = np.arange(t)
-    return sum(np.sin(a * ts) for a in freqs[:k])
+    return mso_series(k, t)
 
 
 def main():

@@ -1,0 +1,68 @@
+"""Streaming reservoir sessions through the ReservoirEngine.
+
+Demonstrates the serving lifecycle the paper's O(N) step makes cheap:
+sessions are admitted into fixed slots (overflow queues FIFO), prefill their
+prompt with the time-parallel scan (backend picked by ``serve.dispatch``),
+free-run a closed-loop continuation in lock-step, and can be *parked* —
+evicted with their exact state returned — then re-admitted later to continue
+bit-for-bit.
+
+    PYTHONPATH=src python examples/serve_sessions.py
+"""
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.esn import ESNConfig, LinearESN  # noqa: E402
+from repro.data.signals import mso_series  # noqa: E402
+from repro.serve import ReservoirEngine, resolve_method  # noqa: E402
+
+
+def mso(t, k=2):
+    return mso_series(k, t)
+
+
+def main():
+    # A DPG reservoir (no W ever built) trained to continue the MSO signal.
+    cfg = ESNConfig(n=256, spectral_radius=0.95, leak=0.9, input_scaling=0.5,
+                    ridge_alpha=1e-9, seed=3)
+    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    sig = mso(2001)
+    model.fit(sig[:-1, None], sig[1:, None], washout=100)
+
+    engine = ReservoirEngine(model, max_slots=2)
+    print(f"engine: {engine.max_slots} slots, N={cfg.n} "
+          f"(prefill backend for T=400: "
+          f"{resolve_method(400)!r})")
+
+    # Three sessions arrive; only two slots — the third queues.
+    for sid in ("alice", "bob", "carol"):
+        slot = engine.add_session(sid)
+        print(f"  {sid}: {'slot ' + str(slot) if slot is not None else 'queued'}")
+
+    # Prefill + closed-loop continuation for the resident pair.
+    engine.prefill("alice", sig[:400, None])
+    engine.prefill("bob", sig[100:500, None])
+    ys = engine.decode_closed_loop(50, sids=["alice", "bob"])
+    err_a = np.sqrt(np.mean((ys["alice"][:, 0] - sig[400:450]) ** 2))
+    print(f"alice: decoded 50 tokens closed-loop, rmse vs signal {err_a:.4f}")
+
+    # Park alice (exact state comes back) -> carol is auto-admitted.
+    state, y_prev = engine.evict("alice")
+    print(f"alice parked (state {state.shape}); active: "
+          f"{engine.active_sessions}")
+    engine.prefill("carol", sig[200:600, None])
+    engine.decode_closed_loop(25, sids=["carol"])
+
+    # Re-admit alice where she left off; continuation matches bit-for-bit.
+    engine.evict("bob")
+    engine.add_session("alice", h0=state, y0=y_prev)
+    more = engine.decode_closed_loop(25, sids=["alice"])["alice"]
+    err_b = np.sqrt(np.mean((more[:, 0] - sig[450:475]) ** 2))
+    print(f"alice resumed after parking, rmse vs signal {err_b:.4f}")
+    assert np.isfinite(more).all()
+
+
+if __name__ == "__main__":
+    main()

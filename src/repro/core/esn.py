@@ -34,6 +34,13 @@ from .spectral import Spectrum, dpg as dpg_gen, generate_reservoir_matrix
 __all__ = ["ESNConfig", "LinearESN"]
 
 
+def _dispatch():
+    # Call-time import: serve.dispatch sits above core in the layering and
+    # imports core.scan, so a module-level import here would be circular.
+    from repro.serve import dispatch
+    return dispatch
+
+
 @dataclasses.dataclass(frozen=True)
 class ESNConfig:
     n: int
@@ -150,10 +157,56 @@ class LinearESN:
         return self
 
     # ------------------------------------------------------------------- run
-    def run(self, u, y_teacher=None, *, method: str = "sequential",
+    def drive(self, u, y_prev=None):
+        """Input drive into the recurrence: ``u @ W_in (+ y_prev @ W_fb)``,
+        in the model's native basis.  The single copy of this expression —
+        the serving engine and the scans below all route through it."""
+        if self.mode == "diag":
+            d = u @ self.win_q
+            if self.cfg.use_feedback:
+                d = d + y_prev @ self.wfb_q
+        else:
+            d = u @ self.w_in
+            if self.cfg.use_feedback:
+                d = d + y_prev @ self.w_fb
+        return d
+
+    def step_states(self, states, drive):
+        """One recurrence application in the native basis: O(N) element-wise
+        (diag) or dense O(N^2) (standard)."""
+        if self.mode == "diag":
+            return scan_mod.realified_multiply(states, self.lam_q,
+                                               self.n_real) + drive
+        return states @ self.w + drive
+
+    def scan_states(self, drive, h0=None, *, method: str = "auto",
+                    chunk: int = 128):
+        """Run the recurrence over a precomputed drive (..., T, N) from state
+        ``h0`` (native basis; zeros when None).  Time is axis -2 in both
+        modes; leading axes are batch.  The one scan entry point for both
+        modes — ``run`` and the serving engine's prefill share it."""
+        if self.mode == "diag":
+            return _dispatch().run_scan_q(self.lam_q, drive, self.n_real, h0,
+                                          method=method, chunk=chunk,
+                                          time_axis=-2)
+        if h0 is None:
+            h0 = jnp.zeros(drive.shape[:-2] + (self.cfg.n,), drive.dtype)
+
+        def step(r, d):
+            r = self.step_states(r, d)
+            return r, r
+
+        _, states = jax.lax.scan(step, h0, jnp.moveaxis(drive, -2, 0))
+        return jnp.moveaxis(states, 0, -2)
+
+    def run(self, u, y_teacher=None, *, method: str = "auto",
             chunk: int = 128):
         """Collect reservoir states for input u (T, D_in).  Returns (T, N) —
-        raw states (standard mode) or Q-basis states (diag mode)."""
+        raw states (standard mode) or Q-basis states (diag mode).
+
+        ``method="auto"`` (default) lets ``serve.dispatch`` pick the scan
+        backend from the prompt shape (sequential / associative / chunked /
+        Pallas); explicit strings pin one."""
         u = jnp.asarray(u)
         cfg = self.cfg
         if cfg.use_feedback:
@@ -162,39 +215,30 @@ class LinearESN:
                                  "states (closed-loop: use .generate)")
             y_prev = jnp.concatenate(
                 [jnp.zeros((1, cfg.d_out), u.dtype), y_teacher[:-1]], axis=0)
-        if self.mode == "standard":
-            if cfg.use_feedback:
-                drive = u @ self.w_in + y_prev @ self.w_fb
-            else:
-                drive = u @ self.w_in
+        drive = self.drive(u, y_prev if cfg.use_feedback else None)
+        return self.scan_states(drive, method=method, chunk=chunk)
 
-            def step(r, d):
-                r = r @ self.w + d
-                return r, r
-
-            r0 = jnp.zeros((cfg.n,), drive.dtype)
-            _, states = jax.lax.scan(step, r0, drive)
-            return states
-        # diag mode — element-wise recurrence in the Q basis.
+    def assemble_features(self, states, y_prev=None):
+        """X = [1 | y_prev | r] from an already-aligned feedback column
+        (no shifting) — shared by training-time ``features`` and the engine's
+        streaming paths."""
+        cfg = self.cfg
+        cols = []
+        if cfg.use_bias:
+            cols.append(jnp.ones(states.shape[:-1] + (1,), states.dtype))
         if cfg.use_feedback:
-            drive = u @ self.win_q + y_prev @ self.wfb_q
-        else:
-            drive = u @ self.win_q
-        return scan_mod.diag_scan_q(self.lam_q, drive, self.n_real,
-                                    method=method, chunk=chunk, time_axis=-2)
+            cols.append(y_prev)
+        cols.append(states)
+        return jnp.concatenate(cols, axis=-1)
 
     def features(self, states, y_teacher=None):
         """X(t) = [1 | y(t-1) | r(t)] (paper Eq. 7) from collected states."""
         cfg = self.cfg
-        cols = []
-        if cfg.use_bias:
-            cols.append(jnp.ones((states.shape[0], 1), states.dtype))
+        y_prev = None
         if cfg.use_feedback:
             y_prev = jnp.concatenate(
                 [jnp.zeros((1, cfg.d_out), states.dtype), y_teacher[:-1]], axis=0)
-            cols.append(y_prev)
-        cols.append(states)
-        return jnp.concatenate(cols, axis=-1)
+        return self.assemble_features(states, y_prev)
 
     def _metric(self):
         """EET regularizer metric blockdiag(I, Q^T Q) (Eq. 29)."""
@@ -206,7 +250,7 @@ class LinearESN:
 
     # ------------------------------------------------------------------- fit
     def fit(self, u, y, washout: int = 0, alpha: Optional[float] = None,
-            method: str = "sequential"):
+            method: str = "auto"):
         """Ridge-train the readout.  Standard mode: Eq. 9.  Diag mode: EET
         (Eq. 29, generalized metric) — numerically equal to standard+EWT."""
         u = jnp.asarray(u)
@@ -223,7 +267,7 @@ class LinearESN:
             self.w_out = ridge_mod.ridge_solve_general(g, c, self._metric(), alpha)
         return self
 
-    def predict(self, u, y_teacher=None, method: str = "sequential"):
+    def predict(self, u, y_teacher=None, method: str = "auto"):
         assert self.w_out is not None, "fit() first"
         states = self.run(u, y_teacher=y_teacher, method=method)
         x = self.features(states, y_teacher=y_teacher)
@@ -232,39 +276,27 @@ class LinearESN:
     # -------------------------------------------------------------- generate
     def generate(self, n_steps: int, u_warm, y_warm):
         """Closed-loop generation: feed predicted y back as next input
-        (output-as-input autonomy, D_in == D_out). Sequential by necessity."""
+        (output-as-input autonomy, D_in == D_out).
+
+        Routed through ``serve.engine.ReservoirEngine`` — the same slot
+        mechanism that serves streaming sessions: teacher-forced warmup via
+        ``prefill`` (time-parallel scan), then free-running batched decode."""
         assert self.w_out is not None
+        from repro.serve.engine import ReservoirEngine
         cfg = self.cfg
-        states = self.run(u_warm, y_teacher=y_warm if cfg.use_feedback else None)
-        r = states[-1]
-        x_last = self.features(states[-1:], y_teacher=(
-            y_warm[-1:] if cfg.use_feedback else None))
-        y = (x_last @ self.w_out)[0]
-
-        def step(carry, _):
-            r, y = carry
-            if self.mode == "standard":
-                d = y[None] @ self.w_in
-                if cfg.use_feedback:
-                    d = d + y[None] @ self.w_fb
-                r = r @ self.w + d[0]
-            else:
-                d = y[None] @ self.win_q
-                if cfg.use_feedback:
-                    d = d + y[None] @ self.wfb_q
-                r = scan_mod.realified_multiply(r, self.lam_q, self.n_real) + d[0]
-            cols = []
-            if cfg.use_bias:
-                cols.append(jnp.ones((1,), r.dtype))
-            if cfg.use_feedback:
-                cols.append(y)
-            cols.append(r)
-            x = jnp.concatenate(cols)
-            y_new = x @ self.w_out
-            return (r, y_new), y_new
-
-        _, ys = jax.lax.scan(step, (r, y), None, length=n_steps)
-        return ys
+        # Engine cached per readout: reuse keeps the jitted prefill/decode
+        # traces warm across generate() calls; a refit invalidates it.
+        eng = getattr(self, "_gen_engine", None)
+        if eng is None or eng.w_out is not self.w_out:
+            eng = ReservoirEngine(self, max_slots=1)
+            self._gen_engine = eng
+        eng.reset()
+        eng.add_session("gen")
+        eng.prefill("gen", u_warm,
+                    y_teacher=y_warm if cfg.use_feedback else None,
+                    want_outputs=False)  # warmup only needs the feedback seed
+        ys = eng.decode_closed_loop(n_steps, sids=["gen"])["gen"]
+        return jnp.asarray(ys)
 
     # ----------------------------------------------- Theorem 5 (W_in-free R)
     def collect_r_states(self, u, *, method: str = "sequential"):

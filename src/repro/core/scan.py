@@ -41,6 +41,8 @@ __all__ = [
     "pack_lambda_q",
     "realified_multiply",
     "diag_scan_q",
+    "q_split",
+    "q_merge",
 ]
 
 
@@ -260,6 +262,27 @@ def realified_multiply(h, lam_q, n_real: int):
     return jnp.concatenate([hr, hp], axis=-1)
 
 
+def q_split(v, n_real: int):
+    """View a packed Q-layout array ``(..., N)`` as its two native parts:
+    ``(real slots (..., n_real), complex pairs (..., (N - n_real) / 2))``.
+
+    The shared helper for the ``[reals | (re, im) pairs]`` layout, used by
+    the parallel scans and the kernels dispatch.  ``realified_multiply`` /
+    ``pack_lambda_q`` below keep specialized inline forms of the same layout
+    for the sequential decode hot path — a layout change must land in all
+    three places together."""
+    vr = v[..., :n_real]
+    vp = v[..., n_real:].reshape(v.shape[:-1] + (-1, 2))
+    return vr, jax.lax.complex(vp[..., 0], vp[..., 1])
+
+
+def q_merge(vr, vc, dtype):
+    """Inverse of :func:`q_split`: re-interleave complex pairs as (re, im)
+    lanes after the real slots.  Returns a real ``(..., N)`` array."""
+    vp = jnp.stack([vc.real, vc.imag], axis=-1).reshape(vc.shape[:-1] + (-1,))
+    return jnp.concatenate([vr.astype(dtype), vp.astype(dtype)], axis=-1)
+
+
 def diag_scan_q(lam_q, x_q, n_real: int, h0=None, *, method: str = "sequential",
                 chunk: int = 128, time_axis: int = -2):
     """Q-basis (all-real) scan.  Internally views pairs as complex for the
@@ -278,22 +301,11 @@ def diag_scan_q(lam_q, x_q, n_real: int, h0=None, *, method: str = "sequential",
         return _move_time_back(hs, time_axis)
 
     # Parallel methods: split, run real scan on reals + complex scan on pairs.
-    nr = n_real
-    a_r = lam_q[:nr]
-    lp = lam_q[nr:].reshape(-1, 2)
-    a_c = jax.lax.complex(lp[:, 0], lp[:, 1])
-    x_r = x_q[..., :nr]
-    xp = x_q[..., nr:].reshape(x_q.shape[:-1] + (-1, 2))
-    x_c = jax.lax.complex(xp[..., 0], xp[..., 1])
-    h0_r = None if h0 is None else h0[..., :nr]
-    if h0 is None:
-        h0_c = None
-    else:
-        hp = h0[..., nr:].reshape(h0.shape[:-1] + (-1, 2))
-        h0_c = jax.lax.complex(hp[..., 0], hp[..., 1])
+    a_r, a_c = q_split(lam_q, n_real)
+    x_r, x_c = q_split(x_q, n_real)
+    h0_r = h0_c = None
+    if h0 is not None:
+        h0_r, h0_c = q_split(h0, n_real)
     hs_r = diag_scan(a_r, x_r, h0_r, method=method, chunk=chunk, time_axis=time_axis)
     hs_c = diag_scan(a_c, x_c, h0_c, method=method, chunk=chunk, time_axis=time_axis)
-    hs_p = jnp.stack([hs_c.real, hs_c.imag], axis=-1).reshape(
-        hs_c.shape[:-1] + (-1,)
-    )
-    return jnp.concatenate([hs_r.astype(x_q.dtype), hs_p.astype(x_q.dtype)], axis=-1)
+    return q_merge(hs_r, hs_c, x_q.dtype)

@@ -1,0 +1,5 @@
+"""Data plumbing: token pipelines + reference signal generators."""
+from . import signals
+from .signals import ALPHAS_FREQ, mso_series
+
+__all__ = ["signals", "ALPHAS_FREQ", "mso_series"]

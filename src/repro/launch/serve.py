@@ -1,12 +1,20 @@
-"""Batched serving driver: prefill + decode with KV/state caches.
+"""Serving drivers: the ReservoirEngine session loop + the LM smoke loop.
+
+Reservoir serving (the paper's O(N)-step streaming path) — sessions arrive,
+are admitted into engine slots (continuous batching), prefill their prompt
+with the time-parallel scan, free-run closed-loop decode in lock-step, and
+are evicted (their state returned for parking):
+
+    PYTHONPATH=src python -m repro.launch.serve --reservoir \
+        --sessions 16 --slots 4 --prompt-len 256 --gen 64
+
+LM smoke loop (token-synchronous prefill + lock-step decode over the
+transformer/hybrid archs — KV/state caches):
 
     PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
         --smoke --batch 4 --gen 32
 
-Runs a continuous-batching-style loop on whatever fleet is available: all
-requests prefill token-synchronously, then decode in lock-step (recurrent
-archs carry O(1) state; attention archs carry ring/full KV caches).  On a
-TPU fleet the same code runs under the production mesh with the decode
+On a TPU fleet the same code runs under the production mesh with the decode
 sharding profile (weights TP-sharded, KV sequence-sharded — see
 sharding/rules.py).
 """
@@ -19,20 +27,78 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, smoke_config
-from repro.models import lm
+
+# ---------------------------------------------------------------- reservoir
+def serve_reservoir(args) -> None:
+    """Streaming session serving through ``serve.engine.ReservoirEngine``."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.esn import ESNConfig, LinearESN
+    from repro.data.signals import mso_series
+    from repro.serve import ReservoirEngine
+
+    cfg = ESNConfig(n=args.n, spectral_radius=0.95, leak=0.9,
+                    input_scaling=0.5, ridge_alpha=1e-8, seed=args.seed)
+    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    # Signal long enough for any requested prompt window.
+    train_t = max(2000, args.prompt_len + 512)
+    sig = mso_series(3, train_t + 1)
+    model.fit(sig[:-1, None], sig[1:, None], washout=100)
+
+    rng = np.random.default_rng(args.seed)
+    engine = ReservoirEngine(model, max_slots=args.slots)
+    # Untimed warmup wave: compile the prefill/decode traces so the reported
+    # tok/s measures serving throughput, not XLA compilation.
+    engine.add_session("warm")
+    engine.prefill("warm", sig[:args.prompt_len, None], want_outputs=False)
+    engine.decode_closed_loop(args.gen, sids=["warm"])
+    jax.block_until_ready(engine.states)
+    engine.reset()
+    # All sessions "arrive" up front; the engine queues what doesn't fit and
+    # admits from the queue as slots free up (continuous batching).
+    offsets = {}
+    for sid in range(args.sessions):
+        offsets[sid] = int(rng.integers(0, train_t - args.prompt_len - 1))
+        engine.add_session(sid)
+
+    done = 0
+    prefill_tokens = 0
+    decode_tokens = 0
+    t0 = time.time()
+    t_prefill = 0.0
+    t_decode = 0.0
+    while engine.active_sessions:
+        wave = list(engine.active_sessions)
+        t1 = time.time()
+        for sid in wave:
+            lo = offsets[sid]
+            prompt = sig[lo:lo + args.prompt_len, None]
+            engine.prefill(sid, prompt, want_outputs=False)
+            prefill_tokens += args.prompt_len
+        jax.block_until_ready(engine.states)  # don't let prefill drain into the decode timer
+        t_prefill += time.time() - t1
+        t1 = time.time()
+        ys = engine.decode_closed_loop(args.gen, sids=wave)
+        jax.block_until_ready(engine.states)
+        t_decode += time.time() - t1
+        decode_tokens += args.gen * len(wave)
+        for sid in wave:
+            assert np.isfinite(ys[sid]).all()
+            engine.evict(sid)   # auto-admits the next queued session
+            done += 1
+    wall = time.time() - t0
+    print(f"reservoir n={cfg.n} slots={args.slots}: served {done} sessions "
+          f"in {wall:.2f}s ({done / wall:.1f} sessions/s)")
+    print(f"  prefill {prefill_tokens} tok in {t_prefill:.2f}s "
+          f"({prefill_tokens / max(t_prefill, 1e-9):.0f} tok/s, "
+          f"backend auto-dispatch)")
+    print(f"  decode  {decode_tokens} tok in {t_decode:.2f}s "
+          f"({decode_tokens / max(t_decode, 1e-9):.0f} tok/s, closed loop)")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="recurrentgemma-2b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+# ----------------------------------------------------------------------- lm
+def serve_lm(args) -> None:
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.is_encoder_decoder:
@@ -79,6 +145,30 @@ def main():
     for i in range(min(args.batch, 4)):
         print(f"  req{i}: {toks[i, :12].tolist()}")
     assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # reservoir-engine session serving
+    ap.add_argument("--reservoir", action="store_true",
+                    help="serve streaming reservoir sessions via "
+                         "ReservoirEngine instead of the LM loop")
+    ap.add_argument("--sessions", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--n", type=int, default=512,
+                    help="reservoir size for --reservoir")
+    args = ap.parse_args()
+    if args.reservoir:
+        serve_reservoir(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Serving subsystem: stateful streaming reservoir sessions.
+
+``dispatch`` — shape-heuristic backend selection for the diagonal scan
+(sequential / associative / chunked / Pallas), the single execution funnel.
+``engine``   — ``ReservoirEngine``: slot-based continuous batching over
+persistent per-session Q-basis state (add_session / prefill / decode_step /
+evict, plus closed-loop generation).
+"""
+from . import dispatch, engine
+from .dispatch import resolve_method, run_scan_q
+from .engine import ReservoirEngine, SessionStats
+
+__all__ = ["dispatch", "engine", "resolve_method", "run_scan_q",
+           "ReservoirEngine", "SessionStats"]

@@ -1,0 +1,333 @@
+"""ReservoirEngine — stateful streaming serving for linear reservoirs.
+
+The paper's punchline is operational: once diagonalized, the reservoir step is
+O(N) element-wise, so *per-user persistent recurrent state* is the cheapest
+serving primitive there is — a (B, N) array of Q-basis states that advances
+one fused multiply per token for the whole batch.  This module owns that
+state end-to-end:
+
+* **slots** — fixed-size state arena ``(max_slots, N)``; sessions are admitted
+  into free slots (continuous batching) and queue FIFO when full.
+* **add_session / prefill / decode_step / evict** — the session lifecycle.
+  Prefill runs the time-parallel scan (backend picked by
+  ``serve.dispatch.run_scan_q``: chunked / Pallas for long prompts); decode
+  advances every active slot with one batched element-wise step.
+* **closed loop** — ``decode_closed_loop`` feeds predictions back as next
+  inputs (output-as-input autonomy, optionally through the trained feedback
+  matrix), the state-feedback ESN serving path: teacher-forced warmup via
+  ``prefill`` then free-running decode from the same slot state.
+
+Eviction returns the exact slot state; re-admitting it later (``h0=``)
+continues the trajectory bit-for-bit — the recurrence is Markov in ``(state,
+y_prev)``, so sessions can be parked in a KV-store between bursts.
+
+Works for both model modes: ``diag`` (Q-basis, ``realified_multiply`` step —
+the production path) and ``standard`` (dense O(N^2) step — the reference
+baseline the tests compare against).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Hashable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dispatch
+
+__all__ = ["SessionStats", "ReservoirEngine"]
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Per-session accounting (host-side; never enters jit)."""
+    slot: int
+    tokens_prefilled: int = 0
+    tokens_decoded: int = 0
+
+
+class ReservoirEngine:
+    """Batched multi-session serving on top of a built ``LinearESN``.
+
+    ``model`` is a ``core.esn.LinearESN`` in either mode; a trained readout
+    (``model.w_out``) is required for predictions / closed-loop decode but not
+    for pure state streaming.
+
+    The engine **snapshots the model at construction** (weights and readout
+    are baked into its compiled step functions) — build the engine *after*
+    ``fit()``/``ewt_from()``; later mutations of the model are not picked up.
+    """
+
+    def __init__(self, model, max_slots: int = 8):
+        if model.mode not in ("standard", "diag"):
+            raise ValueError(f"unknown model mode {model.mode!r}")
+        self.model = model
+        self.w_out = model.w_out  # snapshot: consistent with the jit traces
+        self.cfg = model.cfg
+        self.max_slots = int(max_slots)
+        n = self.cfg.n
+        if model.mode == "diag":
+            self._dtype = model.lam_q.dtype
+        else:
+            self._dtype = model.w.dtype
+        self.states = jnp.zeros((self.max_slots, n), self._dtype)
+        self.y_prev = jnp.zeros((self.max_slots, self.cfg.d_out), self._dtype)
+        self._slots: list = [None] * self.max_slots  # slot -> session id
+        self.sessions: Dict[Hashable, SessionStats] = {}
+        self.pending: collections.deque = collections.deque()
+        self._decode_jit = jax.jit(self._decode_batch)
+        self._closed_jit = jax.jit(self._closed_loop, static_argnums=3)
+        self._prefill_jit = jax.jit(
+            self._prefill_compute,
+            static_argnames=("method", "chunk", "want_outputs"))
+
+    # ------------------------------------------------------------- lifecycle
+    def add_session(self, sid: Hashable, h0=None, y0=None) -> Optional[int]:
+        """Admit ``sid`` into a free slot; queue FIFO if the arena is full.
+
+        ``h0``: optional initial state in the engine's native layout (Q basis
+        for diag models) — e.g. a state returned by :meth:`evict`.  Returns
+        the slot index, or None when queued.
+        """
+        if sid in self.sessions or any(s == sid for s, _, _ in self.pending):
+            raise KeyError(f"session {sid!r} already admitted")
+        try:
+            slot = self._slots.index(None)
+        except ValueError:
+            self.pending.append((sid, h0, y0))
+            return None
+        return self._place(sid, slot, h0, y0)
+
+    def _place(self, sid, slot: int, h0, y0) -> int:
+        n = self.cfg.n
+        h0 = jnp.zeros((n,), self._dtype) if h0 is None else jnp.asarray(h0)
+        y0 = (jnp.zeros((self.cfg.d_out,), self._dtype) if y0 is None
+              else jnp.asarray(y0))
+        self.states = self.states.at[slot].set(h0.astype(self._dtype))
+        self.y_prev = self.y_prev.at[slot].set(y0.astype(self._dtype))
+        self._slots[slot] = sid
+        self.sessions[sid] = SessionStats(slot=slot)
+        return slot
+
+    def evict(self, sid: Hashable):
+        """Release ``sid``'s slot; returns ``(state, y_prev)`` so the caller
+        can park the session and re-admit it later via ``h0=``/``y0=``.
+        Admits the head of the pending queue into the freed slot.
+
+        Evicting a sid that is still *queued* cancels it instead (returns its
+        queued ``(h0, y0)``) — clients that disconnect before admission must
+        not leak into slots.
+
+        The returned arrays are lazy device slices (no host sync): callers
+        that evict only to free the slot pay nothing; callers that park the
+        session convert to host storage on their own schedule."""
+        if sid not in self.sessions:
+            for item in self.pending:
+                if item[0] == sid:
+                    self.pending.remove(item)
+                    return item[1], item[2]
+            raise KeyError(f"session {sid!r} is neither active nor queued")
+        st = self.sessions.pop(sid)
+        state = self.states[st.slot]
+        y = self.y_prev[st.slot]
+        self._slots[st.slot] = None
+        if self.pending:
+            nsid, h0, y0 = self.pending.popleft()
+            self._place(nsid, st.slot, h0, y0)
+        return state, y
+
+    def reset(self):
+        """Drop all sessions (active + queued) and zero the state arena.
+        Keeps the compiled step functions — cheap way to reuse an engine."""
+        self.states = jnp.zeros_like(self.states)
+        self.y_prev = jnp.zeros_like(self.y_prev)
+        self._slots = [None] * self.max_slots
+        self.sessions.clear()
+        self.pending.clear()
+
+    @property
+    def active_sessions(self):
+        return [s for s in self._slots if s is not None]
+
+    @property
+    def free_slots(self) -> int:
+        return self._slots.count(None)
+
+    def _active(self, sid: Hashable) -> SessionStats:
+        """Resolve an *admitted* session, with a descriptive error for the
+        natural add-then-use flow when the session is still queued."""
+        try:
+            return self.sessions[sid]
+        except KeyError:
+            if any(item[0] == sid for item in self.pending):
+                raise KeyError(
+                    f"session {sid!r} is queued, not yet admitted — wait for "
+                    f"a slot (admission happens on evict) before using it"
+                ) from None
+            raise
+
+    def state_of(self, sid: Hashable):
+        return np.asarray(self.states[self._active(sid).slot])
+
+    # --------------------------------------------------------------- prefill
+    def _prefill_compute(self, h0, y0, u, y_teacher, *, method: str,
+                         chunk: int, want_outputs: bool):
+        """Jitted prompt ingestion: scan + (optional) readout.  Retraces per
+        distinct (T, method) — prompt shapes are the natural bucketing.
+
+        ``want_outputs=False`` skips the full (T, D_out) readout — warmup
+        paths that only need the final state + feedback seed save an
+        O(T * N) matmul and a (T, n_features) materialization."""
+        m = self.model
+        y_shift = None
+        if self.cfg.use_feedback:
+            y_shift = jnp.concatenate([y0[None], y_teacher[:-1]], axis=0)
+        states = m.scan_states(m.drive(u, y_shift), h0, method=method,
+                               chunk=chunk)
+        if self.w_out is None:
+            return states[-1], states, None
+        if want_outputs:
+            x = m.assemble_features(states, y_shift)
+            y = x @ self.w_out
+            return states[-1], y, y[-1]
+        # Last-step readout only: O(N) — just the closed-loop feedback seed.
+        x_last = m.assemble_features(
+            states[-1:], None if y_shift is None else y_shift[-1:])
+        return states[-1], None, (x_last @ self.w_out)[0]
+
+    def prefill(self, sid: Hashable, u, y_teacher=None, *,
+                method: str = "auto", chunk: int = 128,
+                want_outputs: bool = True):
+        """Run ``sid``'s slot through a (T, D_in) prompt with the
+        time-parallel scan (backend from ``dispatch``), starting from the
+        slot's current state.  Returns per-step predictions (T, D_out) when a
+        readout is trained, else the (T, N) states.
+
+        ``want_outputs=False`` skips the per-step readout and returns None —
+        cheaper when the caller only needs the slot warmed up (the feedback
+        seed for closed-loop decode is still computed)."""
+        st = self._active(sid)
+        u = jnp.asarray(u, self._dtype)
+        if u.shape[0] == 0:
+            raise ValueError("prefill needs at least one token (got T=0)")
+        cfg = self.cfg
+        if cfg.use_feedback:
+            if y_teacher is None:
+                raise ValueError("feedback model: prefill is teacher-forced, "
+                                 "pass y_teacher")
+            y_teacher = jnp.asarray(y_teacher, self._dtype)
+            if y_teacher.shape[0] != u.shape[0]:
+                raise ValueError(
+                    f"y_teacher length {y_teacher.shape[0]} != prompt length "
+                    f"{u.shape[0]} (one teacher output per prompt token)")
+        else:
+            y_teacher = None
+        if method == "auto" and self.model.mode == "diag":
+            method = dispatch.resolve_method(int(u.shape[0]), chunk=chunk)
+        last, out, y_last = self._prefill_jit(
+            self.states[st.slot], self.y_prev[st.slot], u, y_teacher,
+            method=method, chunk=chunk, want_outputs=want_outputs)
+        self.states = self.states.at[st.slot].set(last)
+        st.tokens_prefilled += int(u.shape[0])
+        if y_teacher is not None:
+            # Prefill is teacher-forced end-to-end: the teacher's last output
+            # is the feedback for the next step (prediction feedback belongs
+            # to the decode paths), keeping parity with LinearESN.run.
+            self.y_prev = self.y_prev.at[st.slot].set(y_teacher[-1])
+        elif y_last is not None:
+            self.y_prev = self.y_prev.at[st.slot].set(y_last)
+        return out
+
+    # ---------------------------------------------------------------- decode
+    def _step_states(self, states, u, y_prev):
+        """One batched reservoir step over the whole slot arena."""
+        m = self.model
+        return m.step_states(states, m.drive(u, y_prev))
+
+    def _decode_batch(self, states, y_prev, u, mask):
+        new = self._step_states(states, u, y_prev)
+        states = jnp.where(mask[:, None], new, states)
+        if self.w_out is None:
+            return states, y_prev, y_prev
+        x = self.model.assemble_features(states, y_prev)
+        y = x @ self.w_out
+        y_out = jnp.where(mask[:, None], y, y_prev)
+        return states, y_out, y_out
+
+    def decode_step(self, inputs: Dict[Hashable, "np.ndarray"]):
+        """Advance every session in ``inputs`` by one token, batched.
+
+        ``inputs``: sid -> (D_in,) input vector.  Sessions not mentioned hold
+        their state.  Returns sid -> (D_out,) prediction (requires a trained
+        readout; without one the states advance and an empty dict returns).
+        The prediction is stored as the session's feedback ``y_prev``; call
+        :meth:`observe` afterwards to teacher-force a ground-truth output.
+        """
+        # Resolve every sid and validate every vector before mutating
+        # anything: a bad input must not leave other sessions' stats
+        # half-updated.
+        stats = {sid: self._active(sid) for sid in inputs}
+        vecs = {sid: np.asarray(vec).reshape(self.cfg.d_in)
+                for sid, vec in inputs.items()}
+        u = np.zeros((self.max_slots, self.cfg.d_in), self._dtype)
+        mask = np.zeros((self.max_slots,), bool)
+        for sid, vec in vecs.items():
+            st = stats[sid]
+            u[st.slot] = vec
+            mask[st.slot] = True
+            st.tokens_decoded += 1
+        self.states, self.y_prev, y = self._decode_jit(
+            self.states, self.y_prev, jnp.asarray(u), jnp.asarray(mask))
+        if self.w_out is None:
+            return {}
+        y = np.asarray(y)
+        return {sid: y[self.sessions[sid].slot] for sid in inputs}
+
+    def observe(self, sid: Hashable, y_true):
+        """Teacher-force: overwrite ``sid``'s feedback output with ground
+        truth (used between open-loop decode steps)."""
+        st = self._active(sid)
+        self.y_prev = self.y_prev.at[st.slot].set(
+            jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out))
+
+    # ----------------------------------------------------------- closed loop
+    def _closed_loop(self, states, y_prev, mask, n_steps: int):
+        w_out = self.w_out
+
+        def step(carry, _):
+            states, y = carry
+            new = self._step_states(states, y, y)
+            states = jnp.where(mask[:, None], new, states)
+            x = self.model.assemble_features(states, y)
+            y_new = x @ w_out
+            y_new = jnp.where(mask[:, None], y_new, y)
+            return (states, y_new), y_new
+
+        (states, y_prev), ys = jax.lax.scan(step, (states, y_prev), None,
+                                            length=n_steps)
+        return states, y_prev, ys
+
+    def decode_closed_loop(self, n_steps: int, sids=None):
+        """Free-running generation: feed each session's prediction back as its
+        next input (D_in == D_out).  Decodes all active sessions in lock-step
+        (``sids`` restricts the set).  Returns sid -> (n_steps, D_out)."""
+        if self.w_out is None:
+            raise ValueError("closed-loop decode needs a trained readout")
+        if self.cfg.d_in != self.cfg.d_out:
+            raise ValueError("closed loop requires d_in == d_out")
+        # dict.fromkeys: dedupe (a repeated sid must not double-count tokens)
+        # while preserving order; values resolved via _active for clear errors.
+        targets = list(dict.fromkeys(self.sessions if sids is None else sids))
+        stats = {sid: self._active(sid) for sid in targets}  # validate first
+        mask = np.zeros((self.max_slots,), bool)
+        for sid in targets:
+            mask[stats[sid].slot] = True
+            stats[sid].tokens_decoded += n_steps
+        self.states, self.y_prev, ys = self._closed_jit(
+            self.states, self.y_prev, jnp.asarray(mask), int(n_steps))
+        # ys: (n_steps, max_slots, d_out) — return lazy device slices so
+        # callers (generate, pipelined serving loops) stay async; convert to
+        # host memory on their own schedule.
+        return {sid: ys[:, stats[sid].slot] for sid in targets}

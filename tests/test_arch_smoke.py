@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ASSIGNED, get_config, smoke_config
 from repro.models import lm
 
+pytestmark = pytest.mark.slow  # full arch sweep; deselected in the CI fast lane
+
 ALL = ASSIGNED + ["linear-esn"]
 
 

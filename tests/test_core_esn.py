@@ -16,12 +16,11 @@ from repro.core import ridge as ridge_mod
 from repro.core.basis import EigenBasis
 from repro.core.esn import ESNConfig, LinearESN
 from repro.core.spectral import generate_reservoir_matrix
+from repro.data.signals import mso_series
 
 
 def _mso(t, k=3):
-    alphas = [0.2, 0.331, 0.42, 0.51, 0.63]
-    ts = np.arange(t)
-    return sum(np.sin(a * ts) for a in alphas[:k])
+    return mso_series(k, t)
 
 
 def _xy(t=400, k=3):

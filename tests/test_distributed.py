@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 8 placeholder devices; CI fast lane skips
+
 
 def test_distributed_equivalence():
     env = dict(os.environ)

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't fail collection
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ridge as ridge_mod
 from repro.core import scan as scan_mod

@@ -1,0 +1,323 @@
+"""Serving subsystem tests: ReservoirEngine lifecycle + backend dispatch.
+
+The acceptance bar: engine decode states/outputs match the dense O(N^2)
+``LinearESN.standard`` reference within 1e-5, including across evict /
+re-admit cycles (the state is Markov — parking a session is lossless).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.esn import ESNConfig, LinearESN
+from repro.data.signals import mso_series
+from repro.serve import ReservoirEngine, dispatch, resolve_method, run_scan_q
+
+CFG = ESNConfig(n=48, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-8, seed=7)
+
+
+def _mso(t, k=3):
+    return mso_series(k, t)
+
+
+def _models(cfg=CFG, t=600):
+    sig = _mso(t + 1)
+    u, y = sig[:-1, None], sig[1:, None]
+    std = LinearESN.standard(cfg).fit(u[:400], y[:400], washout=50)
+    dia = LinearESN.diagonalized(cfg).ewt_from(std)
+    return std, dia, u, y
+
+
+def _dense_reference(std, u):
+    """Hand-rolled dense recurrence + readout: the O(N^2) oracle."""
+    w, w_in, w_out = np.asarray(std.w), np.asarray(std.w_in), np.asarray(std.w_out)
+    r = np.zeros(std.cfg.n)
+    rs, ys = [], []
+    for t in range(u.shape[0]):
+        r = r @ w + u[t] @ w_in
+        rs.append(r.copy())
+        ys.append(np.concatenate([[1.0], r]) @ w_out)
+    return np.stack(rs), np.stack(ys)
+
+
+# --------------------------------------------------------------- dispatch
+def test_dispatch_decode_is_sequential():
+    assert resolve_method(1) == "sequential"
+    assert resolve_method(dispatch.SEQUENTIAL_MAX_T) == "sequential"
+
+
+def test_dispatch_long_prefill_is_chunked_off_tpu():
+    assert resolve_method(4096, backend="cpu") == "chunked"
+    assert resolve_method(4096, backend="gpu") == "chunked"
+
+
+def test_dispatch_long_prefill_is_pallas_on_tpu():
+    assert resolve_method(4096, backend="tpu") == "pallas"
+    # below the kernel threshold TPU still uses the chunked two-pass
+    assert resolve_method(dispatch.PALLAS_MIN_T - 1, backend="tpu") == "chunked"
+
+
+def test_dispatch_midsize_falls_back_to_associative():
+    assert resolve_method(64, backend="cpu", chunk=128) == "associative"
+
+
+def test_run_scan_q_backends_agree():
+    rng = np.random.default_rng(0)
+    dia = LinearESN.diagonalized(CFG)
+    x = jnp.asarray(rng.normal(size=(2, 96, CFG.n)))
+    h0 = jnp.asarray(rng.normal(size=(2, CFG.n)))
+    ref = run_scan_q(dia.lam_q, x, dia.n_real, h0, method="sequential")
+    for method in ("associative", "chunked", "pallas", "auto"):
+        out = run_scan_q(dia.lam_q, x, dia.n_real, h0, method=method, chunk=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-9, atol=1e-9, err_msg=method)
+
+
+def test_scan_states_batched_standard_mode():
+    """Standard-mode scan_states must scan time (axis -2), not batch."""
+    std = LinearESN.standard(CFG)
+    rng = np.random.default_rng(0)
+    drive = jnp.asarray(rng.normal(size=(3, 3, CFG.n)))  # B == T: the trap
+    batched = np.asarray(std.scan_states(drive))
+    for b in range(3):
+        single = np.asarray(std.scan_states(drive[b]))
+        np.testing.assert_allclose(batched[b], single, rtol=0, atol=1e-12)
+
+
+# ----------------------------------------------------- decode-step parity
+def test_decode_parity_vs_dense_reference():
+    std, dia, u, _ = _models()
+    r_ref, y_ref = _dense_reference(std, u)
+    eng = ReservoirEngine(dia, max_slots=3)
+    eng.add_session("s")
+    eng.prefill("s", u[:256])  # chunked/time-parallel path
+    for t in range(256, 300):
+        out = eng.decode_step({"s": u[t]})
+        np.testing.assert_allclose(out["s"], y_ref[t], rtol=0, atol=1e-5)
+    # states match the dense reference after mapping Q -> original basis
+    r_back = dia.basis.state_from_q(eng.state_of("s"))
+    np.testing.assert_allclose(r_back, r_ref[299], rtol=0, atol=1e-5)
+
+
+def test_engine_standard_mode_matches_dense_reference():
+    std, _, u, _ = _models()
+    r_ref, y_ref = _dense_reference(std, u)
+    eng = ReservoirEngine(std, max_slots=2)
+    eng.add_session(0)
+    eng.prefill(0, u[:100])
+    np.testing.assert_allclose(eng.state_of(0), r_ref[99], rtol=0, atol=1e-8)
+    for t in range(100, 130):
+        out = eng.decode_step({0: u[t]})
+        np.testing.assert_allclose(out[0], y_ref[t], rtol=0, atol=1e-5)
+
+
+def test_prefill_equals_stepwise_decode():
+    _, dia, u, _ = _models()
+    a = ReservoirEngine(dia, max_slots=1)
+    a.add_session("x")
+    a.prefill("x", u[:256])
+    b = ReservoirEngine(dia, max_slots=1)
+    b.add_session("x")
+    for t in range(256):
+        b.decode_step({"x": u[t]})
+    np.testing.assert_allclose(a.state_of("x"), b.state_of("x"),
+                               rtol=0, atol=1e-8)
+
+
+# ------------------------------------------------- evict / re-admit cycles
+def test_evict_readmit_cycles_preserve_trajectory():
+    std, dia, u, _ = _models()
+    _, y_ref = _dense_reference(std, u)
+    eng = ReservoirEngine(dia, max_slots=2)
+    eng.add_session("a")
+    eng.prefill("a", u[:200])
+    t = 200
+    for cycle in range(3):  # decode a burst, park, resume — three times
+        for _ in range(20):
+            out = eng.decode_step({"a": u[t]})
+            np.testing.assert_allclose(out["a"], y_ref[t], rtol=0, atol=1e-5)
+            t += 1
+        state, y_prev = eng.evict("a")
+        assert "a" not in eng.sessions
+        # other traffic reuses the freed slot in between
+        eng.add_session(("filler", cycle))
+        eng.prefill(("filler", cycle), u[:64])
+        eng.evict(("filler", cycle))
+        eng.add_session("a", h0=state, y0=y_prev)
+
+
+def test_evict_frees_slot_and_admits_pending():
+    _, dia, u, _ = _models()
+    eng = ReservoirEngine(dia, max_slots=2)
+    assert eng.add_session("a") is not None
+    assert eng.add_session("b") is not None
+    assert eng.add_session("c") is None           # queued
+    assert eng.free_slots == 0 and len(eng.pending) == 1
+    eng.evict("a")
+    assert "c" in eng.sessions                    # auto-admitted
+    assert len(eng.pending) == 0
+    with pytest.raises(KeyError):
+        eng.add_session("b")                      # duplicate admission
+
+
+def test_evict_cancels_queued_session():
+    _, dia, u, _ = _models()
+    eng = ReservoirEngine(dia, max_slots=1)
+    eng.add_session("a")
+    assert eng.add_session("ghost") is None       # queued
+    h0, y0 = eng.evict("ghost")                   # client disconnects pre-admission
+    assert h0 is None and y0 is None and len(eng.pending) == 0
+    eng.evict("a")                                # ghost must NOT be auto-admitted
+    assert eng.active_sessions == [] and eng.free_slots == 1
+
+
+def test_generate_feedback_mode_seeds_with_teacher_output():
+    """Pins the engine-era convention: after a teacher-forced warmup the
+    free-running loop is seeded with the teacher's LAST output (the old
+    pre-engine generate used the last warmup prediction with a zeroed
+    feedback column)."""
+    cfg_fb = ESNConfig(n=40, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                       input_scaling=0.5, use_feedback=True, seed=5)
+    sig = _mso(301)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.standard(cfg_fb).fit(u[:250], y[:250], washout=50)
+    gen = np.asarray(m.generate(5, u[:250], y[:250]))
+    # hand-rolled reference with the documented seeding
+    w, w_in, w_fb = np.asarray(m.w), np.asarray(m.w_in), np.asarray(m.w_fb)
+    w_out = np.asarray(m.w_out)
+    r = np.asarray(m.run(u[:250], y_teacher=y[:250]))[-1]
+    yfb = y[249]
+    ref = []
+    for _ in range(5):
+        r = r @ w + yfb @ w_in + yfb @ w_fb
+        yfb = np.concatenate([[1.0], yfb, r]) @ w_out
+        ref.append(yfb)
+    np.testing.assert_allclose(gen, np.stack(ref), rtol=0, atol=1e-8)
+
+
+def test_generate_reuses_cached_engine_until_refit():
+    sig = _mso(401, k=1)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.diagonalized(CFG)
+    m.fit(u[:300], y[:300], washout=50)
+    m.generate(10, u[:100], y[:100])
+    eng1 = m._gen_engine
+    m.generate(10, u[:100], y[:100])
+    assert m._gen_engine is eng1                  # warm traces reused
+    m.fit(u[:300], y[:300], washout=50, alpha=1e-6)
+    m.generate(10, u[:100], y[:100])
+    assert m._gen_engine is not eng1              # refit invalidates snapshot
+
+
+def test_decode_step_validates_sids_before_mutating():
+    _, dia, u, _ = _models()
+    eng = ReservoirEngine(dia, max_slots=2)
+    eng.add_session("a")
+    eng.prefill("a", u[:50])
+    state_before = eng.state_of("a")
+    with pytest.raises(KeyError):
+        eng.decode_step({"a": u[50], "ghost": u[50]})
+    assert eng.sessions["a"].tokens_decoded == 0      # no phantom tokens
+    np.testing.assert_array_equal(eng.state_of("a"), state_before)
+
+
+def test_prefill_rejects_empty_prompt():
+    _, dia, _, _ = _models()
+    eng = ReservoirEngine(dia, max_slots=1)
+    eng.add_session("a")
+    with pytest.raises(ValueError, match="T=0"):
+        eng.prefill("a", np.zeros((0, 1)))
+
+
+def test_prefill_rejects_mismatched_teacher_length():
+    cfg_fb = ESNConfig(n=40, use_feedback=True, seed=5)
+    m = LinearESN.standard(cfg_fb)
+    eng = ReservoirEngine(m, max_slots=1)
+    eng.add_session("a")
+    with pytest.raises(ValueError, match="one teacher output per prompt"):
+        eng.prefill("a", np.zeros((100, 1)), y_teacher=np.zeros((1, 1)))
+
+
+def test_sessions_are_isolated():
+    std, dia, u, _ = _models()
+    _, y_ref = _dense_reference(std, u)
+    sig2 = _mso(401, k=2)
+    u2 = sig2[:-1, None]
+    _, y2_ref = _dense_reference(std, u2)
+    eng = ReservoirEngine(dia, max_slots=2)
+    eng.add_session("a")
+    eng.add_session("b")
+    eng.prefill("a", u[:100])
+    eng.prefill("b", u2[:100])
+    for t in range(100, 120):
+        out = eng.decode_step({"a": u[t], "b": u2[t]})
+        np.testing.assert_allclose(out["a"], y_ref[t], rtol=0, atol=1e-5)
+        np.testing.assert_allclose(out["b"], y2_ref[t], rtol=0, atol=1e-5)
+    # evicting a must not disturb b's trajectory
+    eng.evict("a")
+    for t in range(120, 140):
+        out = eng.decode_step({"b": u2[t]})
+        np.testing.assert_allclose(out["b"], y2_ref[t], rtol=0, atol=1e-5)
+
+
+def test_prefill_with_readout_keeps_teacher_feedback():
+    cfg_fb = ESNConfig(n=40, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                       input_scaling=0.5, use_feedback=True, seed=5)
+    sig = _mso(301)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.standard(cfg_fb).fit(u, y, washout=50)
+    ref = np.asarray(m.run(u[:101], y_teacher=y[:101]))
+    eng = ReservoirEngine(m, max_slots=1)
+    eng.add_session("s")
+    eng.prefill("s", u[:100], y_teacher=y[:100])
+    eng.decode_step({"s": u[100]})   # teacher y[99], not the prediction
+    np.testing.assert_allclose(eng.state_of("s"), ref[100], rtol=0, atol=1e-8)
+
+
+def test_prefill_without_readout_keeps_teacher_feedback():
+    cfg_fb = ESNConfig(n=40, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                       input_scaling=0.5, use_feedback=True, seed=5)
+    sig = _mso(301)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.standard(cfg_fb)               # no readout: state streaming
+    ref = np.asarray(m.run(u[:101], y_teacher=y[:101]))
+    eng = ReservoirEngine(m, max_slots=1)
+    eng.add_session("s")
+    eng.prefill("s", u[:100], y_teacher=y[:100])
+    eng.decode_step({"s": u[100]})               # must use y_teacher[99] feedback
+    np.testing.assert_allclose(eng.state_of("s"), ref[100], rtol=0, atol=1e-8)
+
+
+# ------------------------------------------------------------ closed loop
+def test_closed_loop_matches_dense_hand_loop():
+    std, dia, u, _ = _models()
+    # hand-rolled closed loop on the dense model
+    w, w_in, w_out = np.asarray(std.w), np.asarray(std.w_in), np.asarray(std.w_out)
+    r = np.zeros(std.cfg.n)
+    for t in range(300):
+        r = r @ w + u[t] @ w_in
+    y = np.concatenate([[1.0], r]) @ w_out
+    ys_ref = []
+    for _ in range(40):
+        r = r @ w + y @ w_in
+        y = np.concatenate([[1.0], r]) @ w_out
+        ys_ref.append(y)
+    ys_ref = np.stack(ys_ref)
+
+    eng = ReservoirEngine(dia, max_slots=1)
+    eng.add_session("g")
+    eng.prefill("g", u[:300])
+    ys = eng.decode_closed_loop(40, sids=["g"])["g"]
+    np.testing.assert_allclose(ys, ys_ref, rtol=0, atol=1e-5)
+
+
+def test_generate_routes_through_engine_and_tracks_signal():
+    sig = _mso(501, k=1)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.diagonalized(
+        ESNConfig(n=80, spectral_radius=1.0, input_scaling=0.5,
+                  ridge_alpha=1e-10, seed=21))
+    m.fit(u[:300], y[:300], washout=100)
+    gen = np.asarray(m.generate(100, u[:300], y[:300]))
+    rmse = float(np.sqrt(np.mean((gen - y[300:400]) ** 2)))
+    assert np.isfinite(gen).all() and rmse < 0.5
