@@ -1,0 +1,100 @@
+"""Dispatch overhead of the pytree-native param API.
+
+Measures the same reservoir state collection three ways:
+
+* **facade**  — the old method-call path (``LinearESN.run``): per-call python
+  dispatch + eager op-by-op execution of the scan schedule.
+* **jit**     — ``jax.jit`` of the pure ``core.esn.run`` with the param
+  struct passed as a pytree argument: one compiled trace, zero per-call
+  python in the hot path.  Only possible because the params are a registered
+  pytree — the payoff the API redesign buys.
+* **vmap+jit** — one ``vmap``-ed trace over a *batch* of independently-seeded
+  reservoirs (``core.params.stack_params``) vs looping the jitted single run.
+
+Rows land in the perf trajectory (CI uploads ``artifacts/params_api.json``)
+so dispatch-overhead deltas are tracked per PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import esn as esn_fn
+from repro.core.esn import ESNConfig, LinearESN
+from repro.core.params import stack_params
+from repro.data.signals import mso_series
+
+from . import _util
+
+
+def main(quick: bool = False):
+    n = 128 if quick else 512
+    t = 512 if quick else 2048
+    b = 4 if quick else 8
+    cfg = ESNConfig(n=n, spectral_radius=0.95, leak=0.9, input_scaling=0.5,
+                    ridge_alpha=1e-8, seed=0)
+    sig = mso_series(3, t + 1)
+    u = sig[:-1, None]
+
+    facade = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    params = facade.params
+
+    res = {"n": n, "t": t, "batch": b}
+    rows = []
+
+    # ---------------- single model: method call vs jitted pure function
+    def facade_run():
+        return facade.run(u, method="chunked")
+
+    def jit_run(fn=jax.jit(lambda p, x: esn_fn.run(p, x, method="chunked"))):
+        return fn(params, u)
+
+    facade_us = _util.timeit(facade_run, reps=5, warmup=2)
+    jit_us = _util.timeit(jit_run, reps=5, warmup=2)
+    res["run"] = {"facade_us": facade_us, "jit_us": jit_us}
+    rows.append(_util.csv_row("params_api.run.facade", facade_us,
+                              f"tok_s={t / (facade_us * 1e-6):.0f}"))
+    rows.append(_util.csv_row(
+        "params_api.run.jit", jit_us,
+        f"tok_s={t / (jit_us * 1e-6):.0f};"
+        f"speedup_vs_facade=x{facade_us / jit_us:.2f}"))
+
+    # ---------------- param batch: one vmap-ed trace vs python loop of jits
+    batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=s), "noisy_golden",
+                               sigma=0.1) for s in range(b)]
+    stacked = stack_params(batch)
+    vrun = jax.jit(jax.vmap(lambda p: esn_fn.run(p, u, method="chunked")))
+    srun = jax.jit(lambda p: esn_fn.run(p, u, method="chunked"))
+
+    def vmap_run():
+        return vrun(stacked)
+
+    def loop_run():
+        return [srun(p) for p in batch]
+
+    vmap_us = _util.timeit(vmap_run, reps=5, warmup=2)
+    loop_us = _util.timeit(loop_run, reps=5, warmup=2)
+    res["batch_run"] = {"vmap_us": vmap_us, "loop_us": loop_us}
+    tok = b * t
+    rows.append(_util.csv_row("params_api.batch.loop", loop_us,
+                              f"tok_s={tok / (loop_us * 1e-6):.0f}"))
+    rows.append(_util.csv_row(
+        "params_api.batch.vmap", vmap_us,
+        f"tok_s={tok / (vmap_us * 1e-6):.0f};"
+        f"speedup_vs_loop=x{loop_us / vmap_us:.2f}"))
+
+    # sanity: identical numerics across all paths
+    ref = np.asarray(facade_run())
+    assert np.allclose(np.asarray(jit_run()), ref, atol=1e-10)
+    assert np.allclose(np.asarray(vmap_run()[0]),
+                       np.asarray(srun(batch[0])), atol=1e-10)
+
+    _util.save_artifact("params_api.json", res)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(quick=True):
+        print(r)

@@ -14,7 +14,7 @@ import traceback
 import jax
 
 MODULES = ["stepcost", "scan_parallel", "mso", "memory_capacity",
-           "mc_connectivity", "roofline", "serve_engine"]
+           "mc_connectivity", "roofline", "serve_engine", "params_api"]
 
 
 def main() -> None:

@@ -16,9 +16,9 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.esn import ESNConfig, LinearESN
+from repro.core import esn as esn_fn
+from repro.core.esn import ESNConfig
 from repro.serve import ReservoirEngine
 
 from repro.data.signals import mso_series
@@ -29,10 +29,10 @@ from . import _util
 def _build(n):
     cfg = ESNConfig(n=n, spectral_radius=0.95, leak=0.9, input_scaling=0.5,
                     ridge_alpha=1e-8, seed=0)
-    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
     sig = mso_series(3, 2001)
-    model.fit(sig[:-1, None], sig[1:, None], washout=100)
-    return model, sig
+    readout = esn_fn.fit(params, sig[:-1, None], sig[1:, None], washout=100)
+    return params, readout, sig
 
 
 def main(quick: bool = False):
@@ -41,7 +41,7 @@ def main(quick: bool = False):
     prompt_t = 256 if quick else 1024
     gen_t = 32 if quick else 128
     sessions = 2 * slots
-    model, sig = _build(n)
+    params, readout, sig = _build(n)
     rng = np.random.default_rng(0)
     prompts = [sig[o:o + prompt_t, None] for o in
                rng.integers(0, len(sig) - prompt_t, size=sessions)]
@@ -51,7 +51,7 @@ def main(quick: bool = False):
     rows = []
 
     # ---------------- prefill: engine scan vs per-token lock-step loop
-    eng = ReservoirEngine(model, max_slots=slots)
+    eng = ReservoirEngine(params, max_slots=slots, readout=readout)
     for s in range(slots):
         eng.add_session(s)
 
@@ -63,7 +63,7 @@ def main(quick: bool = False):
 
     eng_pre_us = _util.timeit(engine_prefill, reps=3, warmup=1)
 
-    lock = ReservoirEngine(model, max_slots=slots)
+    lock = ReservoirEngine(params, max_slots=slots, readout=readout)
     for s in range(slots):
         lock.add_session(s)
 
@@ -115,7 +115,7 @@ def main(quick: bool = False):
         f"engine_speedup=x{lock_dec_us / eng_dec_us:.2f}"))
 
     # ---------------- full lifecycle with queued admission
-    life_eng = ReservoirEngine(model, max_slots=slots)
+    life_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
 
     def lifecycle():
         e = life_eng

@@ -1,8 +1,10 @@
-"""Quickstart: the paper in 60 lines.
+"""Quickstart: the paper in 60 lines, on the pytree-native param API.
 
-Builds a standard Linear ESN and its diagonalized twin on the MSO-3 task,
-shows EWT/EET/DPG all reproduce the standard model, then free-runs the
-trained reservoir closed-loop.
+A model is an immutable param struct (``StandardParams`` / ``DiagParams``)
+plus pure functions over it — build on the MSO-3 task, show EWT/EET/DPG all
+reproduce the standard model, then free-run the trained reservoir
+closed-loop.  Everything here is jit/vmap-able because the structs are
+registered pytrees.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +13,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import ESNConfig, LinearESN
+from repro.core import ESNConfig, LinearESN, esn
 from repro.data.signals import mso_series
 
 
@@ -25,37 +27,44 @@ def main():
     cfg = ESNConfig(n=100, spectral_radius=0.95, leak=1.0, input_scaling=0.1,
                     ridge_alpha=1e-9, seed=0)
 
-    def rmse(model, **kw):
-        pred = np.asarray(model.predict(u, **kw))[700:]
+    def rmse(params, readout, **kw):
+        pred = np.asarray(esn.predict(params, readout, u, **kw))[700:]
         return float(np.sqrt(np.mean((pred - y[700:]) ** 2)))
 
-    # 1. the O(N^2) baseline
-    std = LinearESN.standard(cfg).fit(u[:400], y[:400], washout=100)
-    print(f"standard  (O(N^2) step)   test RMSE = {rmse(std):.3e}")
+    # 1. the O(N^2) baseline: params struct + pure ridge fit
+    std = esn.standard_params(cfg)
+    ro_std = esn.fit(std, u[:400], y[:400], washout=100)
+    print(f"standard  (O(N^2) step)   test RMSE = {rmse(std, ro_std):.3e}")
 
-    # 2. EWT: same trained readout, transplanted into the eigenbasis -> O(N)
-    ewt = LinearESN.diagonalized(cfg).ewt_from(std)
-    print(f"EWT       (O(N)   step)   test RMSE = {rmse(ewt):.3e}")
+    # 2. EWT: same trained readout, transplanted into the eigenbasis -> O(N).
+    # The transplant needs the eigenbasis, which the LinearESN facade keeps.
+    dia = LinearESN.diagonalized(cfg)
+    ro_ewt = esn.ewt_readout(dia.basis, cfg, ro_std)
+    print(f"EWT       (O(N)   step)   test RMSE = "
+          f"{rmse(dia.params, ro_ewt):.3e}")
 
     # 3. EET: trained directly in the eigenbasis (Eq. 14 metric)
-    eet = LinearESN.diagonalized(cfg).fit(u[:400], y[:400], washout=100)
-    print(f"EET       (O(N)   step)   test RMSE = {rmse(eet):.3e}")
+    ro_eet = esn.fit(dia.params, u[:400], y[:400], washout=100)
+    print(f"EET       (O(N)   step)   test RMSE = "
+          f"{rmse(dia.params, ro_eet):.3e}")
 
     # 4. DPG: never build W at all — sample the spectrum (noisy golden).
     # Algorithm 3 adds noise AFTER radius scaling, so sigma must stay small
     # relative to 1 - sr for open-loop stability (the paper's grid search
     # handles this; sigma=0.2 is exercised in benchmarks/mso.py).
-    dpg = LinearESN.dpg(cfg, "noisy_golden", sigma=0.03).fit(
-        u[:400], y[:400], washout=100)
-    print(f"DPG       (no W, no eig)  test RMSE = {rmse(dpg):.3e}")
+    dpg = esn.dpg_params(cfg, "noisy_golden", sigma=0.03)
+    ro_dpg = esn.fit(dpg, u[:400], y[:400], washout=100)
+    print(f"DPG       (no W, no eig)  test RMSE = {rmse(dpg, ro_dpg):.3e}")
 
-    # 5. Appendix B: state collection parallelized over time
-    par = np.asarray(eet.run(u, method="associative"))
-    seq = np.asarray(eet.run(u, method="sequential"))
+    # 5. Appendix B: state collection parallelized over time — and because
+    # params are a pytree, the whole run jits with the struct as an argument.
+    par = np.asarray(jax.jit(
+        lambda p, x: esn.run(p, x, method="associative"))(dia.params, u))
+    seq = np.asarray(esn.run(dia.params, u, method="sequential"))
     print(f"time-parallel scan max err = {np.abs(par - seq).max():.2e}")
 
-    # 6. closed-loop generation from the diagonal model
-    gen = np.asarray(eet.generate(100, u[:400], y[:400]))
+    # 6. closed-loop generation from the diagonal model (pure function)
+    gen = np.asarray(esn.generate(dia.params, ro_eet, 100, u[:400], y[:400]))
     err = float(np.sqrt(np.mean((gen[:50] - y[400:450]) ** 2)))
     print(f"closed-loop 50-step RMSE  = {err:.3e}")
 

@@ -14,7 +14,8 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core.esn import ESNConfig, LinearESN  # noqa: E402
+from repro.core import esn  # noqa: E402
+from repro.core.esn import ESNConfig  # noqa: E402
 from repro.data.signals import mso_series  # noqa: E402
 from repro.serve import ReservoirEngine, resolve_method  # noqa: E402
 
@@ -24,14 +25,15 @@ def mso(t, k=2):
 
 
 def main():
-    # A DPG reservoir (no W ever built) trained to continue the MSO signal.
+    # A DPG reservoir (no W ever built) trained to continue the MSO signal:
+    # an immutable DiagParams pytree + a pure-function-trained Readout.
     cfg = ESNConfig(n=256, spectral_radius=0.95, leak=0.9, input_scaling=0.5,
                     ridge_alpha=1e-9, seed=3)
-    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
+    params = esn.dpg_params(cfg, "noisy_golden", sigma=0.1)
     sig = mso(2001)
-    model.fit(sig[:-1, None], sig[1:, None], washout=100)
+    readout = esn.fit(params, sig[:-1, None], sig[1:, None], washout=100)
 
-    engine = ReservoirEngine(model, max_slots=2)
+    engine = ReservoirEngine(params, max_slots=2, readout=readout)
     print(f"engine: {engine.max_slots} slots, N={cfg.n} "
           f"(prefill backend for T=400: "
           f"{resolve_method(400)!r})")

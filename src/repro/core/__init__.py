@@ -1,10 +1,21 @@
-"""Core library: the paper's diagonalization-based linear reservoir optimization."""
-from . import basis, esn, ridge, scan, spectral
+"""Core library: the paper's diagonalization-based linear reservoir optimization.
+
+The model API is pytree-native: immutable param structs (``params``) + pure
+functions over them (``esn``), with scan-backend selection in ``dispatch``.
+"""
+from . import basis, dispatch, esn, params, ridge, scan, spectral
 from .basis import EigenBasis
-from .esn import ESNConfig, LinearESN
+from .dispatch import resolve_method, run_scan_q
+from .esn import (LinearESN, diag_params, dpg_params, ewt_readout, fit,
+                  generate, predict, run, standard_params)
+from .params import DiagParams, ESNConfig, Readout, StandardParams, stack_params
 from .spectral import Spectrum, dpg
 
 __all__ = [
-    "basis", "esn", "ridge", "scan", "spectral",
+    "basis", "dispatch", "esn", "params", "ridge", "scan", "spectral",
     "EigenBasis", "ESNConfig", "LinearESN", "Spectrum", "dpg",
+    "StandardParams", "DiagParams", "Readout", "stack_params",
+    "standard_params", "diag_params", "dpg_params", "ewt_readout",
+    "run", "fit", "predict", "generate",
+    "resolve_method", "run_scan_q",
 ]

@@ -1,0 +1,116 @@
+"""Backend auto-dispatch for the diagonal reservoir scan.
+
+One place that decides *how* the O(N) recurrence h_t = Lambda (.) h_{t-1} + x_t
+is executed, from the shape of the work — instead of hard-coded ``method=``
+strings scattered across callers:
+
+* **decode / short prefill** (small T)  -> ``sequential``: lax.scan has the
+  lowest per-step constant and no fix-up passes; at T ~ O(1) everything else
+  is pure overhead.
+* **long prefill on TPU**               -> ``pallas``: the chunked VMEM-carry
+  kernel (``kernels.diag_scan_pallas_raw`` via ``kernels.ops.diag_scan``) —
+  per-chunk HBM traffic is exactly the inputs/outputs.
+* **long prefill elsewhere**            -> ``chunked``: the work-efficient
+  two-pass scan that mirrors the kernel schedule.
+* **mid-size T**                        -> ``associative`` fallback: O(log T)
+  depth without the chunk bookkeeping, best when T is too short to amortize
+  chunk fix-ups but too long for a serial scan.
+
+All entry points take Q-basis (Appendix-A realified) operands; ``run_scan_q``
+is the single execution funnel used by the ``core.esn`` pure functions and
+``serve.engine.ReservoirEngine``.  This module lives in ``core`` (it depends
+only on ``core.scan`` + ``kernels``); ``serve.dispatch`` re-exports it for
+compatibility.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import scan as scan_mod
+from ..kernels import ops as kernel_ops
+
+__all__ = [
+    "SEQUENTIAL_MAX_T",
+    "PALLAS_MIN_T",
+    "resolve_method",
+    "run_scan_q",
+]
+
+# Thresholds in steps along the time axis.  Calibrated coarsely: the
+# crossover constants differ per backend, but the *ordering* of regimes does
+# not, and every method computes identical numerics — a wrong guess costs
+# time, never correctness.
+SEQUENTIAL_MAX_T = 32     # decode & short prefill: serial scan wins
+PALLAS_MIN_T = 512        # long prefill on TPU: the Pallas kernel
+
+
+def resolve_method(t: int, *, backend: Optional[str] = None,
+                   chunk: int = 128) -> str:
+    """Pick a scan backend from the time extent of the work.
+
+    ``t``: steps along time; ``backend``: jax platform ("tpu"/"cpu"/"gpu"),
+    auto-detected when None; ``chunk``: chunk size the chunked/Pallas
+    schedules would use — below two chunks the fix-up passes don't pay for
+    themselves and the associative scan wins.  Returns one of
+    "sequential" | "associative" | "chunked" | "pallas".
+    """
+    if t <= SEQUENTIAL_MAX_T:
+        return "sequential"
+    if backend is None:
+        backend = jax.default_backend()
+    if t >= PALLAS_MIN_T and backend == "tpu":
+        return "pallas"
+    if t >= 2 * chunk:
+        return "chunked"
+    return "associative"
+
+
+def _pallas_scan_q(lam_q, x_q, n_real: int, h0, *, time_axis: int):
+    """Q-basis scan through the Pallas kernel wrapper.
+
+    Real eigen-slots ride along as zero-imaginary complex lanes so one kernel
+    launch covers the whole state vector: a (N,) packed Q coefficient vector
+    becomes (n_real + n_pairs,) complex, x/h likewise.
+    """
+    xt = jnp.moveaxis(x_q, time_axis, -2)          # (..., T, N)
+    lead = xt.shape[:-2]
+    t, n = xt.shape[-2], xt.shape[-1]
+    nr = n_real
+
+    def to_complex(v):
+        """Packed Q layout -> one complex vector (reals ride with zero imag)."""
+        vr, vc = scan_mod.q_split(v, nr)
+        return jnp.concatenate(
+            [jax.lax.complex(vr, jnp.zeros_like(vr)), vc], axis=-1)
+
+    a_c = to_complex(lam_q)
+    x_c = to_complex(xt.reshape((-1, t, n)))       # (B, T, nc)
+    h_c = None
+    if h0 is not None:
+        h_c = to_complex(jnp.broadcast_to(h0, lead + (n,)).reshape((-1, n)))
+    out = kernel_ops.diag_scan(a_c, x_c, h_c)      # (B, T, nc) complex
+    hs = scan_mod.q_merge(out[..., :nr].real, out[..., nr:], x_q.dtype)
+    return jnp.moveaxis(hs.reshape(lead + (t, n)), -2, time_axis)
+
+
+def run_scan_q(lam_q, x_q, n_real: int, h0=None, *, method: str = "auto",
+               chunk: int = 128, time_axis: int = -2,
+               backend: Optional[str] = None):
+    """Execute the Q-basis diagonal scan with an auto-selected backend.
+
+    ``x_q``: (..., T, N) with time on ``time_axis``; ``lam_q``: (N,) packed
+    (see ``core.scan.pack_lambda_q``); ``h0``: optional (..., N) initial state.
+    ``method="auto"`` resolves via :func:`resolve_method`; explicit method
+    strings pass straight through (so callers can still pin a backend).
+    """
+    if method == "auto":
+        xt_shape = jnp.shape(x_q)
+        t = xt_shape[time_axis % len(xt_shape)]
+        method = resolve_method(t, backend=backend, chunk=chunk)
+    if method == "pallas":
+        return _pallas_scan_q(lam_q, x_q, n_real, h0, time_axis=time_axis)
+    return scan_mod.diag_scan_q(lam_q, x_q, n_real, h0, method=method,
+                                chunk=chunk, time_axis=time_axis)

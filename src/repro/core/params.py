@@ -1,0 +1,157 @@
+"""Immutable, pytree-registered reservoir parameter structs.
+
+The paper's observation — a linear ESN is *fully described* by a small bundle
+of arrays — made concrete as frozen dataclasses registered with JAX:
+
+* ``StandardParams`` — dense ``(W, W_in, W_fb)``: the O(N^2) baseline.
+* ``DiagParams``     — the diagonalized model in the real Q basis (Appendix A):
+  packed eigenvalues ``lam_q``, Q-transformed input/feedback maps, and the EET
+  regularizer metric ``Q^T Q``.
+* ``Readout``        — the trained readout ``W_out``, kept separate from the
+  reservoir so (re)fitting never touches the recurrence parameters.
+
+Array fields are pytree *leaves*; ``cfg`` (an :class:`ESNConfig`) and the
+``n_real`` layout split are static aux data baked into the treedef.  That
+makes every struct a first-class citizen of ``jax.jit`` / ``jax.vmap`` /
+``shard_map``:
+
+    params = diag_params(cfg)                     # core.esn builder
+    readout = fit(params, u, y)                   # pure function -> Readout
+    y = jax.jit(predict)(params, readout, u)      # params are just pytrees
+
+and a *batch* of independently-seeded reservoirs is one stacked pytree
+(:func:`stack_params`) that a single ``vmap``-ed trace can serve.
+
+All structs are immutable (frozen dataclasses): evolve them with
+``dataclasses.replace``, never ``setattr``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ESNConfig",
+    "Readout",
+    "StandardParams",
+    "DiagParams",
+    "stack_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ESNConfig:
+    """Hyperparameters of a linear ESN (static: rides in treedefs as aux)."""
+    n: int
+    d_in: int = 1
+    d_out: int = 1
+    spectral_radius: float = 0.9
+    leak: float = 1.0
+    input_scaling: float = 1.0
+    connectivity: float = 1.0
+    input_connectivity: float = 1.0
+    use_bias: bool = True
+    use_feedback: bool = False
+    feedback_scaling: float = 1.0
+    ridge_alpha: float = 1e-8
+    seed: int = 0
+
+    @property
+    def n_features(self) -> int:
+        return self.n + int(self.use_bias) + (self.d_out if self.use_feedback else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Readout:
+    """Trained readout W_out (N', D_out).  N' = cfg.n_features.
+
+    A distinct ``Readout`` object per fit: callers key caches on the struct's
+    identity — an immutable bundle can never go stale underneath them.
+    """
+    w_out: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class StandardParams:
+    """Dense-W reservoir (leak already folded in: W = lr W_raw + (1-lr) I)."""
+    w: jnp.ndarray                    # (N, N)
+    w_in: jnp.ndarray                 # (D_in, N), pre-scaled by leak
+    w_fb: Optional[jnp.ndarray]       # (D_out, N) or None
+    cfg: ESNConfig = dataclasses.field(metadata={"static": True})
+
+    @property
+    def mode(self) -> str:
+        return "standard"
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class DiagParams:
+    """Diagonalized reservoir in the real Q basis (paper Appendix A).
+
+    ``lam_q``: (N,) packed eigenvalues ``[reals | (re, im) pairs]`` (see
+    ``core.scan.pack_lambda_q``); ``win_q``/``wfb_q``: input/feedback maps
+    transformed into Q; ``qtq``: the EET metric Q^T Q (Eq. 29); ``n_real``:
+    where the real slots end and the (re, im) pairs begin — static layout.
+    """
+    lam_q: jnp.ndarray                # (N,)
+    win_q: jnp.ndarray                # (D_in, N)
+    wfb_q: Optional[jnp.ndarray]      # (D_out, N) or None
+    qtq: jnp.ndarray                  # (N, N)
+    cfg: ESNConfig = dataclasses.field(metadata={"static": True})
+    n_real: int = dataclasses.field(default=0, metadata={"static": True})
+
+    @property
+    def mode(self) -> str:
+        return "diag"
+
+    @property
+    def dtype(self):
+        return self.lam_q.dtype
+
+
+for _cls, _data, _meta in (
+    (Readout, ("w_out",), ()),
+    (StandardParams, ("w", "w_in", "w_fb"), ("cfg",)),
+    (DiagParams, ("lam_q", "win_q", "wfb_q", "qtq"), ("cfg", "n_real")),
+):
+    jax.tree_util.register_dataclass(_cls, list(_data), list(_meta))
+
+
+def stack_params(params_seq):
+    """Stack a sequence of same-config param structs along a new leading axis.
+
+    The result is one pytree whose leaves are ``(B, ...)`` arrays — the input
+    to ``vmap``-ed runs and the batched ``ReservoirEngine`` (one compiled
+    decode trace serving B independently-seeded reservoirs).  Static aux
+    (cfg, n_real) must be identical across the batch; differing treedefs
+    raise.
+    """
+    params_seq = list(params_seq)
+    if not params_seq:
+        raise ValueError("stack_params needs at least one struct")
+    head = params_seq[0]
+    # Independently-*seeded* reservoirs are the whole point of a batch, so
+    # cfg.seed may differ (the arrays are already materialized); every other
+    # static field must agree.  The stacked struct carries the head's cfg.
+    norm = [head]
+    for p in params_seq[1:]:
+        if dataclasses.replace(p.cfg, seed=head.cfg.seed) != head.cfg:
+            raise ValueError(
+                "stack_params: mismatched configs across the batch — only "
+                "cfg.seed may differ between stacked reservoirs "
+                f"({p.cfg} vs {head.cfg})")
+        p = dataclasses.replace(p, cfg=head.cfg)
+        if (jax.tree_util.tree_structure(p)
+                != jax.tree_util.tree_structure(head)):
+            raise ValueError(
+                "stack_params: mismatched static aux (n_real / feedback "
+                "presence) across the batch")
+        norm.append(p)
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *norm)

@@ -30,22 +30,47 @@ import numpy as np
 
 # ---------------------------------------------------------------- reservoir
 def serve_reservoir(args) -> None:
-    """Streaming session serving through ``serve.engine.ReservoirEngine``."""
+    """Streaming session serving through ``serve.engine.ReservoirEngine``.
+
+    The model is the pytree-native param API: an immutable ``DiagParams``
+    struct from ``dpg_params`` plus a pure-function-trained ``Readout``.
+    ``--ensemble`` builds one independently-seeded reservoir *per slot*
+    (``stack_params``) and serves them all from a single ``vmap``-ed decode
+    trace (``ReservoirEngine.from_param_batch``)."""
     jax.config.update("jax_enable_x64", True)
-    from repro.core.esn import ESNConfig, LinearESN
+    import dataclasses
+
+    from repro.core import esn as esn_fn
+    from repro.core.esn import ESNConfig
+    from repro.core.params import Readout, stack_params
     from repro.data.signals import mso_series
     from repro.serve import ReservoirEngine
 
     cfg = ESNConfig(n=args.n, spectral_radius=0.95, leak=0.9,
                     input_scaling=0.5, ridge_alpha=1e-8, seed=args.seed)
-    model = LinearESN.dpg(cfg, "noisy_golden", sigma=0.1)
     # Signal long enough for any requested prompt window.
     train_t = max(2000, args.prompt_len + 512)
     sig = mso_series(3, train_t + 1)
-    model.fit(sig[:-1, None], sig[1:, None], washout=100)
+    u_train, y_train = sig[:-1, None], sig[1:, None]
+
+    if args.ensemble:
+        batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
+                                   "noisy_golden", sigma=0.1)
+                 for i in range(args.slots)]
+        params = stack_params(batch)
+        readout = Readout(jnp.stack([
+            esn_fn.fit(p, u_train, y_train, washout=100).w_out
+            for p in batch]))
+        engine = ReservoirEngine.from_param_batch(params, readout=readout)
+        print(f"ensemble mode: {args.slots} independently-seeded reservoirs, "
+              f"one vmap-ed decode trace")
+    else:
+        params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
+        readout = esn_fn.fit(params, u_train, y_train, washout=100)
+        engine = ReservoirEngine(params, max_slots=args.slots,
+                                 readout=readout)
 
     rng = np.random.default_rng(args.seed)
-    engine = ReservoirEngine(model, max_slots=args.slots)
     # Untimed warmup wave: compile the prefill/decode traces so the reported
     # tok/s measures serving throughput, not XLA compilation.
     engine.add_session("warm")
@@ -164,6 +189,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--n", type=int, default=512,
                     help="reservoir size for --reservoir")
+    ap.add_argument("--ensemble", action="store_true",
+                    help="one independently-seeded reservoir per slot, "
+                         "served by a single vmap-over-params decode trace")
     args = ap.parse_args()
     if args.reservoir:
         serve_reservoir(args)

@@ -1,10 +1,12 @@
 """Serving subsystem: stateful streaming reservoir sessions.
 
-``dispatch`` — shape-heuristic backend selection for the diagonal scan
-(sequential / associative / chunked / Pallas), the single execution funnel.
 ``engine``   — ``ReservoirEngine``: slot-based continuous batching over
 persistent per-session Q-basis state (add_session / prefill / decode_step /
-evict, plus closed-loop generation).
+evict, plus closed-loop generation), pytree-native: it holds immutable
+``core.params`` structs and can serve a *batch* of reservoirs from one
+``vmap``-ed trace (``ReservoirEngine.from_param_batch``).
+``dispatch`` — compatibility re-export of ``core.dispatch`` (the
+shape-heuristic scan-backend selection moved down into core).
 """
 from . import dispatch, engine
 from .dispatch import resolve_method, run_scan_q

@@ -10,7 +10,7 @@ state end-to-end:
   into free slots (continuous batching) and queue FIFO when full.
 * **add_session / prefill / decode_step / evict** — the session lifecycle.
   Prefill runs the time-parallel scan (backend picked by
-  ``serve.dispatch.run_scan_q``: chunked / Pallas for long prompts); decode
+  ``core.dispatch.run_scan_q``: chunked / Pallas for long prompts); decode
   advances every active slot with one batched element-wise step.
 * **closed loop** — ``decode_closed_loop`` feeds predictions back as next
   inputs (output-as-input autonomy, optionally through the trained feedback
@@ -20,6 +20,15 @@ state end-to-end:
 Eviction returns the exact slot state; re-admitting it later (``h0=``)
 continues the trajectory bit-for-bit — the recurrence is Markov in ``(state,
 y_prev)``, so sessions can be parked in a KV-store between bursts.
+
+The engine is **pytree-native**: it holds an immutable param struct
+(``core.params.StandardParams`` / ``DiagParams``) plus a ``Readout``, and its
+compiled step functions take them as *arguments* — the structs are ordinary
+pytrees, so the same machinery extends to a **batch of reservoirs**:
+:meth:`ReservoirEngine.from_param_batch` takes a stacked param struct
+(``core.params.stack_params``) and serves ``B`` independently-seeded
+reservoirs — slot ``i`` runs reservoir ``i`` — from ONE ``vmap``-ed decode
+trace.  That is the stepping stone to slot-arena sharding (see ROADMAP).
 
 Works for both model modes: ``diag`` (Q-basis, ``realified_multiply`` step —
 the production path) and ``standard`` (dense O(N^2) step — the reference
@@ -35,7 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import dispatch
+from ..core import dispatch
+from ..core import esn as esn_fn
+from ..core.params import DiagParams, Readout, StandardParams
 
 __all__ = ["SessionStats", "ReservoirEngine"]
 
@@ -48,51 +59,123 @@ class SessionStats:
     tokens_decoded: int = 0
 
 
+def _coerce_model(model, readout):
+    """Accept a param struct or a ``LinearESN`` facade; normalize the readout."""
+    if isinstance(model, (StandardParams, DiagParams)):
+        params = model
+    elif hasattr(model, "params") and isinstance(
+            getattr(model, "params"), (StandardParams, DiagParams)):
+        params = model.params          # LinearESN facade (deprecated entry)
+        if readout is None:
+            readout = model.readout
+    else:
+        mode = getattr(model, "mode", None)
+        raise ValueError(f"unknown model mode {mode!r}")
+    if readout is not None and not isinstance(readout, Readout):
+        readout = Readout(jnp.asarray(readout))
+    return params, readout
+
+
 class ReservoirEngine:
-    """Batched multi-session serving on top of a built ``LinearESN``.
+    """Batched multi-session serving over an immutable reservoir param struct.
 
-    ``model`` is a ``core.esn.LinearESN`` in either mode; a trained readout
-    (``model.w_out``) is required for predictions / closed-loop decode but not
-    for pure state streaming.
+    ``model``: a ``core.params`` struct (``StandardParams`` / ``DiagParams``)
+    or — deprecated — a ``core.esn.LinearESN`` facade, whose params/readout
+    are taken.  ``readout``: optional ``core.params.Readout`` (or bare W_out
+    array); required for predictions / closed-loop decode but not for pure
+    state streaming.
 
-    The engine **snapshots the model at construction** (weights and readout
-    are baked into its compiled step functions) — build the engine *after*
-    ``fit()``/``ewt_from()``; later mutations of the model are not picked up.
+    The engine **snapshots (params, readout) at construction** — both are
+    immutable structs, so nothing can mutate underneath the compiled step
+    functions; build the engine *after* fitting.
     """
 
-    def __init__(self, model, max_slots: int = 8):
-        if model.mode not in ("standard", "diag"):
-            raise ValueError(f"unknown model mode {model.mode!r}")
-        self.model = model
-        self.w_out = model.w_out  # snapshot: consistent with the jit traces
-        self.cfg = model.cfg
+    def __init__(self, model, max_slots: int = 8, *,
+                 readout: Optional[Readout] = None, _param_batch: bool = False):
+        self.params, self.readout = _coerce_model(model, readout)
+        self.cfg = self.params.cfg
+        self._batched = bool(_param_batch)
         self.max_slots = int(max_slots)
+        if self.max_slots < 1:
+            raise ValueError(
+                f"max_slots must be >= 1, got {self.max_slots} (an engine "
+                f"with 0 slots queues every session forever)")
+        if self._batched:
+            b = jax.tree_util.tree_leaves(self.params)[0].shape[0]
+            if self.max_slots != b:
+                raise ValueError(
+                    f"param batch of {b} reservoirs needs max_slots == {b}, "
+                    f"got {self.max_slots} (slot i runs reservoir i)")
         n = self.cfg.n
-        if model.mode == "diag":
-            self._dtype = model.lam_q.dtype
-        else:
-            self._dtype = model.w.dtype
+        self._dtype = self.params.dtype
         self.states = jnp.zeros((self.max_slots, n), self._dtype)
         self.y_prev = jnp.zeros((self.max_slots, self.cfg.d_out), self._dtype)
         self._slots: list = [None] * self.max_slots  # slot -> session id
         self.sessions: Dict[Hashable, SessionStats] = {}
         self.pending: collections.deque = collections.deque()
         self._decode_jit = jax.jit(self._decode_batch)
-        self._closed_jit = jax.jit(self._closed_loop, static_argnums=3)
+        self._closed_jit = jax.jit(self._closed_loop, static_argnums=5)
         self._prefill_jit = jax.jit(
             self._prefill_compute,
             static_argnames=("method", "chunk", "want_outputs"))
 
+    @classmethod
+    def from_param_batch(cls, params, readout: Optional[Readout] = None
+                         ) -> "ReservoirEngine":
+        """Engine over a *batch* of independently-seeded reservoirs.
+
+        ``params``: a stacked struct (``core.params.stack_params``) whose
+        leaves carry a leading axis ``B``; ``readout``: optional stacked
+        ``Readout`` with ``w_out`` of shape (B, N', D_out) — e.g. from
+        ``jax.vmap(core.esn.fit, ...)``.  Slot ``i`` is permanently bound to
+        reservoir ``i``; one jitted, ``vmap``-over-params decode trace
+        advances all of them per token.
+        """
+        b = jax.tree_util.tree_leaves(params)[0].shape[0]
+        return cls(params, max_slots=b, readout=readout, _param_batch=True)
+
+    # -------------------------------------------------------------- compat
+    @property
+    def w_out(self):
+        return None if self.readout is None else self.readout.w_out
+
+    @property
+    def param_batched(self) -> bool:
+        return self._batched
+
     # ------------------------------------------------------------- lifecycle
-    def add_session(self, sid: Hashable, h0=None, y0=None) -> Optional[int]:
+    def add_session(self, sid: Hashable, h0=None, y0=None, *,
+                    slot: Optional[int] = None) -> Optional[int]:
         """Admit ``sid`` into a free slot; queue FIFO if the arena is full.
 
         ``h0``: optional initial state in the engine's native layout (Q basis
         for diag models) — e.g. a state returned by :meth:`evict`.  Returns
         the slot index, or None when queued.
+
+        ``slot``: pin the session to a specific slot (never queues — raises
+        if that slot is taken).  In a param-batched engine slot ``i`` IS
+        reservoir ``i``, so a parked state is only meaningful in the slot it
+        was evicted from: re-admission with ``h0`` there *requires* ``slot=``
+        — otherwise the state would silently continue under a different
+        reservoir's weights.
         """
         if sid in self.sessions or any(s == sid for s, _, _ in self.pending):
             raise KeyError(f"session {sid!r} already admitted")
+        if slot is not None:
+            if not 0 <= slot < self.max_slots:
+                raise ValueError(f"slot {slot} out of range "
+                                 f"[0, {self.max_slots})")
+            if self._slots[slot] is not None:
+                raise ValueError(
+                    f"slot {slot} is occupied by {self._slots[slot]!r} "
+                    f"(pinned admission never queues)")
+            return self._place(sid, slot, h0, y0)
+        if self._batched and h0 is not None:
+            raise ValueError(
+                "param-batched engine: a parked state belongs to the "
+                "reservoir (= slot) it was evicted from — re-admit with "
+                "slot=<original slot> so it cannot land under different "
+                "weights")
         try:
             slot = self._slots.index(None)
         except ValueError:
@@ -172,44 +255,59 @@ class ReservoirEngine:
         return np.asarray(self.states[self._active(sid).slot])
 
     # --------------------------------------------------------------- prefill
-    def _prefill_compute(self, h0, y0, u, y_teacher, *, method: str,
-                         chunk: int, want_outputs: bool):
+    def _prefill_compute(self, params, w_out, slot, h0, y0, u, y_teacher, *,
+                         method: str, chunk: int, want_outputs: bool):
         """Jitted prompt ingestion: scan + (optional) readout.  Retraces per
         distinct (T, method) — prompt shapes are the natural bucketing.
+
+        ``slot`` is a *traced* index: in a param-batched engine the slot's
+        reservoir is sliced out of the stack INSIDE the trace, so one
+        compiled prefill serves every slot and XLA dead-code-eliminates
+        leaves the computation never touches (e.g. the (N, N) ``qtq``
+        metric) instead of gathering them per call.
 
         ``want_outputs=False`` skips the full (T, D_out) readout — warmup
         paths that only need the final state + feedback seed save an
         O(T * N) matmul and a (T, n_features) materialization."""
-        m = self.model
+        if self._batched:
+            params = jax.tree_util.tree_map(
+                lambda leaf: jax.lax.dynamic_index_in_dim(
+                    leaf, slot, keepdims=False), params)
+            if w_out is not None:
+                w_out = jax.lax.dynamic_index_in_dim(w_out, slot,
+                                                     keepdims=False)
         y_shift = None
         if self.cfg.use_feedback:
             y_shift = jnp.concatenate([y0[None], y_teacher[:-1]], axis=0)
-        states = m.scan_states(m.drive(u, y_shift), h0, method=method,
-                               chunk=chunk)
-        if self.w_out is None:
+        states = esn_fn.scan_states(params, esn_fn.drive(params, u, y_shift),
+                                    h0, method=method, chunk=chunk)
+        if w_out is None:
             return states[-1], states, None
         if want_outputs:
-            x = m.assemble_features(states, y_shift)
-            y = x @ self.w_out
+            x = esn_fn.assemble_features(params, states, y_shift)
+            y = x @ w_out
             return states[-1], y, y[-1]
         # Last-step readout only: O(N) — just the closed-loop feedback seed.
-        x_last = m.assemble_features(
-            states[-1:], None if y_shift is None else y_shift[-1:])
-        return states[-1], None, (x_last @ self.w_out)[0]
+        x_last = esn_fn.assemble_features(
+            params, states[-1:], None if y_shift is None else y_shift[-1:])
+        return states[-1], None, (x_last @ w_out)[0]
 
     def prefill(self, sid: Hashable, u, y_teacher=None, *,
                 method: str = "auto", chunk: int = 128,
                 want_outputs: bool = True):
         """Run ``sid``'s slot through a (T, D_in) prompt with the
-        time-parallel scan (backend from ``dispatch``), starting from the
-        slot's current state.  Returns per-step predictions (T, D_out) when a
-        readout is trained, else the (T, N) states.
+        time-parallel scan (backend from ``core.dispatch``), starting from
+        the slot's current state.  Returns per-step predictions (T, D_out)
+        when a readout is trained, else the (T, N) states.
 
         ``want_outputs=False`` skips the per-step readout and returns None —
         cheaper when the caller only needs the slot warmed up (the feedback
         seed for closed-loop decode is still computed)."""
         st = self._active(sid)
         u = jnp.asarray(u, self._dtype)
+        if u.ndim != 2 or u.shape[-1] != self.cfg.d_in:
+            raise ValueError(
+                f"prompt must be (T, d_in={self.cfg.d_in}), got {u.shape}")
         if u.shape[0] == 0:
             raise ValueError("prefill needs at least one token (got T=0)")
         cfg = self.cfg
@@ -222,11 +320,15 @@ class ReservoirEngine:
                 raise ValueError(
                     f"y_teacher length {y_teacher.shape[0]} != prompt length "
                     f"{u.shape[0]} (one teacher output per prompt token)")
-        else:
-            y_teacher = None
-        if method == "auto" and self.model.mode == "diag":
+        elif y_teacher is not None:
+            raise ValueError(
+                "y_teacher passed to a non-feedback model (cfg.use_feedback "
+                "is False) — it would be silently ignored; drop it or build "
+                "the model with use_feedback=True")
+        if method == "auto" and self.params.mode == "diag":
             method = dispatch.resolve_method(int(u.shape[0]), chunk=chunk)
         last, out, y_last = self._prefill_jit(
+            self.params, self.w_out, jnp.asarray(st.slot),
             self.states[st.slot], self.y_prev[st.slot], u, y_teacher,
             method=method, chunk=chunk, want_outputs=want_outputs)
         self.states = self.states.at[st.slot].set(last)
@@ -234,25 +336,38 @@ class ReservoirEngine:
         if y_teacher is not None:
             # Prefill is teacher-forced end-to-end: the teacher's last output
             # is the feedback for the next step (prediction feedback belongs
-            # to the decode paths), keeping parity with LinearESN.run.
+            # to the decode paths), keeping parity with core.esn.run.
             self.y_prev = self.y_prev.at[st.slot].set(y_teacher[-1])
         elif y_last is not None:
             self.y_prev = self.y_prev.at[st.slot].set(y_last)
         return out
 
     # ---------------------------------------------------------------- decode
-    def _step_states(self, states, u, y_prev):
-        """One batched reservoir step over the whole slot arena."""
-        m = self.model
-        return m.step_states(states, m.drive(u, y_prev))
+    def _arena_step(self, params, states, u, y_prev):
+        """One reservoir step over the whole slot arena.  Shared params
+        broadcast over the (B, N) state block; a param *batch* vmaps — one
+        trace, B distinct reservoirs."""
+        fb = self.cfg.use_feedback
+        if self._batched:
+            def one(p, h, ui, yi):
+                return esn_fn.step_states(
+                    p, h, esn_fn.drive(p, ui, yi if fb else None))
+            return jax.vmap(one)(params, states, u, y_prev)
+        return esn_fn.step_states(
+            params, states, esn_fn.drive(params, u, y_prev if fb else None))
 
-    def _decode_batch(self, states, y_prev, u, mask):
-        new = self._step_states(states, u, y_prev)
+    def _apply_readout(self, w_out, x):
+        if self._batched:
+            return jnp.einsum("bf,bfd->bd", x, w_out)
+        return x @ w_out
+
+    def _decode_batch(self, params, w_out, states, y_prev, u, mask):
+        new = self._arena_step(params, states, u, y_prev)
         states = jnp.where(mask[:, None], new, states)
-        if self.w_out is None:
+        if w_out is None:
             return states, y_prev, y_prev
-        x = self.model.assemble_features(states, y_prev)
-        y = x @ self.w_out
+        x = esn_fn.assemble_features(params, states, y_prev)
+        y = self._apply_readout(w_out, x)
         y_out = jnp.where(mask[:, None], y, y_prev)
         return states, y_out, y_out
 
@@ -279,8 +394,9 @@ class ReservoirEngine:
             mask[st.slot] = True
             st.tokens_decoded += 1
         self.states, self.y_prev, y = self._decode_jit(
-            self.states, self.y_prev, jnp.asarray(u), jnp.asarray(mask))
-        if self.w_out is None:
+            self.params, self.w_out, self.states, self.y_prev,
+            jnp.asarray(u), jnp.asarray(mask))
+        if self.readout is None:
             return {}
         y = np.asarray(y)
         return {sid: y[self.sessions[sid].slot] for sid in inputs}
@@ -293,15 +409,14 @@ class ReservoirEngine:
             jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out))
 
     # ----------------------------------------------------------- closed loop
-    def _closed_loop(self, states, y_prev, mask, n_steps: int):
-        w_out = self.w_out
-
+    def _closed_loop(self, params, w_out, states, y_prev, mask,
+                     n_steps: int):
         def step(carry, _):
             states, y = carry
-            new = self._step_states(states, y, y)
+            new = self._arena_step(params, states, y, y)
             states = jnp.where(mask[:, None], new, states)
-            x = self.model.assemble_features(states, y)
-            y_new = x @ w_out
+            x = esn_fn.assemble_features(params, states, y)
+            y_new = self._apply_readout(w_out, x)
             y_new = jnp.where(mask[:, None], y_new, y)
             return (states, y_new), y_new
 
@@ -313,7 +428,7 @@ class ReservoirEngine:
         """Free-running generation: feed each session's prediction back as its
         next input (D_in == D_out).  Decodes all active sessions in lock-step
         (``sids`` restricts the set).  Returns sid -> (n_steps, D_out)."""
-        if self.w_out is None:
+        if self.readout is None:
             raise ValueError("closed-loop decode needs a trained readout")
         if self.cfg.d_in != self.cfg.d_out:
             raise ValueError("closed loop requires d_in == d_out")
@@ -326,8 +441,9 @@ class ReservoirEngine:
             mask[stats[sid].slot] = True
             stats[sid].tokens_decoded += n_steps
         self.states, self.y_prev, ys = self._closed_jit(
-            self.states, self.y_prev, jnp.asarray(mask), int(n_steps))
+            self.params, self.w_out, self.states, self.y_prev,
+            jnp.asarray(mask), int(n_steps))
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
-        # callers (generate, pipelined serving loops) stay async; convert to
-        # host memory on their own schedule.
+        # callers (pipelined serving loops) stay async; convert to host
+        # memory on their own schedule.
         return {sid: ys[:, stats[sid].slot] for sid in targets}

@@ -195,18 +195,28 @@ def test_generate_feedback_mode_seeds_with_teacher_output():
     np.testing.assert_allclose(gen, np.stack(ref), rtol=0, atol=1e-8)
 
 
-def test_generate_reuses_cached_engine_until_refit():
+def test_generate_never_serves_stale_readout():
+    """The readout is a traced argument of one shared jitted generate: refits
+    and in-place ``w_out`` swaps take effect immediately (the old engine-era
+    cache keyed invalidation on ``eng.w_out is not self.w_out`` array
+    identity, which in-place swaps could miss)."""
     sig = _mso(401, k=1)
     u, y = sig[:-1, None], sig[1:, None]
     m = LinearESN.diagonalized(CFG)
     m.fit(u[:300], y[:300], washout=50)
-    m.generate(10, u[:100], y[:100])
-    eng1 = m._gen_engine
-    m.generate(10, u[:100], y[:100])
-    assert m._gen_engine is eng1                  # warm traces reused
-    m.fit(u[:300], y[:300], washout=50, alpha=1e-6)
-    m.generate(10, u[:100], y[:100])
-    assert m._gen_engine is not eng1              # refit invalidates snapshot
+    g1 = np.asarray(m.generate(10, u[:100], y[:100]))
+    g1b = np.asarray(m.generate(10, u[:100], y[:100]))
+    np.testing.assert_array_equal(g1, g1b)        # same readout, same output
+    ro1 = m.readout
+    m.fit(u[:300], y[:300], washout=50, alpha=1e-2)
+    assert m.readout is not ro1                   # refit -> fresh Readout
+    g2 = np.asarray(m.generate(10, u[:100], y[:100]))
+    assert not np.allclose(g2, g1)                # refit visible immediately
+    # In-place w_out swap through the deprecation shim wraps a fresh
+    # immutable Readout; the next generate must reflect it.
+    m.w_out = jnp.asarray(np.asarray(m.w_out) * 2.0)
+    g3 = np.asarray(m.generate(10, u[:100], y[:100]))
+    assert not np.allclose(g3, g2)
 
 
 def test_decode_step_validates_sids_before_mutating():
@@ -311,7 +321,7 @@ def test_closed_loop_matches_dense_hand_loop():
     np.testing.assert_allclose(ys, ys_ref, rtol=0, atol=1e-5)
 
 
-def test_generate_routes_through_engine_and_tracks_signal():
+def test_generate_closed_loop_tracks_signal():
     sig = _mso(501, k=1)
     u, y = sig[:-1, None], sig[1:, None]
     m = LinearESN.diagonalized(
