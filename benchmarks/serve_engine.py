@@ -1,17 +1,25 @@
-"""ReservoirEngine serving throughput vs the old lock-step loop.
+"""Serving-stack throughput: bucketed waves, sharded arena, lock-step baselines.
 
-Measures the two serving phases the engine separates:
+Measures the serving phases the three-layer stack separates:
 
-* **prefill** — engine: one time-parallel scan per session (backend from
-  ``serve.dispatch``) vs lock-step: a per-token python loop over the jit'd
-  batched step (what ``launch/serve.py`` did before the engine existed).
-* **decode**  — engine: ``decode_closed_loop`` (one ``lax.scan`` over the
-  whole slot arena) vs lock-step: per-token python-loop ``decode_step``.
+* **prefill.bucketed vs prefill.sequential** — ONE ``(B, T_bucket)`` wave
+  through ``arena.prefill_wave`` (``submit`` + ``flush``) vs B eager
+  per-session scans (the pre-scheduler engine path).  The acceptance bar:
+  >= 2x at B >= 4 on CPU.
+* **prefill / decode vs lock-step** — engine scan / closed loop vs a
+  per-token python loop over the jit'd batched step (what
+  ``launch/serve.py`` did before the engine existed).
+* **decode.sharded** — the same closed-loop decode with the arena placed on
+  a 1x1 local mesh via ``sharding.rules.plan_arena`` (placement machinery
+  on; with one CPU device this prices the overhead, on a pod it prices the
+  win).
 
-Plus the full session lifecycle (admit -> prefill -> decode -> evict with
+Plus the full session lifecycle (submit -> flush -> decode -> evict with
 queued admission) as sessions/sec.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -19,6 +27,7 @@ import jax
 
 from repro.core import esn as esn_fn
 from repro.core.esn import ESNConfig
+from repro.launch.mesh import make_local_mesh
 from repro.serve import ReservoirEngine
 
 from repro.data.signals import mso_series
@@ -49,6 +58,39 @@ def main(quick: bool = False):
     res = {"n": n, "slots": slots, "prompt_t": prompt_t, "gen_t": gen_t,
            "sessions": sessions}
     rows = []
+
+    # ---------------- prefill: ONE bucketed wave vs B sequential scans
+    wave_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
+
+    def bucketed_prefill():
+        wave_eng.reset()
+        for s in range(slots):
+            wave_eng.submit(s, prompts[s])
+        wave_eng.flush()                 # one (B, T_bucket) prefill_wave
+        return wave_eng.states
+
+    buck_us = _util.timeit(bucketed_prefill, reps=3, warmup=1)
+
+    seq_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
+
+    def sequential_prefill():
+        seq_eng.reset()
+        for s in range(slots):
+            seq_eng.add_session(s)
+            seq_eng.prefill(s, prompts[s], want_outputs=False)
+        return seq_eng.states
+
+    seq_us = _util.timeit(sequential_prefill, reps=3, warmup=1)
+    pre_tok = slots * prompt_t
+    res["prefill_wave"] = {"bucketed_us": buck_us, "sequential_us": seq_us,
+                           "tokens": pre_tok, "b": slots}
+    rows.append(_util.csv_row(
+        "serve.prefill.bucketed", buck_us,
+        f"tok_s={pre_tok / (buck_us * 1e-6):.0f};b={slots}"))
+    rows.append(_util.csv_row(
+        "serve.prefill.sequential", seq_us,
+        f"tok_s={pre_tok / (seq_us * 1e-6):.0f};"
+        f"bucketed_speedup=x{seq_us / buck_us:.2f}"))
 
     # ---------------- prefill: engine scan vs per-token lock-step loop
     eng = ReservoirEngine(params, max_slots=slots, readout=readout)
@@ -114,6 +156,24 @@ def main(quick: bool = False):
         f"tok_s={dec_tok / (lock_dec_us * 1e-6):.0f};"
         f"engine_speedup=x{lock_dec_us / eng_dec_us:.2f}"))
 
+    # ---------------- decode with the arena placed on a local mesh
+    sh_eng = ReservoirEngine(params, max_slots=slots, readout=readout,
+                             mesh=make_local_mesh(1, 1))
+    for s in range(slots):
+        sh_eng.add_session(s)
+        sh_eng.prefill(s, prompts[s], want_outputs=False)
+
+    def sharded_decode():
+        return sh_eng.decode_closed_loop(gen_t)[0]
+
+    sh_dec_us = _util.timeit(sharded_decode, reps=3, warmup=1)
+    res["decode_sharded"] = {"us": sh_dec_us, "mesh": "1x1",
+                             "single_device_us": eng_dec_us}
+    rows.append(_util.csv_row(
+        "serve.decode.sharded", sh_dec_us,
+        f"tok_s={dec_tok / (sh_dec_us * 1e-6):.0f};mesh=1x1;"
+        f"vs_single=x{eng_dec_us / sh_dec_us:.2f}"))
+
     # ---------------- full lifecycle with queued admission
     life_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
 
@@ -121,11 +181,10 @@ def main(quick: bool = False):
         e = life_eng
         e.reset()
         for s in range(sessions):
-            e.add_session(s)
-        while e.active_sessions:
+            e.submit(s, prompts[s % len(prompts)])
+        while e.active_sessions or len(e.pending):
+            e.flush()                    # bucketed wave prefill
             wave = list(e.active_sessions)
-            for s in wave:
-                e.prefill(s, prompts[s % len(prompts)])
             e.decode_closed_loop(gen_t, sids=wave)
             for s in wave:
                 e.evict(s)
@@ -142,5 +201,9 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in main(quick=True):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True,
+                    help="reduced sizes (default when run directly)")
+    ap.add_argument("--full", dest="quick", action="store_false")
+    for r in main(quick=ap.parse_args().quick):
         print(r)

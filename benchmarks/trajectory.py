@@ -1,0 +1,94 @@
+"""Perf trajectory: serve tok/s deltas between two benchmark artifact dirs.
+
+CI downloads the previous successful run's ``bench-smoke`` artifact and runs
+
+    PYTHONPATH=src python -m benchmarks.trajectory \
+        --prev prev_artifacts --cur artifacts >> "$GITHUB_STEP_SUMMARY"
+
+The output is a GitHub-flavoured markdown table of serve.prefill /
+serve.decode throughput (computed from ``serve_engine.json``) with deltas vs
+the previous run — non-blocking by design (a missing/old-schema previous
+artifact degrades to a current-only table).  Also writes
+``<cur>/BENCH_trajectory.json`` so every run's artifact carries the
+comparison forward — the seed of the cross-PR perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+#: metric name -> (json section, micros key, tokens expression)
+_SERVE_METRICS = {
+    "serve.prefill.bucketed": ("prefill_wave", "bucketed_us", "tokens"),
+    "serve.prefill.sequential": ("prefill_wave", "sequential_us", "tokens"),
+    "serve.prefill.engine": ("prefill", "engine_us", "tokens"),
+    "serve.decode.engine": ("decode", "engine_us", "tokens"),
+    "serve.decode.sharded": ("decode_sharded", "us", None),
+}
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def tok_s(res, section, us_key, tok_key):
+    sec = (res or {}).get(section)
+    if not isinstance(sec, dict) or us_key not in sec:
+        return None
+    us = float(sec[us_key])
+    if tok_key is None:                       # decode_sharded reuses decode's
+        tokens = (res.get("decode") or {}).get("tokens")
+    else:
+        tokens = sec.get(tok_key)
+    if not tokens or us <= 0:
+        return None
+    return float(tokens) / (us * 1e-6)
+
+
+def main(prev_dir: str, cur_dir: str) -> str:
+    cur = _load(os.path.join(cur_dir, "serve_engine.json"))
+    prev = _load(os.path.join(prev_dir, "serve_engine.json"))
+    lines = ["### Serve perf trajectory",
+             "",
+             "| metric | prev tok/s | cur tok/s | delta |",
+             "|---|---|---|---|"]
+    record = {"metrics": {}}
+    for name, (section, us_key, tok_key) in _SERVE_METRICS.items():
+        c = tok_s(cur, section, us_key, tok_key)
+        p = tok_s(prev, section, us_key, tok_key)
+        record["metrics"][name] = {"prev_tok_s": p, "cur_tok_s": c}
+        if c is None:
+            continue
+        if p:
+            delta = 100.0 * (c - p) / p
+            lines.append(f"| {name} | {p:,.0f} | {c:,.0f} | {delta:+.1f}% |")
+        else:
+            lines.append(f"| {name} | – | {c:,.0f} | n/a |")
+    if cur is None:
+        lines.append("| _no current serve_engine.json_ | | | |")
+    if prev is None:
+        lines.append("")
+        lines.append("_no previous artifact — this run seeds the trajectory_")
+    out = "\n".join(lines)
+    try:
+        os.makedirs(cur_dir, exist_ok=True)
+        with open(os.path.join(cur_dir, "BENCH_trajectory.json"), "w") as f:
+            json.dump(record, f, indent=1)
+    except OSError:
+        pass                                  # summary still prints
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", default="prev_artifacts",
+                    help="directory holding the previous run's *.json")
+    ap.add_argument("--cur", default="artifacts",
+                    help="directory holding this run's *.json")
+    args = ap.parse_args()
+    print(main(args.prev, args.cur))

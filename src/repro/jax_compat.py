@@ -1,0 +1,45 @@
+"""Version shims over the handful of jax APIs that moved after 0.4.x.
+
+The pinned dev/CI set runs ``jax==0.4.37``; newer toolchains (the TPU fleet
+images) ship 0.5+/0.7 where these entry points were renamed or grew new
+keyword arguments.  Everything that touches one of the moved APIs goes
+through here so the rest of the tree is version-agnostic:
+
+* :func:`make_mesh` — ``jax.make_mesh`` gained ``axis_types`` (and
+  ``jax.sharding.AxisType``) in 0.5.0.  On older jax every mesh axis is
+  implicitly Auto, which is exactly the type we always request, so dropping
+  the argument is behavior-preserving.
+* :func:`shard_map` — ``jax.experimental.shard_map.shard_map(check_rep=)``
+  was promoted to ``jax.shard_map(check_vma=)``.  Same semantics (skip the
+  replication/varying-manual-axes check), different spelling.
+
+This was the root cause of the long-red ``tests/test_distributed.py``: the
+subprocess device-farm script (and only it — the fast lane never reaches a
+``shard_map``) used the 0.5+ spellings against the pinned 0.4.37.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with every axis Auto-typed, on any jax version."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        # jax < 0.5: no AxisType / no axis_types kwarg — axes are Auto.
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (0.5+) / ``jax.experimental.shard_map`` (0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

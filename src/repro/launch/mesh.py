@@ -3,10 +3,14 @@
 A FUNCTION (not a module constant) so importing this module never touches jax
 device state — the dry-run sets the 512-placeholder-device XLA flag before any
 jax initialization, and smoke tests/benches must keep seeing 1 device.
+
+Mesh construction goes through ``repro.jax_compat.make_mesh`` (the
+``axis_types`` argument only exists on jax >= 0.5; all axes are Auto either
+way).
 """
 from __future__ import annotations
 
-import jax
+from repro import jax_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,14 +18,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(n_data: int = 1, n_model: int = 1):
-    """Small host-device mesh for distributed correctness tests (subprocesses
-    launched with xla_force_host_platform_device_count)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    """Small host-device mesh for correctness tests (sharded-arena parity,
+    subprocesses launched with xla_force_host_platform_device_count)."""
+    return jax_compat.make_mesh((n_data, n_model), ("data", "model"))

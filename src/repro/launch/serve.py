@@ -1,12 +1,17 @@
 """Serving drivers: the ReservoirEngine session loop + the LM smoke loop.
 
 Reservoir serving (the paper's O(N)-step streaming path) — sessions arrive,
-are admitted into engine slots (continuous batching), prefill their prompt
-with the time-parallel scan, free-run closed-loop decode in lock-step, and
-are evicted (their state returned for parking):
+queue in the wave scheduler, are admitted in same-bucket waves (each wave ONE
+batched prefill), free-run closed-loop decode in lock-step, and are evicted
+(their state returned for parking):
 
     PYTHONPATH=src python -m repro.launch.serve --reservoir \
         --sessions 16 --slots 4 --prompt-len 256 --gen 64
+
+``--mesh DxM`` places the slot arena on a (data, model) device mesh (slots
+data-parallel, N TP-sharded — ``sharding.rules.plan_arena``); ``--bucket``
+sets the smallest prefill bucket; ``--ensemble mean`` fuses the per-slot
+reservoir predictions of a param-batched engine into one output.
 
 LM smoke loop (token-synchronous prefill + lock-step decode over the
 transformer/hybrid archs — KV/state caches):
@@ -48,10 +53,22 @@ def serve_reservoir(args) -> None:
 
     cfg = ESNConfig(n=args.n, spectral_radius=0.95, leak=0.9,
                     input_scaling=0.5, ridge_alpha=1e-8, seed=args.seed)
-    # Signal long enough for any requested prompt window.
-    train_t = max(2000, args.prompt_len + 512)
+    # Signal long enough for any requested prompt window AND the one-step-
+    # ahead continuation the ensemble demo scores against.
+    train_t = max(2000, args.prompt_len + args.gen + 512)
     sig = mso_series(3, train_t + 1)
     u_train, y_train = sig[:-1, None], sig[1:, None]
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        if d * m > jax.device_count():
+            raise SystemExit(f"--mesh {args.mesh} needs {d * m} devices, "
+                             f"have {jax.device_count()}")
+        mesh = make_local_mesh(d, m)
+        print(f"arena mesh: ({d}, {m}) over (data, model) — slots "
+              f"data-parallel, N TP-sharded")
 
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
@@ -61,29 +78,57 @@ def serve_reservoir(args) -> None:
         readout = Readout(jnp.stack([
             esn_fn.fit(p, u_train, y_train, washout=100).w_out
             for p in batch]))
-        engine = ReservoirEngine.from_param_batch(params, readout=readout)
-        print(f"ensemble mode: {args.slots} independently-seeded reservoirs, "
-              f"one vmap-ed decode trace")
+        engine = ReservoirEngine.from_param_batch(
+            params, readout=readout, mesh=mesh, bucket_min=args.bucket,
+            ensemble="mean" if args.ensemble == "mean" else "off")
+        print(f"ensemble mode ({args.ensemble}): {args.slots} independently-"
+              f"seeded reservoirs, one vmap-ed decode trace")
     else:
         params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
         readout = esn_fn.fit(params, u_train, y_train, washout=100)
         engine = ReservoirEngine(params, max_slots=args.slots,
-                                 readout=readout)
+                                 readout=readout, mesh=mesh,
+                                 bucket_min=args.bucket)
+
+    if args.ensemble == "mean":
+        # One logical stream, B reservoirs voting: same prompt everywhere,
+        # fused closed-loop continuation scored against the true signal.
+        for i in range(args.slots):
+            engine.submit(i, sig[:args.prompt_len, None])
+        engine.flush()
+        ys = engine.decode_closed_loop(args.gen)
+        fused = np.asarray(ys[0])[:, 0]
+        # After prefilling sig[:P] the model predicts one step ahead, so the
+        # closed-loop outputs align to sig[P+1 : P+1+G].
+        truth = sig[args.prompt_len + 1:args.prompt_len + 1 + args.gen]
+        rmse = float(np.sqrt(np.mean((fused - truth) ** 2)))
+        print(f"ensemble-mean continuation: {args.gen} tok closed loop, "
+              f"rmse vs signal {rmse:.3e} "
+              f"(B={args.slots} reservoirs fused into one output)")
+        return
 
     rng = np.random.default_rng(args.seed)
-    # Untimed warmup wave: compile the prefill/decode traces so the reported
-    # tok/s measures serving throughput, not XLA compilation.
-    engine.add_session("warm")
-    engine.prefill("warm", sig[:args.prompt_len, None], want_outputs=False)
-    engine.decode_closed_loop(args.gen, sids=["warm"])
-    jax.block_until_ready(engine.states)
-    engine.reset()
-    # All sessions "arrive" up front; the engine queues what doesn't fit and
-    # admits from the queue as slots free up (continuous batching).
-    offsets = {}
+    # Untimed warmup: compile every prefill-wave shape the timed loop will
+    # hit (full waves of `slots` rows plus the final partial wave) and the
+    # decode trace, so the reported tok/s measures serving throughput, not
+    # XLA compilation — a wave retraces per distinct (B_wave, T_bucket).
+    warm_sizes = {min(args.slots, args.sessions)}
+    tail = args.sessions % args.slots
+    if args.sessions > args.slots and tail:
+        warm_sizes.add(tail)
+    for wb in sorted(warm_sizes):
+        for i in range(wb):
+            engine.submit(("warm", i), sig[:args.prompt_len, None])
+        engine.flush()
+        engine.decode_closed_loop(args.gen)
+        jax.block_until_ready(engine.states)
+        engine.reset()
+    # All sessions "arrive" up front and accumulate in the wave scheduler;
+    # each flush() admits what fits and runs ONE bucketed batched prefill
+    # per wave (async admission replaces the old FIFO-on-add).
     for sid in range(args.sessions):
-        offsets[sid] = int(rng.integers(0, train_t - args.prompt_len - 1))
-        engine.add_session(sid)
+        lo = int(rng.integers(0, train_t - args.prompt_len - 1))
+        engine.submit(sid, sig[lo:lo + args.prompt_len, None])
 
     done = 0
     prefill_tokens = 0
@@ -91,16 +136,13 @@ def serve_reservoir(args) -> None:
     t0 = time.time()
     t_prefill = 0.0
     t_decode = 0.0
-    while engine.active_sessions:
-        wave = list(engine.active_sessions)
+    while engine.active_sessions or len(engine.pending):
         t1 = time.time()
-        for sid in wave:
-            lo = offsets[sid]
-            prompt = sig[lo:lo + args.prompt_len, None]
-            engine.prefill(sid, prompt, want_outputs=False)
-            prefill_tokens += args.prompt_len
+        engine.flush()      # wave-batched bucketed prefill of what fits
         jax.block_until_ready(engine.states)  # don't let prefill drain into the decode timer
         t_prefill += time.time() - t1
+        wave = list(engine.active_sessions)
+        prefill_tokens += args.prompt_len * len(wave)
         t1 = time.time()
         ys = engine.decode_closed_loop(args.gen, sids=wave)
         jax.block_until_ready(engine.states)
@@ -108,14 +150,14 @@ def serve_reservoir(args) -> None:
         decode_tokens += args.gen * len(wave)
         for sid in wave:
             assert np.isfinite(ys[sid]).all()
-            engine.evict(sid)   # auto-admits the next queued session
+            engine.evict(sid)   # queued prompts wait for the next flush wave
             done += 1
     wall = time.time() - t0
     print(f"reservoir n={cfg.n} slots={args.slots}: served {done} sessions "
           f"in {wall:.2f}s ({done / wall:.1f} sessions/s)")
     print(f"  prefill {prefill_tokens} tok in {t_prefill:.2f}s "
           f"({prefill_tokens / max(t_prefill, 1e-9):.0f} tok/s, "
-          f"backend auto-dispatch)")
+          f"bucketed waves, backend auto-dispatch)")
     print(f"  decode  {decode_tokens} tok in {t_decode:.2f}s "
           f"({decode_tokens / max(t_decode, 1e-9):.0f} tok/s, closed loop)")
 
@@ -189,9 +231,18 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--n", type=int, default=512,
                     help="reservoir size for --reservoir")
-    ap.add_argument("--ensemble", action="store_true",
+    ap.add_argument("--ensemble", nargs="?", const="independent",
+                    choices=["independent", "mean"], default=None,
                     help="one independently-seeded reservoir per slot, "
-                         "served by a single vmap-over-params decode trace")
+                         "served by a single vmap-over-params decode trace; "
+                         "'mean' additionally fuses the per-reservoir "
+                         "predictions into one ensemble output")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="place the slot arena on a (data, model) device "
+                         "mesh, e.g. 2x1 (slots data-parallel, N TP-sharded)")
+    ap.add_argument("--bucket", type=int, default=16,
+                    help="smallest prefill bucket; prompt lengths are "
+                         "padded up to powers of two for wave batching")
     args = ap.parse_args()
     if args.reservoir:
         serve_reservoir(args)

@@ -1,16 +1,25 @@
-"""Serving subsystem: stateful streaming reservoir sessions.
+"""Serving subsystem: a three-layer stack for streaming reservoir sessions.
 
-``engine``   — ``ReservoirEngine``: slot-based continuous batching over
-persistent per-session Q-basis state (add_session / prefill / decode_step /
-evict, plus closed-loop generation), pytree-native: it holds immutable
-``core.params`` structs and can serve a *batch* of reservoirs from one
-``vmap``-ed trace (``ReservoirEngine.from_param_batch``).
-``dispatch`` — compatibility re-export of ``core.dispatch`` (the
+``arena``     — device-side layer: the ``SlotArena`` pytree (``states (B, N)``,
+``y_prev``, active mask) + pure ``prefill_wave`` / ``decode_step`` /
+``closed_loop`` functions; placeable on a multi-device mesh via
+``sharding.rules.plan_arena``.
+``scheduler`` — host-side admission: requests accumulate, bucket by padded
+prompt length (powers of two), and drain as same-bucket waves — each wave is
+ONE batched prefill.
+``engine``    — ``ReservoirEngine``: the thin orchestrator (session <-> slot
+mapping, submit/flush/decode/evict lifecycle, ensemble-mean readout fusion,
+legacy eager API preserved as shims).
+``dispatch``  — compatibility re-export of ``core.dispatch`` (the
 shape-heuristic scan-backend selection moved down into core).
 """
-from . import dispatch, engine
+from . import arena, dispatch, engine, scheduler
+from .arena import SlotArena
 from .dispatch import resolve_method, run_scan_q
 from .engine import ReservoirEngine, SessionStats
+from .scheduler import PrefillRequest, WaveScheduler, bucket_length
 
-__all__ = ["dispatch", "engine", "resolve_method", "run_scan_q",
-           "ReservoirEngine", "SessionStats"]
+__all__ = ["arena", "dispatch", "engine", "scheduler",
+           "SlotArena", "resolve_method", "run_scan_q",
+           "ReservoirEngine", "SessionStats",
+           "PrefillRequest", "WaveScheduler", "bucket_length"]

@@ -1,0 +1,282 @@
+"""SlotArena — the device-side layer of the serving stack.
+
+The serving stack is three layers (bottom to top):
+
+* **arena** (this module) — the ``(B, N)`` slot state itself, as an immutable
+  registered pytree plus *pure functions* over it.  Nothing here knows about
+  sessions, queues, or admission policy; everything is jit/vmap/device_put
+  friendly, so one arena can be placed on a multi-device mesh
+  (``sharding.rules.plan_arena``: slots on the ``data`` axis, N on the
+  ``model`` axis — the diag step is element-wise, so the state shards
+  trivially).
+* **scheduler** (``serve.scheduler``) — host-side admission: requests are
+  bucketed by padded prompt length and served in waves.
+* **engine** (``serve.engine``) — the thin orchestrator that owns the
+  session <-> slot mapping and calls down into both.
+
+The heart of the layer is :func:`prefill_wave`: ONE ``(B_wave, T_bucket)``
+batched scan (backend from ``core.dispatch``) replaces ``B_wave`` sequential
+per-session prefills.  Rows are padded up to the bucket length; because the
+recurrence is causal, the padded tail steps can never influence the gathered
+per-row final state ``states[b, length_b - 1]`` — the padding is provably
+inert (pinned by test), so rows of different true lengths share one trace.
+
+All functions take the param struct (``core.params``) and readout ``w_out``
+as explicit arguments.  ``batched=True`` means a *stacked* param struct
+(``stack_params``): slot ``i`` runs reservoir ``i``, sliced out of the stack
+inside the trace.  ``ensemble="mean"`` reduces the per-slot predictions of a
+param-batched arena to one ensemble output that is also what feeds back in
+closed loop (state feedback per Ehlers et al. 2023 stays bit-exact: the
+feedback column simply carries the ensemble mean instead of the per-slot
+prediction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import esn as esn_fn
+
+__all__ = [
+    "SlotArena",
+    "make_arena",
+    "place",
+    "place_many",
+    "release",
+    "arena_step",
+    "apply_readout",
+    "decode_step",
+    "closed_loop",
+    "prefill_wave",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotArena:
+    """Device-side slot state: the one owner of the raw serving arrays.
+
+    ``states``: (B, N) recurrent state in the model's native basis (Q basis
+    for diag models); ``y_prev``: (B, D_out) last output per slot (the
+    feedback column); ``active``: (B,) bool occupancy mask — the device-side
+    mirror of the engine's host-side slot table.  The compute functions take
+    explicit per-call ``mask`` arguments (which sessions to step is policy,
+    decided host-side); ``active`` records *occupancy* so device-resident
+    consumers (debug dumps, checkpointing a whole arena, future in-graph
+    admission) can read it without a host round-trip.
+    """
+    states: jnp.ndarray
+    y_prev: jnp.ndarray
+    active: jnp.ndarray
+
+    @property
+    def max_slots(self) -> int:
+        return self.states.shape[0]
+
+
+jax.tree_util.register_dataclass(SlotArena,
+                                 ["states", "y_prev", "active"], [])
+
+
+def make_arena(n: int, d_out: int, max_slots: int, dtype) -> SlotArena:
+    """A zeroed arena of ``max_slots`` slots, all free."""
+    return SlotArena(states=jnp.zeros((max_slots, n), dtype),
+                     y_prev=jnp.zeros((max_slots, d_out), dtype),
+                     active=jnp.zeros((max_slots,), bool))
+
+
+def place(arena: SlotArena, slot: int, h0, y0) -> SlotArena:
+    """Write a session's (state, feedback) into ``slot`` and mark it live."""
+    return SlotArena(states=arena.states.at[slot].set(h0),
+                     y_prev=arena.y_prev.at[slot].set(y0),
+                     active=arena.active.at[slot].set(True))
+
+
+def place_many(arena: SlotArena, slots, h0s, y0s) -> SlotArena:
+    """Write a whole wave of sessions in ONE scatter per array — per-slot
+    ``place`` calls would cost 3 device dispatches each, which at wave sizes
+    dwarfs the batched prefill itself on CPU."""
+    return SlotArena(states=arena.states.at[slots].set(h0s),
+                     y_prev=arena.y_prev.at[slots].set(y0s),
+                     active=arena.active.at[slots].set(True))
+
+
+def release(arena: SlotArena, slot: int) -> SlotArena:
+    """Mark ``slot`` free.  The state arrays are left in place — eviction
+    returns lazy slices of them, so zeroing here would race the caller."""
+    return SlotArena(states=arena.states, y_prev=arena.y_prev,
+                     active=arena.active.at[slot].set(False))
+
+
+# ------------------------------------------------------------------ stepping
+def arena_step(params, states, u, y_prev, *, batched: bool = False):
+    """One reservoir step over the whole slot block.  Shared params broadcast
+    over (B, N); a param *batch* vmaps — one trace, B distinct reservoirs."""
+    fb = params.cfg.use_feedback
+    if batched:
+        def one(p, h, ui, yi):
+            return esn_fn.step_states(
+                p, h, esn_fn.drive(p, ui, yi if fb else None))
+        return jax.vmap(one)(params, states, u, y_prev)
+    return esn_fn.step_states(
+        params, states, esn_fn.drive(params, u, y_prev if fb else None))
+
+
+def apply_readout(w_out, x, *, batched: bool = False):
+    if batched:
+        return jnp.einsum("bf,bfd->bd", x, w_out)
+    return x @ w_out
+
+
+def _ensemble_reduce(y, mask):
+    """Mean over the stepped slots, broadcast back to every row."""
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    y_mean = jnp.sum(y * mask[:, None], axis=0) / denom
+    return jnp.broadcast_to(y_mean, y.shape)
+
+
+def decode_step(params, w_out, arena: SlotArena, u, mask, *,
+                batched: bool = False, ensemble: str = "off"):
+    """Advance the masked slots one token.  Returns ``(arena', y)`` where
+    unmasked rows of ``y`` hold their previous output."""
+    new = arena_step(params, arena.states, u, arena.y_prev, batched=batched)
+    states = jnp.where(mask[:, None], new, arena.states)
+    if w_out is None:
+        return dataclasses.replace(arena, states=states), arena.y_prev
+    x = esn_fn.assemble_features(params, states, arena.y_prev)
+    y = apply_readout(w_out, x, batched=batched)
+    if ensemble == "mean":
+        y = _ensemble_reduce(y, mask)
+    y_out = jnp.where(mask[:, None], y, arena.y_prev)
+    return dataclasses.replace(arena, states=states, y_prev=y_out), y_out
+
+
+def closed_loop(params, w_out, arena: SlotArena, mask, n_steps: int, *,
+                batched: bool = False, ensemble: str = "off"):
+    """Free-running generation over the masked slots: each step feeds the
+    prediction (or the ensemble mean of the predictions) back as the next
+    input.  Returns ``(arena', ys)`` with ``ys`` of shape (n_steps, B, D_out).
+    """
+    def step(carry, _):
+        states, y = carry
+        new = arena_step(params, states, y, y, batched=batched)
+        states = jnp.where(mask[:, None], new, states)
+        x = esn_fn.assemble_features(params, states, y)
+        y_new = apply_readout(w_out, x, batched=batched)
+        if ensemble == "mean":
+            y_new = _ensemble_reduce(y_new, mask)
+        y_new = jnp.where(mask[:, None], y_new, y)
+        return (states, y_new), y_new
+
+    y0 = arena.y_prev
+    if ensemble == "mean":
+        # The free-run starts from the fused seed too: every masked
+        # reservoir's first closed-loop input is the ensemble mean of the
+        # stepped slots' seeds (unmasked slots keep their own y_prev).
+        y0 = jnp.where(mask[:, None], _ensemble_reduce(y0, mask), y0)
+    (states, y_prev), ys = jax.lax.scan(
+        step, (arena.states, y0), None, length=n_steps)
+    return dataclasses.replace(arena, states=states, y_prev=y_prev), ys
+
+
+# ------------------------------------------------------------- wave prefill
+def _row_prefill(params, w_out, cfg, h0, y0, u, y_teacher, length, *,
+                 method: str, chunk: int, want_outputs: bool):
+    """Prefill ONE row of a wave: scan the padded (T_bucket, D_in) prompt and
+    gather the state/output at the row's true last step.
+
+    The scan runs over the full padded length, but the recurrence is causal:
+    nothing at t >= length can reach ``states[length - 1]``, so the gathered
+    final state (and the y_prev seed) are exactly what an unpadded prefill
+    produces — padding is inert by construction, not by masking arithmetic.
+    Per-step outputs past the true length are zeroed.
+    """
+    y_shift = None
+    if cfg.use_feedback:
+        y_shift = jnp.concatenate([y0[None], y_teacher[:-1]], axis=0)
+    states = esn_fn.scan_states(params, esn_fn.drive(params, u, y_shift),
+                                h0, method=method, chunk=chunk)
+    last = jax.lax.dynamic_index_in_dim(states, length - 1, keepdims=False)
+    valid = (jnp.arange(u.shape[0]) < length)[:, None]
+    if cfg.use_feedback:
+        # Prefill is teacher-forced end-to-end: the teacher's last *true*
+        # output is the feedback seed (parity with core.esn.run).
+        y_next = jax.lax.dynamic_index_in_dim(y_teacher, length - 1,
+                                              keepdims=False)
+    if w_out is None:
+        out = jnp.where(valid, states, 0) if want_outputs else None
+        return last, (y_next if cfg.use_feedback else y0), out
+    y_last = None
+    if want_outputs:
+        x = esn_fn.assemble_features(params, states, y_shift)
+        y = x @ w_out
+        out = jnp.where(valid, y, 0)
+        if not cfg.use_feedback:         # feedback models seed from y_next
+            y_last = jax.lax.dynamic_index_in_dim(y, length - 1,
+                                                  keepdims=False)
+    else:
+        # Last-step readout only: O(N) — just the closed-loop feedback seed
+        # (feedback models need none: the teacher's last output wins).
+        out = None
+        if not cfg.use_feedback:
+            x_last = esn_fn.assemble_features(params, last[None], None)
+            y_last = (x_last @ w_out)[0]
+    return last, (y_next if cfg.use_feedback else y_last), out
+
+
+def prefill_wave(params, w_out, arena: SlotArena, slots, u, lengths,
+                 y_teacher=None, *, batched: bool = False,
+                 method: str = "sequential", chunk: int = 128,
+                 want_outputs: bool = True):
+    """Run ONE batched prefill over a wave of slots.
+
+    ``slots``: (B_wave,) slot indices; ``u``: (B_wave, T_bucket, D_in)
+    prompts padded to the bucket length; ``lengths``: (B_wave,) true prompt
+    lengths; ``y_teacher``: (B_wave, T_bucket, D_out) teacher outputs for
+    feedback models (padding rows past ``lengths`` are ignored).
+
+    One ``vmap``-ed scan serves the whole wave — with shared params the rows
+    ride as a batch axis through the time-parallel backend; with a param
+    batch each row first slices its own reservoir out of the stack.  Returns
+    ``(arena', outputs)`` where outputs is (B_wave, T_bucket, D_out)
+    per-step predictions ((B_wave, T_bucket, N) states when ``w_out`` is
+    None), zeroed past each row's true length, or None when
+    ``want_outputs=False``.
+
+    ``method`` is static: the engine resolves it host-side from the bucket
+    length (``core.dispatch.resolve_method``), so every wave of a bucket
+    reuses one compiled trace.
+    """
+    cfg = params.cfg
+    h0 = arena.states[slots]
+    y0 = arena.y_prev[slots]
+    kw = dict(method=method, chunk=chunk, want_outputs=want_outputs)
+
+    if batched:
+        def one(slot, h0_r, y0_r, u_r, yt_r, length):
+            p = jax.tree_util.tree_map(
+                lambda leaf: jax.lax.dynamic_index_in_dim(
+                    leaf, slot, keepdims=False), params)
+            wo = (None if w_out is None else
+                  jax.lax.dynamic_index_in_dim(w_out, slot, keepdims=False))
+            return _row_prefill(p, wo, cfg, h0_r, y0_r, u_r, yt_r, length,
+                                **kw)
+    else:
+        def one(slot, h0_r, y0_r, u_r, yt_r, length):
+            del slot
+            return _row_prefill(params, w_out, cfg, h0_r, y0_r, u_r, yt_r,
+                                length, **kw)
+
+    if y_teacher is None:
+        last, y_next, out = jax.vmap(
+            lambda s, h, y, ur, ln: one(s, h, y, ur, None, ln))(
+                slots, h0, y0, u, lengths)
+    else:
+        last, y_next, out = jax.vmap(one)(slots, h0, y0, u, y_teacher,
+                                          lengths)
+    arena = dataclasses.replace(
+        arena,
+        states=arena.states.at[slots].set(last),
+        y_prev=arena.y_prev.at[slots].set(y_next))
+    return arena, out

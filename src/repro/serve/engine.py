@@ -1,43 +1,38 @@
-"""ReservoirEngine — stateful streaming serving for linear reservoirs.
+"""ReservoirEngine — the orchestration layer of the serving stack.
 
 The paper's punchline is operational: once diagonalized, the reservoir step is
 O(N) element-wise, so *per-user persistent recurrent state* is the cheapest
-serving primitive there is — a (B, N) array of Q-basis states that advances
-one fused multiply per token for the whole batch.  This module owns that
-state end-to-end:
+serving primitive there is.  The serving stack splits that into three layers:
 
-* **slots** — fixed-size state arena ``(max_slots, N)``; sessions are admitted
-  into free slots (continuous batching) and queue FIFO when full.
-* **add_session / prefill / decode_step / evict** — the session lifecycle.
-  Prefill runs the time-parallel scan (backend picked by
-  ``core.dispatch.run_scan_q``: chunked / Pallas for long prompts); decode
-  advances every active slot with one batched element-wise step.
-* **closed loop** — ``decode_closed_loop`` feeds predictions back as next
-  inputs (output-as-input autonomy, optionally through the trained feedback
-  matrix), the state-feedback ESN serving path: teacher-forced warmup via
-  ``prefill`` then free-running decode from the same slot state.
+* ``serve.arena``     — the device-side ``(B, N)`` state (a ``SlotArena``
+  pytree) plus pure ``prefill_wave`` / ``decode_step`` / ``closed_loop``
+  functions.  One arena can span a multi-device mesh
+  (``sharding.rules.plan_arena``: slots on ``data``, N on ``model``).
+* ``serve.scheduler`` — host-side admission: requests accumulate
+  (:meth:`ReservoirEngine.submit`), are bucketed by padded prompt length,
+  and each :meth:`flush` wave runs ONE ``(B_wave, T_bucket)`` batched
+  prefill instead of B sequential scans.
+* this module         — the thin orchestrator: it owns the session <-> slot
+  mapping and per-session accounting, and calls down into both layers.  It
+  holds **no raw state arrays** (the arena does) and **no prefill compute**
+  (``arena.prefill_wave`` does — the eager :meth:`prefill` shim is a
+  one-row wave).
 
-Eviction returns the exact slot state; re-admitting it later (``h0=``)
-continues the trajectory bit-for-bit — the recurrence is Markov in ``(state,
-y_prev)``, so sessions can be parked in a KV-store between bursts.
+Session lifecycle: ``submit`` (queue with prompt) -> ``flush`` (wave-batched
+admission + prefill) -> ``decode_step`` / ``decode_closed_loop`` -> ``evict``
+(returns the exact slot state for parking; re-admitting via ``h0=`` continues
+bit-for-bit).  The legacy eager flow (``add_session`` then ``prefill``) keeps
+working as a deprecation shim with identical numerics.
 
-The engine is **pytree-native**: it holds an immutable param struct
-(``core.params.StandardParams`` / ``DiagParams``) plus a ``Readout``, and its
-compiled step functions take them as *arguments* — the structs are ordinary
-pytrees, so the same machinery extends to a **batch of reservoirs**:
-:meth:`ReservoirEngine.from_param_batch` takes a stacked param struct
-(``core.params.stack_params``) and serves ``B`` independently-seeded
-reservoirs — slot ``i`` runs reservoir ``i`` — from ONE ``vmap``-ed decode
-trace.  That is the stepping stone to slot-arena sharding (see ROADMAP).
-
-Works for both model modes: ``diag`` (Q-basis, ``realified_multiply`` step —
-the production path) and ``standard`` (dense O(N^2) step — the reference
-baseline the tests compare against).
+``from_param_batch`` serves B independently-seeded reservoirs (slot i =
+reservoir i) from one vmap-ed trace; ``ensemble="mean"`` additionally fuses
+their B predictions into one ensemble output — which is also what feeds back
+in closed loop, so the ensemble free-runs as a single logical stream.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import functools
 from typing import Dict, Hashable, Optional
 
 import jax
@@ -45,13 +40,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dispatch
-from ..core import esn as esn_fn
 from ..core.params import DiagParams, Readout, StandardParams
+from . import arena as arena_mod
+from .scheduler import PrefillRequest, WaveScheduler
 
 __all__ = ["SessionStats", "ReservoirEngine"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SessionStats:
     """Per-session accounting (host-side; never enters jit)."""
     slot: int
@@ -85,13 +81,20 @@ class ReservoirEngine:
     array); required for predictions / closed-loop decode but not for pure
     state streaming.
 
+    ``mesh``: optional ``(data, model)`` jax mesh — the arena and params are
+    placed per ``sharding.rules.plan_arena`` (slots data-parallel, N
+    TP-sharded) so one engine spans all the mesh's devices.  ``bucket_min``:
+    smallest prefill bucket (prompt lengths are padded up to powers of two).
+
     The engine **snapshots (params, readout) at construction** — both are
     immutable structs, so nothing can mutate underneath the compiled step
     functions; build the engine *after* fitting.
     """
 
     def __init__(self, model, max_slots: int = 8, *,
-                 readout: Optional[Readout] = None, _param_batch: bool = False):
+                 readout: Optional[Readout] = None, mesh=None,
+                 bucket_min: int = 16, ensemble: str = "off",
+                 _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
         self._batched = bool(_param_batch)
@@ -106,22 +109,56 @@ class ReservoirEngine:
                 raise ValueError(
                     f"param batch of {b} reservoirs needs max_slots == {b}, "
                     f"got {self.max_slots} (slot i runs reservoir i)")
-        n = self.cfg.n
+        if ensemble not in ("off", "mean"):
+            raise ValueError(f"ensemble must be 'off' or 'mean', "
+                             f"got {ensemble!r}")
+        if ensemble == "mean" and not (self._batched and
+                                       self.readout is not None):
+            raise ValueError(
+                "ensemble='mean' fuses the per-reservoir predictions of a "
+                "param-batched engine — use from_param_batch with a readout")
+        self.ensemble = ensemble
         self._dtype = self.params.dtype
-        self.states = jnp.zeros((self.max_slots, n), self._dtype)
-        self.y_prev = jnp.zeros((self.max_slots, self.cfg.d_out), self._dtype)
+        self.mesh = mesh
+        self._plan = None
+        if mesh is not None:
+            from ..sharding import rules as sharding_rules
+            self._plan = sharding_rules.plan_arena(
+                mesh, self.params, self.max_slots, batched=self._batched,
+                readout=self.readout)
+            self.params = jax.device_put(self.params, self._plan.params)
+            if self.readout is not None:
+                self.readout = Readout(
+                    jax.device_put(self.readout.w_out, self._plan.readout))
+        self.arena = self._fresh_arena()
         self._slots: list = [None] * self.max_slots  # slot -> session id
         self.sessions: Dict[Hashable, SessionStats] = {}
-        self.pending: collections.deque = collections.deque()
-        self._decode_jit = jax.jit(self._decode_batch)
-        self._closed_jit = jax.jit(self._closed_loop, static_argnums=5)
-        self._prefill_jit = jax.jit(
-            self._prefill_compute,
+        self.scheduler = WaveScheduler(bucket_min=bucket_min)
+        self._decode_jit = jax.jit(functools.partial(
+            arena_mod.decode_step, batched=self._batched,
+            ensemble=self.ensemble))
+        self._closed_jit = jax.jit(
+            functools.partial(arena_mod.closed_loop, batched=self._batched,
+                              ensemble=self.ensemble),
+            static_argnums=4)
+        self._wave_jit = jax.jit(
+            functools.partial(arena_mod.prefill_wave, batched=self._batched),
             static_argnames=("method", "chunk", "want_outputs"))
 
+    def _fresh_arena(self) -> arena_mod.SlotArena:
+        ar = arena_mod.make_arena(self.cfg.n, self.cfg.d_out, self.max_slots,
+                                  self._dtype)
+        if self._plan is not None:
+            ar = arena_mod.SlotArena(
+                states=jax.device_put(ar.states, self._plan.arena["states"]),
+                y_prev=jax.device_put(ar.y_prev, self._plan.arena["y_prev"]),
+                active=jax.device_put(ar.active, self._plan.arena["active"]))
+        return ar
+
     @classmethod
-    def from_param_batch(cls, params, readout: Optional[Readout] = None
-                         ) -> "ReservoirEngine":
+    def from_param_batch(cls, params, readout: Optional[Readout] = None, *,
+                         ensemble: str = "off", mesh=None,
+                         bucket_min: int = 16) -> "ReservoirEngine":
         """Engine over a *batch* of independently-seeded reservoirs.
 
         ``params``: a stacked struct (``core.params.stack_params``) whose
@@ -130,9 +167,16 @@ class ReservoirEngine:
         ``jax.vmap(core.esn.fit, ...)``.  Slot ``i`` is permanently bound to
         reservoir ``i``; one jitted, ``vmap``-over-params decode trace
         advances all of them per token.
+
+        ``ensemble="mean"``: the B per-reservoir predictions are averaged
+        into ONE output per step — ``decode_step`` returns that mean for
+        every queried session, and closed-loop decode feeds the mean back as
+        the next input of every reservoir (the serving-quality readout-fusion
+        knob: B cheap reservoirs vote on one stream).
         """
         b = jax.tree_util.tree_leaves(params)[0].shape[0]
-        return cls(params, max_slots=b, readout=readout, _param_batch=True)
+        return cls(params, max_slots=b, readout=readout, ensemble=ensemble,
+                   mesh=mesh, bucket_min=bucket_min, _param_batch=True)
 
     # -------------------------------------------------------------- compat
     @property
@@ -143,10 +187,34 @@ class ReservoirEngine:
     def param_batched(self) -> bool:
         return self._batched
 
+    @property
+    def states(self):
+        """The arena's (max_slots, N) state block (owned by ``serve.arena``;
+        kept as a property for callers that peek or zero slots directly)."""
+        return self.arena.states
+
+    @states.setter
+    def states(self, value):
+        self.arena = dataclasses.replace(self.arena, states=value)
+
+    @property
+    def y_prev(self):
+        return self.arena.y_prev
+
+    @y_prev.setter
+    def y_prev(self, value):
+        self.arena = dataclasses.replace(self.arena, y_prev=value)
+
+    @property
+    def pending(self):
+        """The scheduler's queue (len/iter-able) — sessions awaiting a slot."""
+        return self.scheduler
+
     # ------------------------------------------------------------- lifecycle
     def add_session(self, sid: Hashable, h0=None, y0=None, *,
                     slot: Optional[int] = None) -> Optional[int]:
-        """Admit ``sid`` into a free slot; queue FIFO if the arena is full.
+        """Admit ``sid`` into a free slot; queue (admission-only, bucket 0)
+        when the arena is full.
 
         ``h0``: optional initial state in the engine's native layout (Q basis
         for diag models) — e.g. a state returned by :meth:`evict`.  Returns
@@ -159,7 +227,7 @@ class ReservoirEngine:
         — otherwise the state would silently continue under a different
         reservoir's weights.
         """
-        if sid in self.sessions or any(s == sid for s, _, _ in self.pending):
+        if sid in self.sessions or self.scheduler.has(sid):
             raise KeyError(f"session {sid!r} already admitted")
         if slot is not None:
             if not 0 <= slot < self.max_slots:
@@ -179,17 +247,122 @@ class ReservoirEngine:
         try:
             slot = self._slots.index(None)
         except ValueError:
-            self.pending.append((sid, h0, y0))
+            # Same validate-before-enqueue invariant as submit(): a queued
+            # mis-shaped parked state would otherwise detonate later inside
+            # evict()'s auto-admission, after bookkeeping already ran.
+            h0, y0 = self._coerce_state(h0, y0)
+            self.scheduler.submit(PrefillRequest(sid=sid, h0=h0, y0=y0))
             return None
         return self._place(sid, slot, h0, y0)
+
+    def _coerce_state(self, h0, y0):
+        """Validate/coerce a parked (state, feedback) pair at the call site —
+        nothing mis-shaped may enter the admission queue."""
+        if h0 is not None:
+            h0 = np.asarray(h0, self._dtype).reshape(self.cfg.n)
+        if y0 is not None:
+            y0 = np.asarray(y0, self._dtype).reshape(self.cfg.d_out)
+        return h0, y0
+
+    def submit(self, sid: Hashable, u, y_teacher=None, *, h0=None,
+               y0=None) -> None:
+        """Queue ``sid`` with its prompt for wave-batched admission.
+
+        The request accumulates in the scheduler; :meth:`flush` drains the
+        queue in same-bucket waves, each running ONE batched prefill.  This
+        is the asynchronous replacement for the eager ``add_session`` +
+        ``prefill`` flow (admission is no longer synchronous with arrival).
+        """
+        if sid in self.sessions or self.scheduler.has(sid):
+            raise KeyError(f"session {sid!r} already admitted")
+        if self._batched and h0 is not None:
+            raise ValueError(
+                "param-batched engine: re-admit parked states via "
+                "add_session(slot=<original slot>) — wave admission cannot "
+                "guarantee the slot")
+        # Everything is validated/coerced HERE, before the request enters the
+        # queue: flush() commits host bookkeeping (slot table, sessions) as
+        # it builds each wave, so a mis-shaped array surfacing there would
+        # leave the engine permanently corrupted (admitted sessions with
+        # empty states and a lost prompt).
+        u, y_teacher = self._validate_prompt(u, y_teacher)
+        h0, y0 = self._coerce_state(h0, y0)
+        self.scheduler.submit(PrefillRequest(sid=sid, u=u,
+                                             y_teacher=y_teacher,
+                                             h0=h0, y0=y0))
+
+    def flush(self, *, method: str = "auto", chunk: int = 128,
+              want_outputs: bool = False) -> Dict[Hashable, object]:
+        """Drain the admission queue into free slots, one batched prefill per
+        same-bucket wave.  Returns sid -> per-step outputs for the admitted
+        prompt sessions (None entries unless ``want_outputs=True``).
+
+        Each wave is a ``(B_wave, T_bucket)`` call into
+        ``arena.prefill_wave`` — rows padded to the bucket length share one
+        compiled trace, and the padded tail steps are inert (the per-row
+        final state is gathered at the true length).
+        """
+        results: Dict[Hashable, object] = {}
+        while len(self.scheduler) and self.free_slots:
+            wave = self.scheduler.next_wave(self.free_slots)
+            if not wave:
+                break
+            # One batched placement for the whole wave (per-slot .at[] sets
+            # are device dispatches; at wave sizes they'd dwarf the scan).
+            placed = []
+            h0s = np.zeros((len(wave), self.cfg.n), self._dtype)
+            y0s = np.zeros((len(wave), self.cfg.d_out), self._dtype)
+            for i, req in enumerate(wave):
+                slot = self._slots.index(None)
+                self._slots[slot] = req.sid
+                self.sessions[req.sid] = SessionStats(slot=slot)
+                if req.h0 is not None:
+                    h0s[i] = np.asarray(req.h0)
+                if req.y0 is not None:
+                    y0s[i] = np.asarray(req.y0)
+                placed.append((req, slot))
+            slots = jnp.asarray([s for _, s in placed])
+            self.arena = arena_mod.place_many(self.arena, slots,
+                                              jnp.asarray(h0s),
+                                              jnp.asarray(y0s))
+            placed = [(r, s) for r, s in placed if r.u is not None]
+            if not placed:
+                continue            # admission-only wave (bucket 0)
+            t_bucket = self.scheduler.bucket_of(placed[0][0])
+            bw = len(placed)
+            u_pad = np.zeros((bw, t_bucket, self.cfg.d_in), self._dtype)
+            lengths = np.zeros((bw,), np.int32)
+            yt_pad = (np.zeros((bw, t_bucket, self.cfg.d_out), self._dtype)
+                      if self.cfg.use_feedback else None)
+            for i, (req, _) in enumerate(placed):
+                t = req.length
+                u_pad[i, :t] = req.u
+                lengths[i] = t
+                if yt_pad is not None:
+                    yt_pad[i, :t] = req.y_teacher
+            slots = jnp.asarray([s for _, s in placed])
+            wave_method = method
+            if wave_method == "auto" and self.params.mode == "diag":
+                wave_method = dispatch.resolve_method(t_bucket, chunk=chunk)
+            self.arena, out = self._wave_jit(
+                self.params, self.w_out, self.arena, slots,
+                jnp.asarray(u_pad), jnp.asarray(lengths),
+                None if yt_pad is None else jnp.asarray(yt_pad),
+                method=wave_method, chunk=chunk, want_outputs=want_outputs)
+            for i, (req, _) in enumerate(placed):
+                self.sessions[req.sid].tokens_prefilled += int(lengths[i])
+                results[req.sid] = (None if out is None
+                                   else out[i, :int(lengths[i])])
+        return results
 
     def _place(self, sid, slot: int, h0, y0) -> int:
         n = self.cfg.n
         h0 = jnp.zeros((n,), self._dtype) if h0 is None else jnp.asarray(h0)
         y0 = (jnp.zeros((self.cfg.d_out,), self._dtype) if y0 is None
               else jnp.asarray(y0))
-        self.states = self.states.at[slot].set(h0.astype(self._dtype))
-        self.y_prev = self.y_prev.at[slot].set(y0.astype(self._dtype))
+        self.arena = arena_mod.place(self.arena, slot,
+                                     h0.astype(self._dtype),
+                                     y0.astype(self._dtype))
         self._slots[slot] = sid
         self.sessions[sid] = SessionStats(slot=slot)
         return slot
@@ -197,7 +370,10 @@ class ReservoirEngine:
     def evict(self, sid: Hashable):
         """Release ``sid``'s slot; returns ``(state, y_prev)`` so the caller
         can park the session and re-admit it later via ``h0=``/``y0=``.
-        Admits the head of the pending queue into the freed slot.
+        The oldest queued *admission-only* request (legacy ``add_session``
+        overflow) is admitted into the freed slot; queued *prompt* requests
+        stay put until the next :meth:`flush` so their prefill runs
+        wave-batched, not one-by-one on each eviction.
 
         Evicting a sid that is still *queued* cancels it instead (returns its
         queued ``(h0, y0)``) — clients that disconnect before admission must
@@ -207,28 +383,32 @@ class ReservoirEngine:
         that evict only to free the slot pay nothing; callers that park the
         session convert to host storage on their own schedule."""
         if sid not in self.sessions:
-            for item in self.pending:
-                if item[0] == sid:
-                    self.pending.remove(item)
-                    return item[1], item[2]
-            raise KeyError(f"session {sid!r} is neither active nor queued")
+            try:
+                req = self.scheduler.cancel(sid)
+            except KeyError:
+                raise KeyError(
+                    f"session {sid!r} is neither active nor queued") from None
+            return req.h0, req.y0
         st = self.sessions.pop(sid)
-        state = self.states[st.slot]
-        y = self.y_prev[st.slot]
+        state = self.arena.states[st.slot]
+        y = self.arena.y_prev[st.slot]
         self._slots[st.slot] = None
-        if self.pending:
-            nsid, h0, y0 = self.pending.popleft()
-            self._place(nsid, st.slot, h0, y0)
+        self.arena = arena_mod.release(self.arena, st.slot)
+        for req in self.scheduler:
+            if req.u is None:
+                self.scheduler.cancel(req.sid)
+                self._place(req.sid, st.slot, req.h0, req.y0)
+                break
         return state, y
 
     def reset(self):
         """Drop all sessions (active + queued) and zero the state arena.
         Keeps the compiled step functions — cheap way to reuse an engine."""
-        self.states = jnp.zeros_like(self.states)
-        self.y_prev = jnp.zeros_like(self.y_prev)
+        self.arena = self._fresh_arena()
         self._slots = [None] * self.max_slots
         self.sessions.clear()
-        self.pending.clear()
+        self.scheduler = WaveScheduler(bucket_min=self.scheduler.bucket_min,
+                                       max_wave=self.scheduler.max_wave)
 
     @property
     def active_sessions(self):
@@ -240,143 +420,94 @@ class ReservoirEngine:
 
     def _active(self, sid: Hashable) -> SessionStats:
         """Resolve an *admitted* session, with a descriptive error for the
-        natural add-then-use flow when the session is still queued."""
+        natural submit-then-use flow when the session is still queued."""
         try:
             return self.sessions[sid]
         except KeyError:
-            if any(item[0] == sid for item in self.pending):
+            if self.scheduler.has(sid):
                 raise KeyError(
-                    f"session {sid!r} is queued, not yet admitted — wait for "
-                    f"a slot (admission happens on evict) before using it"
-                ) from None
+                    f"session {sid!r} is queued, not yet admitted — flush() "
+                    f"(or wait for an eviction) before using it") from None
             raise
 
     def state_of(self, sid: Hashable):
-        return np.asarray(self.states[self._active(sid).slot])
+        return np.asarray(self.arena.states[self._active(sid).slot])
 
     # --------------------------------------------------------------- prefill
-    def _prefill_compute(self, params, w_out, slot, h0, y0, u, y_teacher, *,
-                         method: str, chunk: int, want_outputs: bool):
-        """Jitted prompt ingestion: scan + (optional) readout.  Retraces per
-        distinct (T, method) — prompt shapes are the natural bucketing.
+    def _validate_prompt(self, u, y_teacher, xp=np):
+        """Shape/width checks shared by submit() and the eager prefill shim.
 
-        ``slot`` is a *traced* index: in a param-batched engine the slot's
-        reservoir is sliced out of the stack INSIDE the trace, so one
-        compiled prefill serves every slot and XLA dead-code-eliminates
-        leaves the computation never touches (e.g. the (N, N) ``qtq``
-        metric) instead of gathering them per call.
-
-        ``want_outputs=False`` skips the full (T, D_out) readout — warmup
-        paths that only need the final state + feedback seed save an
-        O(T * N) matmul and a (T, n_features) materialization."""
-        if self._batched:
-            params = jax.tree_util.tree_map(
-                lambda leaf: jax.lax.dynamic_index_in_dim(
-                    leaf, slot, keepdims=False), params)
-            if w_out is not None:
-                w_out = jax.lax.dynamic_index_in_dim(w_out, slot,
-                                                     keepdims=False)
-        y_shift = None
-        if self.cfg.use_feedback:
-            y_shift = jnp.concatenate([y0[None], y_teacher[:-1]], axis=0)
-        states = esn_fn.scan_states(params, esn_fn.drive(params, u, y_shift),
-                                    h0, method=method, chunk=chunk)
-        if w_out is None:
-            return states[-1], states, None
-        if want_outputs:
-            x = esn_fn.assemble_features(params, states, y_shift)
-            y = x @ w_out
-            return states[-1], y, y[-1]
-        # Last-step readout only: O(N) — just the closed-loop feedback seed.
-        x_last = esn_fn.assemble_features(
-            params, states[-1:], None if y_shift is None else y_shift[-1:])
-        return states[-1], None, (x_last @ w_out)[0]
-
-    def prefill(self, sid: Hashable, u, y_teacher=None, *,
-                method: str = "auto", chunk: int = 128,
-                want_outputs: bool = True):
-        """Run ``sid``'s slot through a (T, D_in) prompt with the
-        time-parallel scan (backend from ``core.dispatch``), starting from
-        the slot's current state.  Returns per-step predictions (T, D_out)
-        when a readout is trained, else the (T, N) states.
-
-        ``want_outputs=False`` skips the per-step readout and returns None —
-        cheaper when the caller only needs the slot warmed up (the feedback
-        seed for closed-loop decode is still computed)."""
-        st = self._active(sid)
-        u = jnp.asarray(u, self._dtype)
+        ``xp=np`` (submit): prompts land on host, where flush() pads them
+        into wave arrays anyway.  ``xp=jnp`` (eager prefill): the array goes
+        straight into the one-row wave, so a device-resident prompt must NOT
+        be pulled to host — validation only reads shape metadata."""
+        u = xp.asarray(u, self._dtype)
         if u.ndim != 2 or u.shape[-1] != self.cfg.d_in:
             raise ValueError(
                 f"prompt must be (T, d_in={self.cfg.d_in}), got {u.shape}")
         if u.shape[0] == 0:
             raise ValueError("prefill needs at least one token (got T=0)")
-        cfg = self.cfg
-        if cfg.use_feedback:
+        if self.cfg.use_feedback:
             if y_teacher is None:
                 raise ValueError("feedback model: prefill is teacher-forced, "
                                  "pass y_teacher")
-            y_teacher = jnp.asarray(y_teacher, self._dtype)
+            y_teacher = xp.asarray(y_teacher, self._dtype)
             if y_teacher.shape[0] != u.shape[0]:
                 raise ValueError(
                     f"y_teacher length {y_teacher.shape[0]} != prompt length "
                     f"{u.shape[0]} (one teacher output per prompt token)")
+            if y_teacher.ndim != 2 or y_teacher.shape[1] != self.cfg.d_out:
+                raise ValueError(
+                    f"y_teacher must be (T, d_out={self.cfg.d_out}), got "
+                    f"{y_teacher.shape}")
         elif y_teacher is not None:
             raise ValueError(
                 "y_teacher passed to a non-feedback model (cfg.use_feedback "
                 "is False) — it would be silently ignored; drop it or build "
                 "the model with use_feedback=True")
+        return u, y_teacher
+
+    def prefill(self, sid: Hashable, u, y_teacher=None, *,
+                method: str = "auto", chunk: int = 128,
+                want_outputs: bool = True):
+        """Eagerly run ``sid``'s (already admitted) slot through a (T, D_in)
+        prompt — a **one-row wave** through ``arena.prefill_wave``, starting
+        from the slot's current state.  Returns per-step predictions
+        (T, D_out) when a readout is trained, else the (T, N) states.
+
+        .. deprecated:: prefer :meth:`submit` + :meth:`flush` — the eager
+           path serves one session per scan, the wave path batches every
+           same-bucket prompt into one.  Numerics are identical (this shim
+           IS a B=1 wave).
+
+        ``want_outputs=False`` skips the per-step readout and returns None —
+        cheaper when the caller only needs the slot warmed up (the feedback
+        seed for closed-loop decode is still computed)."""
+        st = self._active(sid)
+        # xp=jnp: device-resident prompts stay on device (async dispatch —
+        # validation only reads shape metadata, no host transfer).
+        u, y_teacher = self._validate_prompt(u, y_teacher, xp=jnp)
+        t = int(u.shape[0])
         if method == "auto" and self.params.mode == "diag":
-            method = dispatch.resolve_method(int(u.shape[0]), chunk=chunk)
-        last, out, y_last = self._prefill_jit(
-            self.params, self.w_out, jnp.asarray(st.slot),
-            self.states[st.slot], self.y_prev[st.slot], u, y_teacher,
+            method = dispatch.resolve_method(t, chunk=chunk)
+        self.arena, out = self._wave_jit(
+            self.params, self.w_out, self.arena,
+            jnp.asarray([st.slot]), u[None],
+            jnp.asarray([t], jnp.int32),
+            None if y_teacher is None else y_teacher[None],
             method=method, chunk=chunk, want_outputs=want_outputs)
-        self.states = self.states.at[st.slot].set(last)
-        st.tokens_prefilled += int(u.shape[0])
-        if y_teacher is not None:
-            # Prefill is teacher-forced end-to-end: the teacher's last output
-            # is the feedback for the next step (prediction feedback belongs
-            # to the decode paths), keeping parity with core.esn.run.
-            self.y_prev = self.y_prev.at[st.slot].set(y_teacher[-1])
-        elif y_last is not None:
-            self.y_prev = self.y_prev.at[st.slot].set(y_last)
-        return out
+        st.tokens_prefilled += t
+        return None if out is None else out[0]
 
     # ---------------------------------------------------------------- decode
-    def _arena_step(self, params, states, u, y_prev):
-        """One reservoir step over the whole slot arena.  Shared params
-        broadcast over the (B, N) state block; a param *batch* vmaps — one
-        trace, B distinct reservoirs."""
-        fb = self.cfg.use_feedback
-        if self._batched:
-            def one(p, h, ui, yi):
-                return esn_fn.step_states(
-                    p, h, esn_fn.drive(p, ui, yi if fb else None))
-            return jax.vmap(one)(params, states, u, y_prev)
-        return esn_fn.step_states(
-            params, states, esn_fn.drive(params, u, y_prev if fb else None))
-
-    def _apply_readout(self, w_out, x):
-        if self._batched:
-            return jnp.einsum("bf,bfd->bd", x, w_out)
-        return x @ w_out
-
-    def _decode_batch(self, params, w_out, states, y_prev, u, mask):
-        new = self._arena_step(params, states, u, y_prev)
-        states = jnp.where(mask[:, None], new, states)
-        if w_out is None:
-            return states, y_prev, y_prev
-        x = esn_fn.assemble_features(params, states, y_prev)
-        y = self._apply_readout(w_out, x)
-        y_out = jnp.where(mask[:, None], y, y_prev)
-        return states, y_out, y_out
-
     def decode_step(self, inputs: Dict[Hashable, "np.ndarray"]):
         """Advance every session in ``inputs`` by one token, batched.
 
         ``inputs``: sid -> (D_in,) input vector.  Sessions not mentioned hold
         their state.  Returns sid -> (D_out,) prediction (requires a trained
         readout; without one the states advance and an empty dict returns).
+        With ``ensemble="mean"`` every queried sid maps to the SAME fused
+        prediction (the mean over the stepped reservoirs).
         The prediction is stored as the session's feedback ``y_prev``; call
         :meth:`observe` afterwards to teacher-force a ground-truth output.
         """
@@ -393,9 +524,9 @@ class ReservoirEngine:
             u[st.slot] = vec
             mask[st.slot] = True
             st.tokens_decoded += 1
-        self.states, self.y_prev, y = self._decode_jit(
-            self.params, self.w_out, self.states, self.y_prev,
-            jnp.asarray(u), jnp.asarray(mask))
+        self.arena, y = self._decode_jit(
+            self.params, self.w_out, self.arena, jnp.asarray(u),
+            jnp.asarray(mask))
         if self.readout is None:
             return {}
         y = np.asarray(y)
@@ -405,29 +536,17 @@ class ReservoirEngine:
         """Teacher-force: overwrite ``sid``'s feedback output with ground
         truth (used between open-loop decode steps)."""
         st = self._active(sid)
-        self.y_prev = self.y_prev.at[st.slot].set(
+        self.y_prev = self.arena.y_prev.at[st.slot].set(
             jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out))
 
     # ----------------------------------------------------------- closed loop
-    def _closed_loop(self, params, w_out, states, y_prev, mask,
-                     n_steps: int):
-        def step(carry, _):
-            states, y = carry
-            new = self._arena_step(params, states, y, y)
-            states = jnp.where(mask[:, None], new, states)
-            x = esn_fn.assemble_features(params, states, y)
-            y_new = self._apply_readout(w_out, x)
-            y_new = jnp.where(mask[:, None], y_new, y)
-            return (states, y_new), y_new
-
-        (states, y_prev), ys = jax.lax.scan(step, (states, y_prev), None,
-                                            length=n_steps)
-        return states, y_prev, ys
-
     def decode_closed_loop(self, n_steps: int, sids=None):
         """Free-running generation: feed each session's prediction back as its
         next input (D_in == D_out).  Decodes all active sessions in lock-step
-        (``sids`` restricts the set).  Returns sid -> (n_steps, D_out)."""
+        (``sids`` restricts the set).  Returns sid -> (n_steps, D_out).
+        With ``ensemble="mean"`` the fused mean is what free-runs: every
+        reservoir receives it as input, and every sid's series IS the mean
+        series."""
         if self.readout is None:
             raise ValueError("closed-loop decode needs a trained readout")
         if self.cfg.d_in != self.cfg.d_out:
@@ -440,9 +559,9 @@ class ReservoirEngine:
         for sid in targets:
             mask[stats[sid].slot] = True
             stats[sid].tokens_decoded += n_steps
-        self.states, self.y_prev, ys = self._closed_jit(
-            self.params, self.w_out, self.states, self.y_prev,
-            jnp.asarray(mask), int(n_steps))
+        self.arena, ys = self._closed_jit(
+            self.params, self.w_out, self.arena, jnp.asarray(mask),
+            int(n_steps))
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
         # callers (pipelined serving loops) stay async; convert to host
         # memory on their own schedule.

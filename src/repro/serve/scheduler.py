@@ -1,0 +1,129 @@
+"""WaveScheduler — host-side admission layer of the serving stack.
+
+Replaces the engine's synchronous FIFO-on-add admission: requests *accumulate*
+(:meth:`WaveScheduler.submit`), are grouped into power-of-two prompt-length
+**buckets**, and drain in **waves** (:meth:`WaveScheduler.next_wave`) — each
+wave is a same-bucket group that the arena layer runs as ONE
+``(B_wave, T_bucket)`` batched prefill instead of B sequential scans.
+Bucketing by padded length is what makes the batching free: every wave of a
+bucket reuses one compiled trace, and the arena's length-gather makes the
+padded tail steps inert.
+
+Scheduling policy — two invariants, both pinned by test:
+
+* **No starvation**: the wave is always formed around the *oldest* pending
+  request (global arrival order), then topped up with younger requests from
+  the same bucket.  A busy bucket can never indefinitely delay a lone request
+  in a quiet one.
+* **Evict-while-queued**: :meth:`cancel` removes a request before admission
+  and hands back its parked ``(h0, y0)`` — clients that disconnect before a
+  slot frees must not leak into the arena.
+
+The scheduler is pure host bookkeeping: no jax imports, no device state —
+that all lives a layer down in ``serve.arena``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable, List, Optional
+
+__all__ = ["PrefillRequest", "bucket_length", "WaveScheduler"]
+
+
+@dataclasses.dataclass
+class PrefillRequest:
+    """One queued admission: session id, optional prompt, optional parked
+    state.  ``u`` is None for admission-only requests (the legacy
+    ``add_session``-then-``prefill`` flow) — they ride bucket 0.
+    Arrival order is the queue's list order; the engine validates/coerces
+    every array *before* a request is constructed."""
+    sid: Hashable
+    u: Optional[object] = None            # (T, D_in) prompt or None
+    y_teacher: Optional[object] = None    # (T, D_out) for feedback models
+    h0: Optional[object] = None           # parked state to resume from
+    y0: Optional[object] = None
+
+    @property
+    def length(self) -> int:
+        return 0 if self.u is None else int(self.u.shape[0])
+
+
+def bucket_length(t: int, *, bucket_min: int = 16) -> int:
+    """Padded prompt length for a T-token prompt: the next power of two, at
+    least ``bucket_min`` (tiny prompts share one trace instead of compiling
+    per length).  T=0 (admission-only) stays bucket 0."""
+    if t <= 0:
+        return 0
+    return max(bucket_min, 1 << (t - 1).bit_length())
+
+
+class WaveScheduler:
+    """Accumulate requests; drain them as same-bucket waves, oldest first."""
+
+    def __init__(self, *, bucket_min: int = 16,
+                 max_wave: Optional[int] = None):
+        self.bucket_min = int(bucket_min)
+        # Cap on rows per wave (None: the caller's capacity, i.e. free
+        # slots).  The engine preserves it across reset().
+        self.max_wave = max_wave
+        self._queue: List[PrefillRequest] = []
+        self._sids: set = set()           # O(1) membership for has()
+
+    # ------------------------------------------------------------- queueing
+    def submit(self, req: PrefillRequest) -> None:
+        if req.sid in self._sids:
+            raise KeyError(f"session {req.sid!r} already queued")
+        self._queue.append(req)
+        self._sids.add(req.sid)
+
+    def has(self, sid: Hashable) -> bool:
+        return sid in self._sids
+
+    def cancel(self, sid: Hashable) -> PrefillRequest:
+        """Remove a not-yet-admitted request (client disconnected); returns
+        it so the caller can hand back the parked ``(h0, y0)``."""
+        for i, r in enumerate(self._queue):
+            if r.sid == sid:
+                self._sids.discard(sid)
+                return self._queue.pop(i)
+        raise KeyError(f"session {sid!r} is not queued")
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def __iter__(self):
+        return iter(self._queue)
+
+    @property
+    def pending_sids(self):
+        return [r.sid for r in self._queue]
+
+    # ---------------------------------------------------------------- waves
+    def bucket_of(self, req: PrefillRequest) -> int:
+        return bucket_length(req.length, bucket_min=self.bucket_min)
+
+    def next_wave(self, capacity: int) -> List[PrefillRequest]:
+        """Pop the next wave: the oldest pending request plus up to
+        ``capacity - 1`` same-bucket followers (arrival order preserved).
+        Returns [] when nothing is pending or ``capacity`` is 0.
+
+        Anchoring on the global oldest request is the no-starvation
+        guarantee: every flush strictly drains the front of the arrival
+        order, so a request waits at most (queue-ahead-of-it / capacity)
+        waves regardless of how busy other buckets are.
+        """
+        if capacity <= 0 or not self._queue:
+            return []
+        limit = capacity if self.max_wave is None else min(capacity,
+                                                           self.max_wave)
+        head = self._queue[0]
+        bucket = self.bucket_of(head)
+        wave, rest = [], []
+        for r in self._queue:
+            if len(wave) < limit and self.bucket_of(r) == bucket:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        self._sids.difference_update(r.sid for r in wave)
+        return wave

@@ -84,6 +84,80 @@ def plan_cell(mesh, cfg: ArchConfig, cell: ShapeCell) -> CellPlan:
 
 
 # --------------------------------------------------------------------------- #
+# Reservoir serving: SlotArena placement                                       #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ArenaPlan:
+    """Placements for one serving arena: pytrees of ``NamedSharding`` shaped
+    like the structs they place (``arena`` like ``serve.arena.SlotArena``,
+    ``params`` like the param struct, ``readout`` for the bare w_out)."""
+    mesh: Any
+    arena: Any
+    params: Any
+    readout: Any
+
+
+def _axis_or_none(extent: int, name: str, size: int):
+    """Shard ``extent`` over mesh axis ``name`` only when it divides evenly
+    (and the axis exists with >1 devices); otherwise replicate.  Correctness
+    never depends on the placement — an indivisible axis just stays local."""
+    return name if size > 1 and extent % size == 0 else None
+
+
+def plan_arena(mesh, params, max_slots: int, *, batched: bool = False,
+               readout=None) -> ArenaPlan:
+    """Place a ``(max_slots, N)`` slot arena (and its reservoir params) on a
+    ``(data, model)`` mesh: **slots ride the data axis, N rides the model
+    axis**.
+
+    Diag mode shards trivially — the O(N) step is element-wise in N, so the
+    state, ``lam_q`` and the Q-transformed input maps all split over
+    ``model`` with zero per-step communication.  Standard mode reuses the
+    existing TP matmul rule instead: ``W`` is column-sharded over ``model``
+    (states stay slot-sharded, XLA inserts the contraction collectives for
+    ``states @ W``), which is the same layout the LM stack's TP projections
+    use.  A param *batch* (``batched=True``) carries slots as its leading
+    leaf axis, so the whole param stack is slot-sharded over ``data`` —
+    reservoir ``i`` lives with slot ``i``.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsz, msz = sizes.get("data", 1), sizes.get("model", 1)
+    cfg = params.cfg
+    dp = _axis_or_none(max_slots, "data", dsz)
+    tp = _axis_or_none(cfg.n, "model", msz)
+
+    def sh(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    diag = params.mode == "diag"
+    arena_sh = {
+        "states": sh(dp, tp if diag else None),
+        "y_prev": sh(dp, None),
+        "active": sh(dp),
+    }
+    lead = (dp,) if batched else ()
+    if diag:
+        params_sh = dataclasses.replace(
+            params,
+            lam_q=sh(*lead, tp),
+            win_q=sh(*lead, None, tp),
+            wfb_q=None if params.wfb_q is None else sh(*lead, None, tp),
+            # qtq is the EET *training* metric — serving never touches it.
+            qtq=sh(*lead, None, None))
+    else:
+        params_sh = dataclasses.replace(
+            params,
+            w=sh(*lead, None, tp),
+            w_in=sh(*lead, None, tp),
+            w_fb=None if params.w_fb is None else sh(*lead, None, tp))
+    # n_features rarely divides the model axis (bias adds +1) and w_out is
+    # O(N * d_out) — replicate it; a batched readout slot-shards its lead.
+    readout_sh = None if readout is None else sh(*lead, None, None)
+    return ArenaPlan(mesh=mesh, arena=arena_sh, params=params_sh,
+                     readout=readout_sh)
+
+
+# --------------------------------------------------------------------------- #
 # Input specs (ShapeDtypeStruct stand-ins — no allocation)                     #
 # --------------------------------------------------------------------------- #
 def batch_structs(cfg: ArchConfig, cell: ShapeCell):

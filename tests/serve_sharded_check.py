@@ -1,0 +1,68 @@
+"""Sharded-arena parity, run under 2 placeholder CPU devices (spawned by
+tests/test_serve_stack.py::test_sharded_arena_2x1_parity_subprocess).
+
+One engine places its SlotArena on a (2, 1) local mesh (slots split over the
+``data`` axis per ``sharding.rules.plan_arena``); the reference engine runs on
+a single logical device.  Wave prefill, open-loop decode and closed-loop
+decode must agree <= 1e-5 in both model modes, and a (1, 2) mesh additionally
+splits N over ``model`` for the diag (element-wise) step.
+"""
+import os
+
+assert "--xla_force_host_platform_device_count=2" in os.environ.get(
+    "XLA_FLAGS", ""), "spawn me via test_serve_stack.py"
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import esn as esn_fn  # noqa: E402
+from repro.core.esn import ESNConfig  # noqa: E402
+from repro.data.signals import mso_series  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.serve import ReservoirEngine  # noqa: E402
+
+assert jax.device_count() == 2, jax.device_count()
+
+CFG = ESNConfig(n=32, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-8, seed=7)
+sig = mso_series(3, 401)
+u, y = sig[:-1, None], sig[1:, None]
+
+
+def check(name, a, b, tol=1e-5):
+    err = float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+    assert err <= tol, (name, err)
+    print(f"[serve_sharded_check] {name}: max_err={err:.2e} OK", flush=True)
+
+
+for mode, mesh_shape in (("diag", (2, 1)), ("standard", (2, 1)),
+                         ("diag", (1, 2))):
+    params = (esn_fn.diag_params(CFG) if mode == "diag"
+              else esn_fn.standard_params(CFG))
+    readout = esn_fn.fit(params, u[:300], y[:300], washout=50)
+    mesh = make_local_mesh(*mesh_shape)
+    tag = f"{mode}.{mesh_shape[0]}x{mesh_shape[1]}"
+
+    plain = ReservoirEngine(params, max_slots=4, readout=readout)
+    shard = ReservoirEngine(params, max_slots=4, readout=readout, mesh=mesh)
+    for eng in (plain, shard):
+        for i in range(4):
+            eng.submit(i, u[10 * i: 10 * i + 64 + i])  # mixed-length bucket
+        eng.flush()
+    for i in range(4):
+        check(f"{tag}.prefill.state[{i}]", shard.state_of(i),
+              plain.state_of(i))
+    for t in range(80, 90):
+        got = shard.decode_step({i: u[t] for i in range(4)})
+        want = plain.decode_step({i: u[t] for i in range(4)})
+        for i in range(4):
+            check(f"{tag}.decode.t{t}[{i}]", got[i], want[i])
+    got = shard.decode_closed_loop(25)
+    want = plain.decode_closed_loop(25)
+    for i in range(4):
+        check(f"{tag}.closed_loop[{i}]", got[i], want[i])
+
+print("[serve_sharded_check] ALL OK", flush=True)
