@@ -1,27 +1,41 @@
 """Perf trajectory: serve tok/s deltas between two benchmark artifact dirs.
 
-CI downloads the previous successful run's ``bench-smoke`` artifact and runs
+CI downloads the previous successful main-push run's ``bench-smoke`` artifact
+and runs
 
     PYTHONPATH=src python -m benchmarks.trajectory \
-        --prev prev_artifacts --cur artifacts >> "$GITHUB_STEP_SUMMARY"
+        --prev prev_artifacts --cur artifacts --gate --threshold 15
 
-The output is a GitHub-flavoured markdown table of serve.prefill /
-serve.decode throughput (computed from ``serve_engine.json``) with deltas vs
-the previous run — non-blocking by design (a missing/old-schema previous
-artifact degrades to a current-only table).  Also writes
-``<cur>/BENCH_trajectory.json`` so every run's artifact carries the
-comparison forward — the seed of the cross-PR perf trajectory.
+The output is a GitHub-flavoured markdown table of serve prefill/decode
+throughput (computed from ``serve_engine.json``) with deltas vs the previous
+run.  ``--gate`` promotes the step from a printed delta table to a
+**regression gate**: any serve metric more than ``--threshold`` percent
+slower than the baseline exits non-zero (a ``::error::`` annotation per
+regression).  ``--waive`` — set by CI when the PR carries the
+``perf-waiver`` label — downgrades regressions to ``::warning::``
+annotations, recording an intentional trade instead of blocking it.
+
+Failure modes degrade loudly, never silently: a missing baseline emits a
+``::notice`` and runs ungated (first run / expired artifact / fork without
+token scope), a missing *current* artifact emits a ``::warning`` (the bench
+smoke upstream failed — there is nothing to gate), and
+``<cur>/BENCH_trajectory.json`` (the comparison record, including the gate
+verdict) is written *before* the gate exits, so the artifact upload step
+carries it even when the job goes red.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 
 #: metric name -> (json section, micros key, tokens expression)
 _SERVE_METRICS = {
     "serve.prefill.bucketed": ("prefill_wave", "bucketed_us", "tokens"),
     "serve.prefill.sequential": ("prefill_wave", "sequential_us", "tokens"),
+    "serve.prefill.autotuned": ("prefill_autotuned", "autotuned_us",
+                                "tokens"),
     "serve.prefill.engine": ("prefill", "engine_us", "tokens"),
     "serve.decode.engine": ("decode", "engine_us", "tokens"),
     "serve.decode.sharded": ("decode_sharded", "us", None),
@@ -50,14 +64,18 @@ def tok_s(res, section, us_key, tok_key):
     return float(tokens) / (us * 1e-6)
 
 
-def main(prev_dir: str, cur_dir: str) -> str:
+def compare(prev_dir: str, cur_dir: str, threshold: float):
+    """Build the markdown table, the artifact record, and the list of
+    metrics regressed more than ``threshold`` percent."""
     cur = _load(os.path.join(cur_dir, "serve_engine.json"))
     prev = _load(os.path.join(prev_dir, "serve_engine.json"))
     lines = ["### Serve perf trajectory",
              "",
              "| metric | prev tok/s | cur tok/s | delta |",
              "|---|---|---|---|"]
-    record = {"metrics": {}}
+    record = {"metrics": {}, "gate": {"threshold_pct": threshold,
+                                      "regressions": []}}
+    regressions = []
     for name, (section, us_key, tok_key) in _SERVE_METRICS.items():
         c = tok_s(cur, section, us_key, tok_key)
         p = tok_s(prev, section, us_key, tok_key)
@@ -66,22 +84,67 @@ def main(prev_dir: str, cur_dir: str) -> str:
             continue
         if p:
             delta = 100.0 * (c - p) / p
-            lines.append(f"| {name} | {p:,.0f} | {c:,.0f} | {delta:+.1f}% |")
+            flag = ""
+            if delta < -threshold:
+                regressions.append((name, p, c, delta))
+                flag = " ⚠"
+            lines.append(f"| {name} | {p:,.0f} | {c:,.0f} |"
+                         f" {delta:+.1f}%{flag} |")
         else:
             lines.append(f"| {name} | – | {c:,.0f} | n/a |")
+    record["gate"]["regressions"] = [
+        {"metric": n, "prev_tok_s": p, "cur_tok_s": c, "delta_pct": d}
+        for n, p, c, d in regressions]
     if cur is None:
         lines.append("| _no current serve_engine.json_ | | | |")
     if prev is None:
         lines.append("")
         lines.append("_no previous artifact — this run seeds the trajectory_")
-    out = "\n".join(lines)
+    return "\n".join(lines), record, regressions, prev is None, cur is None
+
+
+def main(prev_dir: str, cur_dir: str, *, gate: bool = False,
+         threshold: float = 15.0, waive: bool = False) -> int:
+    out, record, regressions, no_prev, no_cur = compare(prev_dir, cur_dir,
+                                                        threshold)
+    record["gate"]["gated"] = gate
+    record["gate"]["waived"] = waive
+    print(out)
+    # The record is written BEFORE any gate exit: the artifact upload step
+    # runs `if: always()`, so a red gate still ships its own evidence.
     try:
         os.makedirs(cur_dir, exist_ok=True)
         with open(os.path.join(cur_dir, "BENCH_trajectory.json"), "w") as f:
             json.dump(record, f, indent=1)
     except OSError:
         pass                                  # summary still prints
-    return out
+    # Workflow-command annotations go to STDERR: the runner parses them from
+    # the whole step log, but CI tees only stdout into the step summary —
+    # raw ::error/::notice lines must not render as junk below the table.
+    if no_prev:
+        # Loud, not silent: a baseline that resolves empty must be visible
+        # in the job log, or every gate pass is ambiguous.
+        print("::notice title=perf trajectory::baseline resolved empty "
+              "(first run, expired artifact, or fork without token scope) "
+              "— trajectory runs ungated", file=sys.stderr)
+        return 0
+    if no_cur:
+        print("::warning title=perf trajectory::no current "
+              "serve_engine.json — the bench smoke upstream failed, "
+              "nothing to gate", file=sys.stderr)
+        return 0
+    if not regressions:
+        return 0
+    kind = "warning" if (waive or not gate) else "error"
+    for name, p, c, delta in regressions:
+        print(f"::{kind} title=serve tok/s regression::{name} "
+              f"{p:,.0f} -> {c:,.0f} tok/s ({delta:+.1f}%, "
+              f"threshold -{threshold:g}%)", file=sys.stderr)
+    if waive and gate:
+        print("::notice title=perf trajectory::perf-waiver label set — "
+              f"{len(regressions)} regression(s) recorded, gate waived",
+              file=sys.stderr)
+    return 1 if (gate and not waive) else 0
 
 
 if __name__ == "__main__":
@@ -90,5 +153,14 @@ if __name__ == "__main__":
                     help="directory holding the previous run's *.json")
     ap.add_argument("--cur", default="artifacts",
                     help="directory holding this run's *.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero when any serve metric regresses "
+                         "more than --threshold percent vs the baseline")
+    ap.add_argument("--threshold", type=float, default=15.0,
+                    help="regression threshold in percent (default 15)")
+    ap.add_argument("--waive", action="store_true",
+                    help="downgrade regressions to warnings (CI sets this "
+                         "from the PR's perf-waiver label)")
     args = ap.parse_args()
-    print(main(args.prev, args.cur))
+    sys.exit(main(args.prev, args.cur, gate=args.gate,
+                  threshold=args.threshold, waive=args.waive))

@@ -12,6 +12,11 @@ batched prefill), free-run closed-loop decode in lock-step, and are evicted
 data-parallel, N TP-sharded — ``sharding.rules.plan_arena``); ``--bucket``
 sets the smallest prefill bucket; ``--ensemble mean`` fuses the per-slot
 reservoir predictions of a param-batched engine into one output.
+``--autotune`` times every wave and lets the cost-model two-wave lookahead
+plan wave sizes/buckets by predicted tok/s (seed it offline from a benchmark
+artifact via ``--cost-seed artifacts/serve_engine.json``); ``--chunk-max``
+splits long prompts into sequential chunk waves so one huge prompt cannot
+monopolize the arena.
 
 LM smoke loop (token-synchronous prefill + lock-step decode over the
 transformer/hybrid archs — KV/state caches):
@@ -49,7 +54,7 @@ def serve_reservoir(args) -> None:
     from repro.core.esn import ESNConfig
     from repro.core.params import Readout, stack_params
     from repro.data.signals import mso_series
-    from repro.serve import ReservoirEngine
+    from repro.serve import ReservoirEngine, WaveCostModel
 
     cfg = ESNConfig(n=args.n, spectral_radius=0.95, leak=0.9,
                     input_scaling=0.5, ridge_alpha=1e-8, seed=args.seed)
@@ -70,6 +75,24 @@ def serve_reservoir(args) -> None:
         print(f"arena mesh: ({d}, {m}) over (data, model) — slots "
               f"data-parallel, N TP-sharded")
 
+    cost_model = None
+    if args.cost_seed:
+        # A seed alone enables cost-model *planning* (no per-wave timing
+        # sync — the steady-state serving mode); --autotune adds online
+        # refinement on top.
+        cost_model = WaveCostModel.from_artifact(args.cost_seed)
+        mode = ("refining online" if args.autotune
+                else "planning only — add --autotune to refine online")
+        print(f"cost model seeded with {cost_model.n_observations} offline "
+              f"wave timings from {args.cost_seed} ({mode})")
+    elif args.autotune:
+        cost_model = WaveCostModel()
+        print("autotune: cold cost model — learning from this run's "
+              "wave timings")
+    engine_kw = dict(mesh=mesh, bucket_min=args.bucket,
+                     chunk_max=args.chunk_max, autotune=args.autotune,
+                     cost_model=cost_model)
+
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
                                    "noisy_golden", sigma=0.1)
@@ -79,16 +102,16 @@ def serve_reservoir(args) -> None:
             esn_fn.fit(p, u_train, y_train, washout=100).w_out
             for p in batch]))
         engine = ReservoirEngine.from_param_batch(
-            params, readout=readout, mesh=mesh, bucket_min=args.bucket,
-            ensemble="mean" if args.ensemble == "mean" else "off")
+            params, readout=readout,
+            ensemble="mean" if args.ensemble == "mean" else "off",
+            **engine_kw)
         print(f"ensemble mode ({args.ensemble}): {args.slots} independently-"
               f"seeded reservoirs, one vmap-ed decode trace")
     else:
         params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
         readout = esn_fn.fit(params, u_train, y_train, washout=100)
         engine = ReservoirEngine(params, max_slots=args.slots,
-                                 readout=readout, mesh=mesh,
-                                 bucket_min=args.bucket)
+                                 readout=readout, **engine_kw)
 
     if args.ensemble == "mean":
         # One logical stream, B reservoirs voting: same prompt everywhere,
@@ -141,7 +164,10 @@ def serve_reservoir(args) -> None:
         engine.flush()      # wave-batched bucketed prefill of what fits
         jax.block_until_ready(engine.states)  # don't let prefill drain into the decode timer
         t_prefill += time.time() - t1
-        wave = list(engine.active_sessions)
+        # ready (not active): chunk-in-flight sessions hold slots but must
+        # not free-run mid-prompt (flush() drains all runnable chunks, so
+        # the sets only differ under flush(max_waves=...) partial drains)
+        wave = list(engine.ready_sessions)
         prefill_tokens += args.prompt_len * len(wave)
         t1 = time.time()
         ys = engine.decode_closed_loop(args.gen, sids=wave)
@@ -160,6 +186,19 @@ def serve_reservoir(args) -> None:
           f"bucketed waves, backend auto-dispatch)")
     print(f"  decode  {decode_tokens} tok in {t_decode:.2f}s "
           f"({decode_tokens / max(t_decode, 1e-9):.0f} tok/s, closed loop)")
+    if args.autotune:
+        st = engine.stats()
+        occ = st["occupancy_mean"]
+        lat = st["wave_us_mean"]
+        print(f"  autotune: {st['waves_total']} waves, mean occupancy "
+              f"{occ:.2f}, mean wave latency "
+              f"{lat / 1e3 if lat else float('nan'):.1f} ms, "
+              f"{engine.cost_model.n_observations} cost observations")
+        for t_bucket, row in sorted(st["by_bucket"].items()):
+            us = row["us_sum"] / max(row["timed_waves"], 1)
+            print(f"    bucket {t_bucket:>6}: {row['waves']} waves, "
+                  f"{row['rows']} rows, {row['tokens']} tok, "
+                  f"~{us / 1e3:.1f} ms/wave")
 
 
 # ----------------------------------------------------------------------- lm
@@ -243,6 +282,19 @@ def main():
     ap.add_argument("--bucket", type=int, default=16,
                     help="smallest prefill bucket; prompt lengths are "
                          "padded up to powers of two for wave batching")
+    ap.add_argument("--autotune", action="store_true",
+                    help="cost-model wave planning: time every wave, fit "
+                         "c(B, T_bucket), and pick wave size/bucket by "
+                         "predicted tok/s (two-wave lookahead)")
+    ap.add_argument("--cost-seed", default=None, metavar="PATH",
+                    help="seed the cost model from a benchmark artifact "
+                         "(e.g. artifacts/serve_engine.json); on its own "
+                         "enables planning without per-wave timing sync, "
+                         "with --autotune it warm-starts the refinement")
+    ap.add_argument("--chunk-max", type=int, default=None,
+                    help="split prompts longer than this into sequential "
+                         "chunk waves (same slot, bit-exact) so one huge "
+                         "prompt cannot monopolize the arena")
     args = ap.parse_args()
     if args.reservoir:
         serve_reservoir(args)

@@ -6,20 +6,25 @@
 ``sharding.rules.plan_arena``.
 ``scheduler`` — host-side admission: requests accumulate, bucket by padded
 prompt length (powers of two), and drain as same-bucket waves — each wave is
-ONE batched prefill.
+ONE batched prefill.  Long prompts split into sequential chunk waves
+(``chunk_max``), and an optional cost model drives a two-wave lookahead.
+``cost``      — ``WaveCostModel``: per-bucket affine wave-cost fits from
+measured timings (seeded offline by ``benchmarks/serve_engine.py``, refined
+online from engine-recorded wave timings) — what the lookahead plans against.
 ``engine``    — ``ReservoirEngine``: the thin orchestrator (session <-> slot
 mapping, submit/flush/decode/evict lifecycle, ensemble-mean readout fusion,
-legacy eager API preserved as shims).
+wave occupancy/latency ``stats()``, legacy eager API preserved as shims).
 ``dispatch``  — compatibility re-export of ``core.dispatch`` (the
 shape-heuristic scan-backend selection moved down into core).
 """
-from . import arena, dispatch, engine, scheduler
+from . import arena, cost, dispatch, engine, scheduler
 from .arena import SlotArena
+from .cost import WaveCostModel
 from .dispatch import resolve_method, run_scan_q
 from .engine import ReservoirEngine, SessionStats
-from .scheduler import PrefillRequest, WaveScheduler, bucket_length
+from .scheduler import PrefillRequest, WaveItem, WaveScheduler, bucket_length
 
-__all__ = ["arena", "dispatch", "engine", "scheduler",
-           "SlotArena", "resolve_method", "run_scan_q",
+__all__ = ["arena", "cost", "dispatch", "engine", "scheduler",
+           "SlotArena", "WaveCostModel", "resolve_method", "run_scan_q",
            "ReservoirEngine", "SessionStats",
-           "PrefillRequest", "WaveScheduler", "bucket_length"]
+           "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length"]

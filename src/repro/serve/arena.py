@@ -244,6 +244,16 @@ def prefill_wave(params, w_out, arena: SlotArena, slots, u, lengths,
     None), zeroed past each row's true length, or None when
     ``want_outputs=False``.
 
+    **Resumable carry**: every row starts from its slot's *current*
+    ``(states[slot], y_prev[slot])`` and writes the post-scan carry back, so
+    running a prompt as K sequential same-slot waves over its chunks is
+    numerically identical to one wave over the whole prompt — chunk k+1's
+    ``h0`` is chunk k's gathered final state, and for feedback models chunk
+    k+1's ``y0`` is chunk k's last true teacher output (exactly the
+    ``y_shift`` element the unchunked scan would use at that step).  The
+    scheduler's chunked long-prompt waves (``WaveScheduler(chunk_max=...)``)
+    ride this path; bit-parity vs the unchunked wave is pinned by test.
+
     ``method`` is static: the engine resolves it host-side from the bucket
     length (``core.dispatch.resolve_method``), so every wave of a bucket
     reuses one compiled trace.

@@ -1,0 +1,179 @@
+"""Wave cost model: measured prefill timings -> predicted wave cost.
+
+The diagonal reformulation makes the per-step update O(N) element-wise, so
+serve throughput is dominated by *scheduling* quality — how full each
+``(B_wave, T_bucket)`` prefill wave is and which bucket gets the free-slot
+budget.  This module is the quantitative half of that decision:
+:class:`WaveCostModel` fits the wall cost of one wave,
+
+    c(B, T_bucket)  ~=  alpha_T + beta_T * B        (per-bucket affine)
+
+from measured wave timings, and the scheduler's two-wave lookahead
+(``serve.scheduler.WaveScheduler.next_wave``) uses it to pick the wave that
+maximizes predicted true-tokens-per-second.
+
+Why affine-per-bucket: every wave of a bucket reuses one compiled
+``(B, T_bucket)`` trace, so within a bucket the cost is a fixed dispatch/
+launch overhead (``alpha_T``) plus a per-row term (``beta_T``) — the scan
+itself is batched, so rows are nearly free until the backend saturates.
+Buckets with too few observations fall back to a *global* surface
+``c ~= a0 + a1 * B * T`` fitted over all observations, and a cold model uses
+documented constants — a wrong cost guess costs throughput, never
+correctness (the planner only reorders waves; numerics are unchanged).
+
+Seeding is two-stage, mirroring how the model is used:
+
+* **offline** — ``benchmarks/serve_engine.py`` exports its measured wave
+  timings into ``artifacts/serve_engine.json`` under ``"wave_costs"``;
+  :meth:`WaveCostModel.from_artifact` warm-starts from that file.
+* **online**  — ``ReservoirEngine(autotune=True)`` times every flushed wave
+  (``engine.stats()`` keeps the same numbers) and calls :meth:`observe`, so
+  the model tracks the machine it is actually serving on.
+
+Host-only module: no jax imports (numpy least squares only) — it must stay
+importable for pure scheduling tests and never touch a device.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Deque, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["WaveCostModel"]
+
+#: Keep this many most-recent observations per bucket: enough to fit a stable
+#: affine model, small enough that a drifting machine (thermal throttling,
+#: noisy neighbours) is forgotten within ~a minute of serving.
+_OBS_CAP = 64
+
+
+class WaveCostModel:
+    """Predicts the wall cost (microseconds) of one ``(B, T_bucket)`` wave.
+
+    ``base_us`` / ``per_token_us``: the cold-start constants used before any
+    observation lands — a fixed dispatch overhead plus a linear token term.
+    They only have to get the *ordering* of candidate waves roughly right;
+    real timings replace them after the first flush.
+    """
+
+    def __init__(self, *, base_us: float = 300.0,
+                 per_token_us: float = 0.05):
+        self.base_us = float(base_us)
+        self.per_token_us = float(per_token_us)
+        self._obs: Dict[int, Deque[Tuple[int, float]]] = {}
+        self._fits: Dict[int, Optional[Tuple[float, float]]] = {}
+        self._global: Optional[Tuple[float, float]] = None
+        self._dirty: set = set()
+        self._global_dirty = False
+
+    # ------------------------------------------------------------ observing
+    def observe(self, b: int, t_bucket: int, us: float) -> None:
+        """Record one measured wave: ``b`` rows, bucket ``t_bucket``, ``us``
+        wall microseconds."""
+        if b <= 0 or us <= 0:
+            return
+        t = int(t_bucket)
+        self._obs.setdefault(t, collections.deque(maxlen=_OBS_CAP)).append(
+            (int(b), float(us)))
+        self._dirty.add(t)
+        self._global_dirty = True
+
+    def seed(self, records: Iterable[dict]) -> int:
+        """Bulk-observe ``{"b":, "t_bucket":, "us":}`` records (the shape
+        ``benchmarks/serve_engine.py`` exports).  Returns how many landed."""
+        n = 0
+        for r in records:
+            try:
+                self.observe(int(r["b"]), int(r["t_bucket"]), float(r["us"]))
+                n += 1
+            except (KeyError, TypeError, ValueError):
+                continue
+        return n
+
+    @classmethod
+    def from_artifact(cls, path: str, **kw) -> "WaveCostModel":
+        """Warm-start from a benchmark artifact (``serve_engine.json``).
+        A missing/old-schema file yields a cold model — offline seeding is an
+        optimization, never a requirement."""
+        model = cls(**kw)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return model
+        records = data.get("wave_costs") if isinstance(data, dict) else None
+        if isinstance(records, list):
+            model.seed(records)
+        return model
+
+    @property
+    def n_observations(self) -> int:
+        return sum(len(d) for d in self._obs.values())
+
+    def clear(self) -> None:
+        """Drop every observation and fit (cold-start constants remain).
+        Callers that warm traces before measuring use this between the
+        compile pass and the measurement pass — first-call timings include
+        XLA compilation and would skew the fits by orders of magnitude."""
+        self._obs.clear()
+        self._fits.clear()
+        self._global = None
+        self._dirty.clear()
+        self._global_dirty = False
+
+    def records(self) -> list:
+        """The retained observations as ``{"b", "t_bucket", "us"}`` dicts —
+        the exact shape :meth:`seed` / :meth:`from_artifact` consume (what
+        ``benchmarks/serve_engine.py`` exports under ``"wave_costs"``)."""
+        return [{"b": b, "t_bucket": t, "us": us}
+                for t, d in sorted(self._obs.items()) for b, us in d]
+
+    # ------------------------------------------------------------ predicting
+    def _fit_bucket(self, t: int) -> Optional[Tuple[float, float]]:
+        obs = self._obs.get(t)
+        if not obs or len({b for b, _ in obs}) < 2:
+            return None                      # need >= 2 distinct B for affine
+        bs = np.asarray([b for b, _ in obs], float)
+        us = np.asarray([u for _, u in obs], float)
+        a = np.stack([np.ones_like(bs), bs], axis=1)
+        (alpha, beta), *_ = np.linalg.lstsq(a, us, rcond=None)
+        # Clamp to the physical regime: cost never negative at B=0 and never
+        # shrinks with more rows (a noisy fit must not invert the ordering).
+        return max(float(alpha), 0.0), max(float(beta), 0.0)
+
+    def _fit_global(self) -> Optional[Tuple[float, float]]:
+        pts = [(b * t, us) for t, d in self._obs.items() for b, us in d]
+        if len(pts) < 2 or len({w for w, _ in pts}) < 2:
+            return None
+        work = np.asarray([w for w, _ in pts], float)
+        us = np.asarray([u for _, u in pts], float)
+        a = np.stack([np.ones_like(work), work], axis=1)
+        (a0, a1), *_ = np.linalg.lstsq(a, us, rcond=None)
+        return max(float(a0), 0.0), max(float(a1), 0.0)
+
+    def predict_us(self, b: int, t_bucket: int) -> float:
+        """Predicted wall microseconds for a ``b``-row wave of ``t_bucket``.
+        Per-bucket fit when trained, global surface as fallback, cold-start
+        constants before any data; always >= 1 (the planner divides by it)."""
+        t = int(t_bucket)
+        if t in self._dirty:
+            self._fits[t] = self._fit_bucket(t)
+            self._dirty.discard(t)
+        fit = self._fits.get(t)
+        if fit is not None:
+            alpha, beta = fit
+            return max(alpha + beta * b, 1.0)
+        if self._global_dirty:
+            self._global = self._fit_global()
+            self._global_dirty = False
+        if self._global is not None:
+            a0, a1 = self._global
+            return max(a0 + a1 * b * t, 1.0)
+        return max(self.base_us + self.per_token_us * b * t, 1.0)
+
+    def throughput(self, b: int, t_bucket: int, true_tokens: int) -> float:
+        """Predicted true-tokens-per-second of a candidate wave (``b`` rows of
+        bucket ``t_bucket`` carrying ``true_tokens`` unpadded tokens)."""
+        return float(true_tokens) / (self.predict_us(b, t_bucket) * 1e-6)

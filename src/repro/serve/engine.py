@@ -31,9 +31,11 @@ in closed loop, so the ensemble free-runs as a single logical stream.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Dict, Hashable, Optional
+import time
+from typing import Dict, Hashable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,17 +44,22 @@ import numpy as np
 from ..core import dispatch
 from ..core.params import DiagParams, Readout, StandardParams
 from . import arena as arena_mod
-from .scheduler import PrefillRequest, WaveScheduler
+from .cost import WaveCostModel
+from .scheduler import (PrefillRequest, WaveItem, WaveScheduler,
+                        bucket_length)
 
 __all__ = ["SessionStats", "ReservoirEngine"]
 
 
 @dataclasses.dataclass(slots=True)
 class SessionStats:
-    """Per-session accounting (host-side; never enters jit)."""
+    """Per-session accounting (host-side; never enters jit).
+    ``prefill_pending``: the session holds a slot but chunk waves of its
+    prompt are still queued — decode is blocked until the last chunk lands."""
     slot: int
     tokens_prefilled: int = 0
     tokens_decoded: int = 0
+    prefill_pending: bool = False
 
 
 def _coerce_model(model, readout):
@@ -86,6 +93,14 @@ class ReservoirEngine:
     TP-sharded) so one engine spans all the mesh's devices.  ``bucket_min``:
     smallest prefill bucket (prompt lengths are padded up to powers of two).
 
+    ``chunk_max``: prompts longer than this drain as sequential chunk waves
+    resumed from the slot's carried state (bit-exact vs one wave; pinned by
+    test) — a 500k-token prompt no longer monopolizes the arena.
+    ``autotune``: time every flushed wave, feed the measurements into a
+    ``serve.cost.WaveCostModel`` (pass a pre-seeded one via ``cost_model``),
+    and let the scheduler's two-wave lookahead plan waves by predicted
+    tokens-per-second instead of the static ``max_wave`` cap.
+
     The engine **snapshots (params, readout) at construction** — both are
     immutable structs, so nothing can mutate underneath the compiled step
     functions; build the engine *after* fitting.
@@ -94,6 +109,8 @@ class ReservoirEngine:
     def __init__(self, model, max_slots: int = 8, *,
                  readout: Optional[Readout] = None, mesh=None,
                  bucket_min: int = 16, ensemble: str = "off",
+                 chunk_max: Optional[int] = None, autotune: bool = False,
+                 cost_model: Optional[WaveCostModel] = None,
                  _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
@@ -133,7 +150,25 @@ class ReservoirEngine:
         self.arena = self._fresh_arena()
         self._slots: list = [None] * self.max_slots  # slot -> session id
         self.sessions: Dict[Hashable, SessionStats] = {}
-        self.scheduler = WaveScheduler(bucket_min=bucket_min)
+        # Cost-model wave planning: autotune=True times every flushed wave
+        # (host-blocking — the price of a measurement) and feeds the model,
+        # which the scheduler's two-wave lookahead then plans against.  A
+        # pre-seeded model (WaveCostModel.from_artifact) can be passed in;
+        # autotune without one starts cold and learns from the first flush.
+        self._autotune = bool(autotune)
+        if autotune and cost_model is None:
+            cost_model = WaveCostModel()
+        self.cost_model = cost_model
+        self.scheduler = WaveScheduler(bucket_min=bucket_min,
+                                       chunk_max=chunk_max,
+                                       cost_model=cost_model)
+        self._chunk_outs: Dict[Hashable, List] = {}
+        self._stats = {"waves": 0, "rows": 0, "fresh_rows": 0,
+                       "prefill_tokens": 0, "decode_tokens": 0,
+                       "occupancy_sum": 0.0,
+                       "wave_us_sum": 0.0, "timed_waves": 0,
+                       "by_bucket": {}}
+        self._wave_log: collections.deque = collections.deque(maxlen=256)
         self._decode_jit = jax.jit(functools.partial(
             arena_mod.decode_step, batched=self._batched,
             ensemble=self.ensemble))
@@ -158,7 +193,11 @@ class ReservoirEngine:
     @classmethod
     def from_param_batch(cls, params, readout: Optional[Readout] = None, *,
                          ensemble: str = "off", mesh=None,
-                         bucket_min: int = 16) -> "ReservoirEngine":
+                         bucket_min: int = 16,
+                         chunk_max: Optional[int] = None,
+                         autotune: bool = False,
+                         cost_model: Optional[WaveCostModel] = None
+                         ) -> "ReservoirEngine":
         """Engine over a *batch* of independently-seeded reservoirs.
 
         ``params``: a stacked struct (``core.params.stack_params``) whose
@@ -176,7 +215,9 @@ class ReservoirEngine:
         """
         b = jax.tree_util.tree_leaves(params)[0].shape[0]
         return cls(params, max_slots=b, readout=readout, ensemble=ensemble,
-                   mesh=mesh, bucket_min=bucket_min, _param_batch=True)
+                   mesh=mesh, bucket_min=bucket_min, chunk_max=chunk_max,
+                   autotune=autotune, cost_model=cost_model,
+                   _param_batch=True)
 
     # -------------------------------------------------------------- compat
     @property
@@ -292,68 +333,174 @@ class ReservoirEngine:
                                              h0=h0, y0=y0))
 
     def flush(self, *, method: str = "auto", chunk: int = 128,
-              want_outputs: bool = False) -> Dict[Hashable, object]:
-        """Drain the admission queue into free slots, one batched prefill per
-        same-bucket wave.  Returns sid -> per-step outputs for the admitted
-        prompt sessions (None entries unless ``want_outputs=True``).
+              want_outputs: bool = False,
+              max_waves: Optional[int] = None) -> Dict[Hashable, object]:
+        """Drain the admission queue, one batched prefill per same-bucket
+        wave.  Returns sid -> per-step outputs for the prompt sessions that
+        *completed* their prefill this flush (None entries unless
+        ``want_outputs=True``; chunked prompts yield the concatenation of
+        their chunk outputs when the last chunk lands).
 
         Each wave is a ``(B_wave, T_bucket)`` call into
         ``arena.prefill_wave`` — rows padded to the bucket length share one
         compiled trace, and the padded tail steps are inert (the per-row
-        final state is gathered at the true length).
+        final state is gathered at the true length).  With ``chunk_max`` set
+        a long prompt drains as K sequential chunk rows resumed from the
+        slot's carried state, interleaved with other buckets' waves; chunk
+        *continuation* rows need no free slot, so they keep draining even
+        with the arena full.  ``max_waves`` bounds how many waves this call
+        runs (None: until nothing is runnable) — serving loops use it to
+        interleave decode between waves.  Keep ``want_outputs`` consistent
+        across the flushes that drain one chunked prompt: chunks that ran
+        under ``want_outputs=False`` recorded no outputs to concatenate.
         """
         results: Dict[Hashable, object] = {}
-        while len(self.scheduler) and self.free_slots:
-            wave = self.scheduler.next_wave(self.free_slots)
+        waves_run = 0
+        while max_waves is None or waves_run < max_waves:
+            capacity = self.free_slots
+            wave = self.scheduler.next_wave(capacity)
             if not wave:
                 break
-            # One batched placement for the whole wave (per-slot .at[] sets
-            # are device dispatches; at wave sizes they'd dwarf the scan).
-            placed = []
-            h0s = np.zeros((len(wave), self.cfg.n), self._dtype)
-            y0s = np.zeros((len(wave), self.cfg.d_out), self._dtype)
-            for i, req in enumerate(wave):
+            waves_run += 1
+            self._run_wave(wave, capacity, results, method=method,
+                           chunk=chunk, want_outputs=want_outputs)
+        return results
+
+    def _run_wave(self, wave: List[WaveItem], capacity: int,
+                  results: Dict[Hashable, object], *, method: str,
+                  chunk: int, want_outputs: bool) -> None:
+        # One batched placement for the whole wave's admissions (per-slot
+        # .at[] sets are device dispatches; at wave sizes they'd dwarf the
+        # scan).  Continuation rows already own their slot.
+        fresh = [it for it in wave if it.first]
+        if fresh:
+            h0s = np.zeros((len(fresh), self.cfg.n), self._dtype)
+            y0s = np.zeros((len(fresh), self.cfg.d_out), self._dtype)
+            slots = []
+            for i, it in enumerate(fresh):
                 slot = self._slots.index(None)
-                self._slots[slot] = req.sid
-                self.sessions[req.sid] = SessionStats(slot=slot)
-                if req.h0 is not None:
-                    h0s[i] = np.asarray(req.h0)
-                if req.y0 is not None:
-                    y0s[i] = np.asarray(req.y0)
-                placed.append((req, slot))
-            slots = jnp.asarray([s for _, s in placed])
-            self.arena = arena_mod.place_many(self.arena, slots,
+                self._slots[slot] = it.sid
+                self.sessions[it.sid] = SessionStats(
+                    slot=slot, prefill_pending=not it.last)
+                if it.req.h0 is not None:
+                    h0s[i] = np.asarray(it.req.h0)
+                if it.req.y0 is not None:
+                    y0s[i] = np.asarray(it.req.y0)
+                slots.append(slot)
+            self.arena = arena_mod.place_many(self.arena, jnp.asarray(slots),
                                               jnp.asarray(h0s),
                                               jnp.asarray(y0s))
-            placed = [(r, s) for r, s in placed if r.u is not None]
-            if not placed:
-                continue            # admission-only wave (bucket 0)
-            t_bucket = self.scheduler.bucket_of(placed[0][0])
-            bw = len(placed)
-            u_pad = np.zeros((bw, t_bucket, self.cfg.d_in), self._dtype)
-            lengths = np.zeros((bw,), np.int32)
-            yt_pad = (np.zeros((bw, t_bucket, self.cfg.d_out), self._dtype)
-                      if self.cfg.use_feedback else None)
-            for i, (req, _) in enumerate(placed):
-                t = req.length
-                u_pad[i, :t] = req.u
-                lengths[i] = t
-                if yt_pad is not None:
-                    yt_pad[i, :t] = req.y_teacher
-            slots = jnp.asarray([s for _, s in placed])
-            wave_method = method
-            if wave_method == "auto" and self.params.mode == "diag":
-                wave_method = dispatch.resolve_method(t_bucket, chunk=chunk)
-            self.arena, out = self._wave_jit(
-                self.params, self.w_out, self.arena, slots,
-                jnp.asarray(u_pad), jnp.asarray(lengths),
-                None if yt_pad is None else jnp.asarray(yt_pad),
-                method=wave_method, chunk=chunk, want_outputs=want_outputs)
-            for i, (req, _) in enumerate(placed):
-                self.sessions[req.sid].tokens_prefilled += int(lengths[i])
-                results[req.sid] = (None if out is None
-                                   else out[i, :int(lengths[i])])
-        return results
+        prompts = [it for it in wave if it.req.u is not None]
+        if not prompts:
+            self._record_wave(0, len(wave), len(fresh), capacity, 0, None)
+            return                  # admission-only wave (bucket 0)
+        t_bucket = bucket_length(prompts[0].length,
+                                 bucket_min=self.scheduler.bucket_min)
+        bw = len(prompts)
+        u_pad = np.zeros((bw, t_bucket, self.cfg.d_in), self._dtype)
+        lengths = np.zeros((bw,), np.int32)
+        yt_pad = (np.zeros((bw, t_bucket, self.cfg.d_out), self._dtype)
+                  if self.cfg.use_feedback else None)
+        for i, it in enumerate(prompts):
+            t = it.length
+            u_pad[i, :t] = it.req.u[it.start:it.stop]
+            lengths[i] = t
+            if yt_pad is not None:
+                yt_pad[i, :t] = it.req.y_teacher[it.start:it.stop]
+        slots = jnp.asarray([self.sessions[it.sid].slot for it in prompts])
+        wave_method = method
+        if wave_method == "auto" and self.params.mode == "diag":
+            wave_method = dispatch.resolve_method(t_bucket, chunk=chunk)
+        t0 = time.perf_counter() if self._autotune else None
+        self.arena, out = self._wave_jit(
+            self.params, self.w_out, self.arena, slots,
+            jnp.asarray(u_pad), jnp.asarray(lengths),
+            None if yt_pad is None else jnp.asarray(yt_pad),
+            method=wave_method, chunk=chunk, want_outputs=want_outputs)
+        us = None
+        if t0 is not None:
+            # Timing a wave means waiting for it — autotune trades a host
+            # sync per wave for a cost model that tracks this machine.
+            jax.block_until_ready(self.arena.states)
+            us = (time.perf_counter() - t0) * 1e6
+            self.cost_model.observe(bw, t_bucket, us)
+        tokens = int(lengths.sum())
+        self._record_wave(t_bucket, len(wave), len(fresh), capacity,
+                          tokens, us)
+        for i, it in enumerate(prompts):
+            st = self.sessions[it.sid]
+            st.tokens_prefilled += int(lengths[i])
+            if want_outputs:
+                self._chunk_outs.setdefault(it.sid, []).append(
+                    out[i, :int(lengths[i])])
+            if it.last:
+                st.prefill_pending = False
+                # Pop unconditionally: a want_outputs=False final chunk must
+                # still clear chunks recorded by earlier want_outputs=True
+                # flushes, or a later session reusing the sid would
+                # concatenate this session's stale outputs into its own.
+                chunks = self._chunk_outs.pop(it.sid, None)
+                if not want_outputs:
+                    results[it.sid] = None
+                else:
+                    results[it.sid] = (chunks[0] if len(chunks) == 1
+                                       else jnp.concatenate(chunks, axis=0))
+
+    def _record_wave(self, t_bucket: int, rows: int, fresh: int,
+                     capacity: int, tokens: int,
+                     us: Optional[float]) -> None:
+        s = self._stats
+        s["waves"] += 1
+        s["rows"] += rows
+        s["fresh_rows"] += fresh
+        s["prefill_tokens"] += tokens
+        s["occupancy_sum"] += rows / self.max_slots
+        by = s["by_bucket"].setdefault(t_bucket,
+                                       {"waves": 0, "rows": 0, "tokens": 0,
+                                        "us_sum": 0.0, "timed_waves": 0})
+        by["waves"] += 1
+        by["rows"] += rows
+        by["tokens"] += tokens
+        if us is not None:
+            s["wave_us_sum"] += us
+            s["timed_waves"] += 1
+            by["us_sum"] += us
+            by["timed_waves"] += 1
+        self._wave_log.append({"t_bucket": t_bucket, "rows": rows,
+                               "fresh": fresh, "capacity": capacity,
+                               "tokens": tokens, "us": us})
+
+    def stats(self) -> dict:
+        """Engine-lifetime serving counters (cumulative across ``reset``).
+
+        Wave occupancy (``rows / max_slots`` per wave) and per-bucket latency
+        feed the cost model and the ``launch/serve.py --autotune`` report;
+        ``wave_log`` holds the last 256 waves for offline inspection, and
+        ``wave_costs`` is exactly the record list
+        ``WaveCostModel.seed`` / ``from_artifact`` consume."""
+        s = self._stats
+        waves = s["waves"]
+        return {
+            "sessions_active": len(self.sessions),
+            "sessions_ready": len(self.ready_sessions),
+            "sessions_queued": len(self.scheduler),
+            "chunks_in_flight": sum(st.prefill_pending
+                                    for st in self.sessions.values()),
+            "waves_total": waves,
+            "rows_total": s["rows"],
+            "fresh_rows_total": s["fresh_rows"],
+            "prefill_tokens": s["prefill_tokens"],
+            "decode_tokens": s["decode_tokens"],
+            "occupancy_mean": (s["occupancy_sum"] / waves) if waves else None,
+            "wave_us_mean": (s["wave_us_sum"] / s["timed_waves"]
+                             if s["timed_waves"] else None),
+            "by_bucket": {t: dict(v) for t, v in s["by_bucket"].items()},
+            "wave_log": list(self._wave_log),
+            "wave_costs": [{"b": w["rows"], "t_bucket": w["t_bucket"],
+                            "us": w["us"]}
+                           for w in self._wave_log
+                           if w["us"] is not None and w["rows"] > 0],
+        }
 
     def _place(self, sid, slot: int, h0, y0) -> int:
         n = self.cfg.n
@@ -377,7 +524,11 @@ class ReservoirEngine:
 
         Evicting a sid that is still *queued* cancels it instead (returns its
         queued ``(h0, y0)``) — clients that disconnect before admission must
-        not leak into slots.
+        not leak into slots.  Evicting a **chunk-in-flight** session (slot
+        held, chunk waves still queued) cancels the queued remainder and
+        returns the *partial carry* — the slot state after the chunks that
+        already ran; without the cancel the orphaned chunks would later run
+        on a freed (possibly reassigned) slot.
 
         The returned arrays are lazy device slices (no host sync): callers
         that evict only to free the slot pay nothing; callers that park the
@@ -390,6 +541,12 @@ class ReservoirEngine:
                     f"session {sid!r} is neither active nor queued") from None
             return req.h0, req.y0
         st = self.sessions.pop(sid)
+        if st.prefill_pending:
+            # prefill_pending <=> the chunk remainder is still queued; the
+            # scheduler returns it with its progress cursor (see
+            # WaveScheduler.cancel) and the arena slot holds the carry.
+            self.scheduler.cancel(sid)
+        self._chunk_outs.pop(sid, None)
         state = self.arena.states[st.slot]
         y = self.arena.y_prev[st.slot]
         self._slots[st.slot] = None
@@ -403,32 +560,51 @@ class ReservoirEngine:
 
     def reset(self):
         """Drop all sessions (active + queued) and zero the state arena.
-        Keeps the compiled step functions — cheap way to reuse an engine."""
+        Keeps the compiled step functions, the learned cost model, and the
+        cumulative :meth:`stats` counters — cheap way to reuse an engine."""
         self.arena = self._fresh_arena()
         self._slots = [None] * self.max_slots
         self.sessions.clear()
+        self._chunk_outs.clear()
         self.scheduler = WaveScheduler(bucket_min=self.scheduler.bucket_min,
-                                       max_wave=self.scheduler.max_wave)
+                                       max_wave=self.scheduler.max_wave,
+                                       chunk_max=self.scheduler.chunk_max,
+                                       cost_model=self.scheduler.cost_model)
 
     @property
     def active_sessions(self):
+        """Sessions holding a slot — including chunk-in-flight ones (see
+        :attr:`ready_sessions` for the decodable subset)."""
         return [s for s in self._slots if s is not None]
+
+    @property
+    def ready_sessions(self):
+        """Slot-holding sessions whose prompt has fully landed (no chunk
+        waves pending) — the set decode may touch."""
+        return [s for s in self._slots
+                if s is not None and not self.sessions[s].prefill_pending]
 
     @property
     def free_slots(self) -> int:
         return self._slots.count(None)
 
     def _active(self, sid: Hashable) -> SessionStats:
-        """Resolve an *admitted* session, with a descriptive error for the
-        natural submit-then-use flow when the session is still queued."""
+        """Resolve an *admitted, decodable* session, with descriptive errors
+        for the natural submit-then-use flow (still queued / chunk waves
+        still in flight)."""
         try:
-            return self.sessions[sid]
+            st = self.sessions[sid]
         except KeyError:
             if self.scheduler.has(sid):
                 raise KeyError(
                     f"session {sid!r} is queued, not yet admitted — flush() "
                     f"(or wait for an eviction) before using it") from None
             raise
+        if st.prefill_pending:
+            raise KeyError(
+                f"session {sid!r} still has prefill chunk waves in flight — "
+                f"flush() until its prompt completes before decoding")
+        return st
 
     def state_of(self, sid: Hashable):
         return np.asarray(self.arena.states[self._active(sid).slot])
@@ -524,6 +700,7 @@ class ReservoirEngine:
             u[st.slot] = vec
             mask[st.slot] = True
             st.tokens_decoded += 1
+        self._stats["decode_tokens"] += len(vecs)
         self.arena, y = self._decode_jit(
             self.params, self.w_out, self.arena, jnp.asarray(u),
             jnp.asarray(mask))
@@ -552,13 +729,17 @@ class ReservoirEngine:
         if self.cfg.d_in != self.cfg.d_out:
             raise ValueError("closed loop requires d_in == d_out")
         # dict.fromkeys: dedupe (a repeated sid must not double-count tokens)
-        # while preserving order; values resolved via _active for clear errors.
-        targets = list(dict.fromkeys(self.sessions if sids is None else sids))
+        # while preserving order; values resolved via _active for clear
+        # errors.  Default: the *ready* sessions — chunk-in-flight sessions
+        # hold slots but must not free-run mid-prompt.
+        targets = list(dict.fromkeys(
+            self.ready_sessions if sids is None else sids))
         stats = {sid: self._active(sid) for sid in targets}  # validate first
         mask = np.zeros((self.max_slots,), bool)
         for sid in targets:
             mask[stats[sid].slot] = True
             stats[sid].tokens_decoded += n_steps
+        self._stats["decode_tokens"] += n_steps * len(targets)
         self.arena, ys = self._closed_jit(
             self.params, self.w_out, self.arena, jnp.asarray(mask),
             int(n_steps))

@@ -9,15 +9,38 @@ Bucketing by padded length is what makes the batching free: every wave of a
 bucket reuses one compiled trace, and the arena's length-gather makes the
 padded tail steps inert.
 
-Scheduling policy — two invariants, both pinned by test:
+Two orthogonal extensions ride on the same queue:
 
-* **No starvation**: the wave is always formed around the *oldest* pending
-  request (global arrival order), then topped up with younger requests from
-  the same bucket.  A busy bucket can never indefinitely delay a lone request
-  in a quiet one.
+* **Chunked long prompts** (``chunk_max``): a prompt longer than
+  ``chunk_max`` drains as K sequential chunks — each chunk is a row in an
+  ordinary wave, resumed from the slot's carried state
+  (``arena.prefill_wave`` starts every row from the arena, so chunk K+1
+  continues chunk K bit-exactly).  Only the *first* chunk consumes a free
+  slot; later chunks are **continuations** of a slot the session already
+  holds, so they are runnable even at zero free capacity.  After a non-final
+  chunk the request re-enters at the queue *tail* (chunk-granularity
+  round-robin): a 500k-token prompt yields the arena between chunks instead
+  of monopolizing it.
+* **Cost-model planning** (``cost_model``): with a
+  :class:`~repro.serve.cost.WaveCostModel` attached, :meth:`next_wave` runs a
+  two-wave lookahead — it may *defer* the oldest request's wave by exactly
+  one wave when committing the free-slot budget to another bucket first
+  strictly improves predicted tokens-per-second over the two-wave horizon
+  (the fix for fragmenting buckets under-filling waves).  The deferral is
+  **committed**: the very next wave must serve the deferred anchor, so the
+  no-starvation bound only gains a one-wave slack.
+
+Scheduling invariants, all pinned by test:
+
+* **No starvation**: the wave is formed around the *oldest* pending request
+  (global arrival order), topped up with younger same-bucket requests.  With
+  a cost model the anchor may be deferred, but at most one wave and never
+  twice in a row: over any two consecutive waves the front of the arrival
+  order strictly drains.
 * **Evict-while-queued**: :meth:`cancel` removes a request before admission
-  and hands back its parked ``(h0, y0)`` — clients that disconnect before a
-  slot frees must not leak into the arena.
+  — or mid-chunk-sequence — and hands it back with its progress cursor, so
+  the engine can return the partial carry (the slot state of the chunks that
+  already ran) instead of leaking orphan chunks into a reassigned slot.
 
 The scheduler is pure host bookkeeping: no jax imports, no device state —
 that all lives a layer down in ``serve.arena``.
@@ -25,9 +48,14 @@ that all lives a layer down in ``serve.arena``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, List, Optional
+from typing import Hashable, List, Optional, Tuple
 
-__all__ = ["PrefillRequest", "bucket_length", "WaveScheduler"]
+__all__ = ["PrefillRequest", "WaveItem", "bucket_length", "WaveScheduler"]
+
+#: Deferral margin: the lookahead plan must beat serving the anchor first by
+#: this factor in predicted tok/s before the anchor is pushed back one wave —
+#: fairness is the default, reordering has to pay for itself.
+_DEFER_MARGIN = 1.05
 
 
 @dataclasses.dataclass
@@ -35,17 +63,42 @@ class PrefillRequest:
     """One queued admission: session id, optional prompt, optional parked
     state.  ``u`` is None for admission-only requests (the legacy
     ``add_session``-then-``prefill`` flow) — they ride bucket 0.
-    Arrival order is the queue's list order; the engine validates/coerces
-    every array *before* a request is constructed."""
+    ``done`` is the chunk cursor: tokens already drained into the arena by
+    earlier chunk waves (0 for whole-prompt requests).  Arrival order is the
+    queue's list order; the engine validates/coerces every array *before* a
+    request is constructed."""
     sid: Hashable
     u: Optional[object] = None            # (T, D_in) prompt or None
     y_teacher: Optional[object] = None    # (T, D_out) for feedback models
     h0: Optional[object] = None           # parked state to resume from
     y0: Optional[object] = None
+    done: int = 0                         # tokens consumed by popped chunks
 
     @property
     def length(self) -> int:
         return 0 if self.u is None else int(self.u.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveItem:
+    """One row of a popped wave: the request plus the ``[start, stop)`` token
+    window this wave consumes.  ``first`` rows are admissions (the engine
+    must allocate a slot and place ``h0``/``y0``); non-first rows continue a
+    slot the session already holds.  ``last`` rows complete the prompt (the
+    session becomes decodable)."""
+    req: PrefillRequest
+    start: int
+    stop: int
+    first: bool
+    last: bool
+
+    @property
+    def sid(self) -> Hashable:
+        return self.req.sid
+
+    @property
+    def length(self) -> int:
+        return self.stop - self.start
 
 
 def bucket_length(t: int, *, bucket_min: int = 16) -> int:
@@ -58,16 +111,26 @@ def bucket_length(t: int, *, bucket_min: int = 16) -> int:
 
 
 class WaveScheduler:
-    """Accumulate requests; drain them as same-bucket waves, oldest first."""
+    """Accumulate requests; drain them as same-bucket waves, oldest first
+    (modulo the committed one-wave lookahead deferral)."""
 
     def __init__(self, *, bucket_min: int = 16,
-                 max_wave: Optional[int] = None):
+                 max_wave: Optional[int] = None,
+                 chunk_max: Optional[int] = None,
+                 cost_model=None):
         self.bucket_min = int(bucket_min)
-        # Cap on rows per wave (None: the caller's capacity, i.e. free
-        # slots).  The engine preserves it across reset().
+        # Legacy static cap on rows per wave (None: the caller's capacity,
+        # i.e. free slots).  Kept as an override/baseline knob — the cost
+        # model is the replacement for tuning it by hand.  The engine
+        # preserves it across reset().
         self.max_wave = max_wave
+        if chunk_max is not None and int(chunk_max) < 1:
+            raise ValueError(f"chunk_max must be >= 1, got {chunk_max}")
+        self.chunk_max = None if chunk_max is None else int(chunk_max)
+        self.cost_model = cost_model
         self._queue: List[PrefillRequest] = []
         self._sids: set = set()           # O(1) membership for has()
+        self._deferred: Optional[Hashable] = None
 
     # ------------------------------------------------------------- queueing
     def submit(self, req: PrefillRequest) -> None:
@@ -80,11 +143,17 @@ class WaveScheduler:
         return sid in self._sids
 
     def cancel(self, sid: Hashable) -> PrefillRequest:
-        """Remove a not-yet-admitted request (client disconnected); returns
-        it so the caller can hand back the parked ``(h0, y0)``."""
+        """Remove a not-yet-finished request (client disconnected); returns
+        it so the caller can hand back the parked ``(h0, y0)``.  For a
+        chunk-in-flight request the returned ``req.done`` records how many
+        tokens earlier chunk waves already drained — the *partial carry*
+        lives in the arena slot, and the engine (which owns the slot table)
+        returns it from :meth:`~repro.serve.engine.ReservoirEngine.evict`."""
         for i, r in enumerate(self._queue):
             if r.sid == sid:
                 self._sids.discard(sid)
+                if self._deferred == sid:
+                    self._deferred = None
                 return self._queue.pop(i)
         raise KeyError(f"session {sid!r} is not queued")
 
@@ -99,31 +168,163 @@ class WaveScheduler:
         return [r.sid for r in self._queue]
 
     # ---------------------------------------------------------------- waves
+    def _next_len(self, req: PrefillRequest) -> int:
+        """Length of the request's next chunk (the whole remainder when
+        chunking is off or the remainder fits)."""
+        rem = req.length - req.done
+        if self.chunk_max is not None and rem > self.chunk_max:
+            return self.chunk_max
+        return rem
+
     def bucket_of(self, req: PrefillRequest) -> int:
-        return bucket_length(req.length, bucket_min=self.bucket_min)
+        """Bucket the request's *next chunk* rides (== the whole prompt's
+        bucket when chunking is off)."""
+        return bucket_length(self._next_len(req), bucket_min=self.bucket_min)
 
-    def next_wave(self, capacity: int) -> List[PrefillRequest]:
-        """Pop the next wave: the oldest pending request plus up to
-        ``capacity - 1`` same-bucket followers (arrival order preserved).
-        Returns [] when nothing is pending or ``capacity`` is 0.
+    def _item(self, req: PrefillRequest) -> WaveItem:
+        ln = self._next_len(req)
+        return WaveItem(req=req, start=req.done, stop=req.done + ln,
+                        first=(req.done == 0),
+                        last=(req.done + ln >= req.length))
 
-        Anchoring on the global oldest request is the no-starvation
-        guarantee: every flush strictly drains the front of the arrival
-        order, so a request waits at most (queue-ahead-of-it / capacity)
-        waves regardless of how busy other buckets are.
-        """
-        if capacity <= 0 or not self._queue:
-            return []
-        limit = capacity if self.max_wave is None else min(capacity,
-                                                           self.max_wave)
-        head = self._queue[0]
-        bucket = self.bucket_of(head)
-        wave, rest = [], []
+    def _gather(self, bucket: int, capacity: int, skip=frozenset()
+                ) -> List[WaveItem]:
+        """The wave ``bucket`` would get right now: queue-order items, fresh
+        (slot-consuming) rows capped by ``capacity``, continuations free,
+        total rows capped by ``max_wave`` when set."""
+        items: List[WaveItem] = []
+        fresh = 0
         for r in self._queue:
-            if len(wave) < limit and self.bucket_of(r) == bucket:
-                wave.append(r)
+            if r.sid in skip or self.bucket_of(r) != bucket:
+                continue
+            it = self._item(r)
+            if it.first:
+                if fresh >= capacity:
+                    continue
+                fresh += 1
+            items.append(it)
+            if self.max_wave is not None and len(items) >= self.max_wave:
+                break
+        return items
+
+    def _anchor(self, capacity: int) -> Optional[PrefillRequest]:
+        """Oldest *runnable* request: continuations always run (their slot is
+        already held); fresh admissions need free capacity."""
+        for r in self._queue:
+            if r.done > 0 or capacity > 0:
+                return r
+        return None
+
+    def next_wave(self, capacity: int) -> List[WaveItem]:
+        """Pop the next wave.  Returns [] when nothing is runnable.
+
+        Without a cost model: the wave is anchored on the globally-oldest
+        runnable request and topped up with younger same-bucket work — every
+        pop strictly drains the front of the arrival order (no starvation).
+
+        With a cost model: a two-wave lookahead may serve another bucket
+        first when that strictly improves predicted tok/s over both waves
+        (see :meth:`_plan_deferral`); the deferral is committed, so the
+        anchor is served in the immediately-following wave.
+        """
+        capacity = max(0, int(capacity))
+        anchor = self._anchor(capacity)
+        if anchor is None:
+            return []
+        abucket = self.bucket_of(anchor)
+        wave = self._gather(abucket, capacity)
+        defer_allowed = (self.cost_model is not None
+                         and self._deferred is None)
+        self._deferred = None            # a pending commitment is honored now
+        if defer_allowed:
+            alt = self._plan_deferral(anchor, abucket, wave, capacity)
+            if alt is not None:
+                self._deferred = anchor.sid
+                wave = alt
+        return self._pop(wave)
+
+    def _pop(self, items: List[WaveItem]) -> List[WaveItem]:
+        """Commit a gathered wave: finished requests leave the queue; a
+        request with chunks remaining advances its cursor and re-enters at
+        the tail (chunk round-robin — other buckets' waves interleave)."""
+        done_sids = set()
+        requeue: List[PrefillRequest] = []
+        for it in items:
+            if it.last:
+                done_sids.add(it.sid)
+                self._sids.discard(it.sid)
             else:
-                rest.append(r)
-        self._queue = rest
-        self._sids.difference_update(r.sid for r in wave)
-        return wave
+                it.req.done = it.stop
+                requeue.append(it.req)
+        if done_sids or requeue:
+            drop = set(done_sids)
+            drop.update(r.sid for r in requeue)
+            self._queue = [r for r in self._queue if r.sid not in drop]
+            self._queue.extend(requeue)
+        return items
+
+    # ------------------------------------------------------------- lookahead
+    def _score(self, waves: List[Tuple[int, List[WaveItem]]]) -> float:
+        """Predicted true-tokens-per-microsecond over a plan's waves."""
+        tokens = sum(it.length for _, w in waves for it in w)
+        us = sum(self.cost_model.predict_us(len(w), b)
+                 for b, w in waves if w)
+        return tokens / max(us, 1.0)
+
+    def _best_follower(self, capacity: int, skip) -> Tuple[int,
+                                                           List[WaveItem]]:
+        """Highest-predicted-throughput wave among the remaining buckets."""
+        best, best_tps = (0, []), -1.0
+        seen = set()
+        for r in self._queue:
+            if r.sid in skip:
+                continue
+            b = self.bucket_of(r)
+            if b in seen:
+                continue
+            seen.add(b)
+            w = self._gather(b, capacity, skip=skip)
+            if not w:
+                continue
+            tps = self._score([(b, w)])
+            if tps > best_tps:
+                best, best_tps = (b, w), tps
+        return best
+
+    def _plan_deferral(self, anchor: PrefillRequest, abucket: int,
+                       anchor_wave: List[WaveItem], capacity: int
+                       ) -> Optional[List[WaveItem]]:
+        """Two-wave lookahead: should another bucket's wave run *before* the
+        anchor's?  Deferral changes the plan's composition only through the
+        free-slot budget (the deferring wave may admit more rows than the
+        leftover capacity after the anchor wave would have allowed) — when
+        both orders compose identically the scores tie and fairness wins.
+
+        Returns the deferring wave, or None to serve the anchor first.  When
+        the anchor is a fresh admission one slot is reserved for it, so the
+        committed follow-up wave can always run.
+        """
+        anchor_sids = {it.sid for it in anchor_wave}
+        cap_after_a = capacity - sum(it.first for it in anchor_wave)
+        plan_a = [(abucket, anchor_wave),
+                  self._best_follower(cap_after_a, anchor_sids)]
+        best_alt, best_score = None, self._score(plan_a) * _DEFER_MARGIN
+        reserve = 1 if anchor.done == 0 else 0
+        seen = set()
+        for r in self._queue:
+            b = self.bucket_of(r)
+            if b == abucket or b in seen:
+                continue
+            seen.add(b)
+            w1 = self._gather(b, capacity - reserve)
+            if not w1:
+                continue
+            skip = {it.sid for it in w1}
+            cap_left = capacity - sum(it.first for it in w1)
+            w2 = self._gather(abucket, cap_left, skip=skip)
+            if anchor.sid not in {it.sid for it in w2}:
+                continue             # the commitment must be honorable
+            score = self._score([(b, w1), (abucket, w2)])
+            if score > best_score:
+                best_alt, best_score = w1, score
+        return best_alt

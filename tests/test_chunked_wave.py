@@ -1,0 +1,205 @@
+"""Chunked long-prompt waves: parity, interleaving, and the in-flight
+lifecycle.
+
+Acceptance bars:
+
+* **Bit parity**: a prompt drained as K sequential chunk waves equals the
+  single unchunked wave *exactly* when both pin the same scan backend (the
+  chunks replay the identical per-step operations), and matches the dense
+  O(N^2) hand-rolled reference at <= 1e-5 under backend auto-dispatch —
+  including feedback mode, where the teacher-output carry crosses chunk
+  boundaries.
+* **No monopolization**: only a long prompt's *first* chunk consumes a free
+  slot; its continuations run with the arena full, re-entering at the queue
+  tail so other buckets' waves interleave between chunks.
+* **Cancel-in-flight** (the PR's pinned bugfix): evicting a session whose
+  chunk waves are still queued returns the *partial carry* (the slot state
+  of the chunks that already ran), cancels the queued remainder instead of
+  raising KeyError, and leaves the slot cleanly reusable.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import esn as esn_fn
+from repro.core.esn import ESNConfig
+from repro.data.signals import mso_series
+from repro.serve import PrefillRequest, ReservoirEngine, WaveScheduler
+
+CFG = ESNConfig(n=48, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-8, seed=7)
+CFG_FB = dataclasses.replace(CFG, n=40, use_feedback=True, seed=5)
+
+
+def _xy(t=600, k=3):
+    sig = mso_series(k, t + 1)
+    return sig[:-1, None], sig[1:, None]
+
+
+def _fitted(cfg=CFG, mode="diag", t=600):
+    u, y = _xy(t)
+    params = (esn_fn.diag_params(cfg) if mode == "diag"
+              else esn_fn.standard_params(cfg))
+    readout = esn_fn.fit(params, u[:400], y[:400], washout=50)
+    return params, readout, u, y
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("mode", ["diag", "standard"])
+def test_chunked_equals_unchunked_exact_same_backend(mode):
+    """K sequential chunk waves == one wave, bitwise, when both run the
+    sequential backend (identical per-step operations, reordered into
+    chunks)."""
+    params, readout, u, _ = _fitted(mode=mode)
+    whole = ReservoirEngine(params, max_slots=2, readout=readout)
+    whole.submit("s", u[:300])
+    out_w = whole.flush(want_outputs=True, method="sequential")
+    chunked = ReservoirEngine(params, max_slots=2, readout=readout,
+                              chunk_max=64)
+    chunked.submit("s", u[:300])
+    out_c = chunked.flush(want_outputs=True, method="sequential")
+    np.testing.assert_array_equal(np.asarray(out_c["s"]),
+                                  np.asarray(out_w["s"]))
+    np.testing.assert_array_equal(chunked.state_of("s"), whole.state_of("s"))
+    # and the closed-loop feedback seed survived the chunk boundary
+    got = chunked.decode_step({"s": u[300]})
+    want = whole.decode_step({"s": u[300]})
+    np.testing.assert_array_equal(np.asarray(got["s"]),
+                                  np.asarray(want["s"]))
+
+
+def test_chunked_matches_dense_reference_auto_dispatch():
+    """Chunked wave prefill vs the hand-rolled dense O(N^2) oracle, <= 1e-5,
+    with the backend auto-resolved per chunk bucket."""
+    params, readout, u, _ = _fitted(mode="standard")
+    w, w_in = np.asarray(params.w), np.asarray(params.w_in)
+    w_out = np.asarray(readout.w_out)
+    eng = ReservoirEngine(params, max_slots=2, readout=readout,
+                          chunk_max=64)
+    eng.submit("a", u[:230])
+    outs = eng.flush(want_outputs=True)
+    r = np.zeros(CFG.n)
+    ys = []
+    for t in range(230):
+        r = r @ w + np.asarray(u[t]) @ w_in
+        ys.append(np.concatenate([[1.0], r]) @ w_out)
+    np.testing.assert_allclose(np.asarray(outs["a"]), np.stack(ys),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(eng.state_of("a"), r, rtol=0, atol=1e-5)
+
+
+def test_chunked_feedback_carry_crosses_boundaries():
+    """Feedback models: chunk k+1's y0 must be chunk k's last true teacher
+    output — exactly the y_shift element the unchunked scan uses there."""
+    u, y = _xy(500)
+    params = esn_fn.standard_params(CFG_FB)
+    readout = esn_fn.fit(params, u[:400], y[:400], washout=50)
+    whole = ReservoirEngine(params, max_slots=1, readout=readout)
+    whole.submit("s", u[:200], y_teacher=y[:200])
+    out_w = whole.flush(want_outputs=True, method="sequential")
+    chunked = ReservoirEngine(params, max_slots=1, readout=readout,
+                              chunk_max=48)        # uneven: 48*4 + 8
+    chunked.submit("s", u[:200], y_teacher=y[:200])
+    out_c = chunked.flush(want_outputs=True, method="sequential")
+    np.testing.assert_array_equal(np.asarray(out_c["s"]),
+                                  np.asarray(out_w["s"]))
+    np.testing.assert_array_equal(chunked.state_of("s"), whole.state_of("s"))
+    np.testing.assert_array_equal(np.asarray(chunked.y_prev[0]),
+                                  np.asarray(whole.y_prev[0]))
+
+
+# ----------------------------------------------------- interleave / slots
+def test_long_prompt_does_not_monopolize_the_arena():
+    """A long prompt holds ONE slot for its whole chunk sequence; short
+    sessions are admitted and fully served between its chunks (the queue-tail
+    requeue after each non-final chunk)."""
+    params, readout, u, _ = _fitted()
+    eng = ReservoirEngine(params, max_slots=2, readout=readout, chunk_max=32)
+    eng.submit("long", u[:160])                    # 5 chunks of 32
+    for i in range(3):
+        eng.submit(f"short{i}", u[:16])
+    eng.flush()
+    # the long prompt held exactly one slot end to end; a short session got
+    # the other slot while its chunks were still draining, and its
+    # continuations kept running with the arena full (capacity 0)
+    assert not eng.sessions["long"].prefill_pending
+    assert sorted(eng.sessions, key=str) == ["long", "short0"]
+    assert [r.sid for r in eng.pending] == ["short1", "short2"]
+    # wave log: the short wave ran BETWEEN the long prompt's chunk waves
+    # (queue-tail requeue after each non-final chunk), not after all of them
+    log = eng.stats()["wave_log"]
+    chunk_waves = [i for i, w in enumerate(log) if w["t_bucket"] == 32]
+    short_waves = [i for i, w in enumerate(log) if w["t_bucket"] == 16]
+    assert len(chunk_waves) == 5 and len(short_waves) == 1
+    assert chunk_waves[0] < short_waves[0] < chunk_waves[-1]
+
+
+def test_partial_flush_blocks_decode_until_prompt_completes():
+    params, readout, u, _ = _fitted()
+    eng = ReservoirEngine(params, max_slots=2, readout=readout, chunk_max=64)
+    eng.submit("long", u[:256])
+    eng.flush(max_waves=1)                         # first chunk only
+    assert eng.sessions["long"].prefill_pending
+    assert eng.ready_sessions == []
+    assert "long" in eng.active_sessions           # it does hold its slot
+    with pytest.raises(KeyError, match="chunk waves in flight"):
+        eng.decode_step({"long": u[0]})
+    with pytest.raises(KeyError, match="chunk waves in flight"):
+        eng.decode_closed_loop(3, sids=["long"])
+    assert eng.decode_closed_loop(3) == {}         # default skips in-flight
+    eng.flush()                                    # drain the rest
+    assert not eng.sessions["long"].prefill_pending
+    assert eng.decode_closed_loop(3)["long"].shape == (3, 1)
+
+
+# ------------------------------------------------------- cancel in flight
+def test_scheduler_cancel_chunk_in_flight_returns_progress():
+    """WaveScheduler.cancel on a request with popped chunks must hand the
+    request back with its cursor, not raise KeyError."""
+    sch = WaveScheduler(bucket_min=16, chunk_max=32)
+    sch.submit(PrefillRequest(sid="s", u=np.zeros((100, 1))))
+    wave = sch.next_wave(4)
+    assert [(it.start, it.stop, it.first, it.last) for it in wave] == \
+        [(0, 32, True, False)]
+    req = sch.cancel("s")                          # mid-sequence: no raise
+    assert req.sid == "s" and req.done == 32
+    assert len(sch) == 0 and not sch.has("s")
+    with pytest.raises(KeyError):
+        sch.cancel("s")                            # gone is still gone
+
+
+def test_evict_chunk_in_flight_returns_partial_carry():
+    """engine.evict mid-chunk-sequence: returns the slot state after the
+    chunks that ran, cancels the queued remainder (no orphan waves on a
+    reassigned slot), and frees the slot."""
+    params, readout, u, _ = _fitted()
+    eng = ReservoirEngine(params, max_slots=1, readout=readout, chunk_max=64)
+    eng.submit("long", u[:256])
+    # sequential backend on both sides: the carry comparison is then exact
+    # (auto-dispatch picks different-but-equivalent scan shapes per bucket)
+    eng.flush(max_waves=2, method="sequential")    # 128 of 256 tokens done
+    assert eng.sessions["long"].prefill_pending
+    state, y0 = eng.evict("long")
+    # the partial carry == an ordinary 128-token prefill
+    ref = ReservoirEngine(params, max_slots=1, readout=readout)
+    ref.submit("r", u[:128])
+    ref.flush(method="sequential")
+    np.testing.assert_array_equal(np.asarray(state), ref.state_of("r"))
+    # remainder cancelled, slot clean: a new session takes it and the
+    # orphaned chunks never run
+    assert len(eng.pending) == 0 and eng.free_slots == 1
+    eng.submit("fresh", u[:64])
+    eng.flush()
+    assert list(eng.sessions) == ["fresh"]
+    assert eng.sessions["fresh"].tokens_prefilled == 64
+    # and the carry re-admits losslessly
+    eng.evict("fresh")
+    eng.add_session("resumed", h0=np.asarray(state), y0=np.asarray(y0))
+    eng.prefill("resumed", u[128:256], want_outputs=False,
+                method="sequential")
+    whole = ReservoirEngine(params, max_slots=1, readout=readout)
+    whole.submit("w", u[:256])
+    whole.flush(method="sequential")
+    np.testing.assert_array_equal(eng.state_of("resumed"),
+                                  whole.state_of("w"))

@@ -1,0 +1,116 @@
+"""benchmarks/trajectory.py --gate: the CI perf-regression gate, unit-tested.
+
+The CI step runs ``python -m benchmarks.trajectory --gate --threshold 15``
+against synthetic prev/cur artifact dirs here (subprocess — exactly the CI
+invocation), pinning the contract:
+
+* an injected >15% serve tok/s regression exits non-zero with an ``::error``
+  annotation, and ``BENCH_trajectory.json`` is still written (the artifact
+  upload runs ``if: always()`` — a red gate must ship its own evidence);
+* ``--waive`` (the ``perf-waiver`` PR label) downgrades the same regression
+  to ``::warning`` and exits zero;
+* an empty baseline emits a loud ``::notice`` (never silence) and exits
+  zero — first runs and expired artifacts do not block;
+* a within-threshold delta or an improvement passes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _artifact(us_bucketed, us_auto=2_000.0):
+    """A minimal serve_engine.json: two gated metrics with known tok/s."""
+    return {
+        "prefill_wave": {"bucketed_us": us_bucketed, "sequential_us": 9e9,
+                         "tokens": 1000, "b": 4},
+        "prefill_autotuned": {"autotuned_us": us_auto, "static_us": 9e9,
+                              "tokens": 1000},
+    }
+
+
+def _run(tmp_path, prev, cur, *flags):
+    prev_dir, cur_dir = tmp_path / "prev", tmp_path / "cur"
+    for d, data in ((prev_dir, prev), (cur_dir, cur)):
+        d.mkdir(exist_ok=True)
+        if data is not None:
+            (d / "serve_engine.json").write_text(json.dumps(data))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.trajectory",
+         "--prev", str(prev_dir), "--cur", str(cur_dir), *flags],
+        capture_output=True, text=True, cwd=REPO, timeout=120)
+    return out, cur_dir
+
+
+def _record(cur_dir):
+    with open(cur_dir / "BENCH_trajectory.json") as f:
+        return json.load(f)
+
+
+def test_gate_fails_on_injected_regression(tmp_path):
+    # prev 1000us -> cur 1500us: -33% tok/s, well past the 15% threshold
+    out, cur_dir = _run(tmp_path, _artifact(1000.0), _artifact(1500.0),
+                        "--gate", "--threshold", "15")
+    assert out.returncode == 1, out.stdout + out.stderr
+    # annotations ride stderr (the runner parses the whole step log); the
+    # summary tee captures stdout, which must stay a clean markdown table
+    assert "::error" in out.stderr and "::" not in out.stdout
+    assert "serve.prefill.bucketed" in out.stdout       # ...in the table
+    assert "serve.prefill.bucketed" in out.stderr       # ...and the error
+    # the artifact record survives the red gate, verdict included
+    rec = _record(cur_dir)
+    assert rec["gate"]["gated"] and not rec["gate"]["waived"]
+    assert [r["metric"] for r in rec["gate"]["regressions"]] == \
+        ["serve.prefill.bucketed"]
+    assert rec["gate"]["regressions"][0]["delta_pct"] == \
+        pytest.approx(-33.3, abs=0.1)
+
+
+def test_perf_waiver_downgrades_to_warning(tmp_path):
+    out, cur_dir = _run(tmp_path, _artifact(1000.0), _artifact(1500.0),
+                        "--gate", "--threshold", "15", "--waive")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "::warning" in out.stderr and "::error" not in out.stderr
+    assert "perf-waiver" in out.stderr        # the waiver is recorded loudly
+    rec = _record(cur_dir)
+    assert rec["gate"]["waived"] and rec["gate"]["regressions"]
+
+
+def test_empty_baseline_is_loud_and_ungated(tmp_path):
+    out, cur_dir = _run(tmp_path, None, _artifact(1000.0),
+                        "--gate", "--threshold", "15")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "::notice" in out.stderr
+    assert "baseline resolved empty" in out.stderr
+    assert "seeds the trajectory" in out.stdout         # table footer
+    assert _record(cur_dir)["metrics"]["serve.prefill.bucketed"][
+        "cur_tok_s"] == pytest.approx(1e6)    # 1000 tok / 1000us
+
+
+def test_missing_current_warns_without_failing(tmp_path):
+    out, _ = _run(tmp_path, _artifact(1000.0), None,
+                  "--gate", "--threshold", "15")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "::warning" in out.stderr and "nothing to gate" in out.stderr
+
+
+def test_within_threshold_and_improvement_pass(tmp_path):
+    # -10% on one metric (inside 15%), improvement on the other
+    out, cur_dir = _run(tmp_path, _artifact(1000.0, us_auto=2000.0),
+                        _artifact(1111.0, us_auto=1500.0),
+                        "--gate", "--threshold", "15")
+    assert out.returncode == 0, out.stdout + out.stderr
+    log = out.stdout + out.stderr
+    assert "::error" not in log and "::warning" not in log
+    assert not _record(cur_dir)["gate"]["regressions"]
+
+
+def test_ungated_run_only_warns(tmp_path):
+    """Without --gate (local runs) a regression prints a warning, exits 0."""
+    out, _ = _run(tmp_path, _artifact(1000.0), _artifact(1500.0))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "::warning" in out.stderr

@@ -1,0 +1,178 @@
+"""Cost-model wave planning: fits, lookahead policy, fairness, accounting.
+
+* **WaveCostModel**: per-bucket affine fits recover synthetic costs; unseen
+  buckets fall back to a sane global surface; cold models stay monotone.
+* **Two-wave lookahead**: the planner defers the oldest request's wave by at
+  most ONE wave, only when committing the slot budget to a fuller bucket
+  first strictly improves predicted tok/s — and the deferral is committed
+  (the very next wave serves the anchor, whatever the scores say then).
+* **engine.stats() accounting**: wave/row/occupancy/token counters add up
+  against a scripted serve, and autotune feeds the cost model.
+
+The mixed-load *fairness property tests* (hypothesis) live in
+``tests/test_scheduler_fairness.py`` so they can skip as a module when
+hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import esn as esn_fn
+from repro.core.esn import ESNConfig
+from repro.data.signals import mso_series
+from repro.serve import (PrefillRequest, ReservoirEngine, WaveCostModel,
+                         WaveScheduler)
+
+CFG = ESNConfig(n=48, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-8, seed=7)
+
+
+def _req(sid, t):
+    return PrefillRequest(sid=sid, u=np.zeros((t, 1)))
+
+
+# ------------------------------------------------------------- cost model
+def test_cost_model_recovers_affine_fit():
+    m = WaveCostModel()
+    for b in (1, 2, 4, 8, 4, 2):
+        m.observe(b, 128, 100.0 + 7.0 * b)      # alpha=100, beta=7
+    assert m.predict_us(3, 128) == pytest.approx(121.0, rel=1e-6)
+    assert m.predict_us(16, 128) == pytest.approx(212.0, rel=1e-6)
+
+
+def test_cost_model_global_fallback_and_cold_start():
+    cold = WaveCostModel()
+    # cold: documented constants, monotone in B and T, never < 1us
+    assert cold.predict_us(1, 16) >= 1.0
+    assert cold.predict_us(8, 256) > cold.predict_us(1, 256)
+    assert cold.predict_us(4, 1024) > cold.predict_us(4, 64)
+    m = WaveCostModel()
+    m.observe(2, 64, 300.0)
+    m.observe(8, 64, 400.0)
+    # bucket 512 was never observed -> global c ~= a0 + a1*B*T surface
+    unseen = m.predict_us(4, 512)
+    assert unseen >= 1.0
+    assert m.predict_us(8, 512) > m.predict_us(1, 512)
+    # throughput is tokens over predicted cost
+    assert m.throughput(4, 64, 200) == pytest.approx(
+        200 / (m.predict_us(4, 64) * 1e-6))
+
+
+def test_cost_model_seed_roundtrip(tmp_path):
+    m = WaveCostModel()
+    for b in (1, 3, 5):
+        m.observe(b, 64, 50.0 + 11.0 * b)
+    records = [{"b": b, "t_bucket": 64, "us": 50.0 + 11.0 * b}
+               for b in (1, 3, 5)] + [{"bogus": 1}, {"b": "x"}]
+    import json
+    path = tmp_path / "serve_engine.json"
+    path.write_text(json.dumps({"wave_costs": records}))
+    seeded = WaveCostModel.from_artifact(str(path))
+    assert seeded.n_observations == 3             # malformed records skipped
+    assert seeded.predict_us(4, 64) == pytest.approx(m.predict_us(4, 64))
+    # a missing artifact is an optimization lost, not an error
+    assert WaveCostModel.from_artifact(str(tmp_path / "nope.json")
+                                       ).n_observations == 0
+
+
+# -------------------------------------------------------------- lookahead
+def _overhead_model():
+    """Fixed-overhead-dominated costs: full waves are much better tok/s."""
+    m = WaveCostModel()
+    for t in (32, 256):
+        for b in (1, 2, 3, 4):
+            m.observe(b, t, 1000.0 + 10.0 * b)
+    return m
+
+
+def test_lookahead_defers_fragmenting_anchor_then_commits():
+    """3 short requests arrive first, 6 long ones behind them, 4 free slots.
+    Serving the shorts first spends 3 slots on 60 tokens and leaves one for
+    a long; the planner instead commits the budget to the long bucket and
+    serves the shorts in the immediately-following (committed) wave."""
+    sch = WaveScheduler(bucket_min=16, cost_model=_overhead_model())
+    for i in range(3):
+        sch.submit(_req(f"short{i}", 20))         # bucket 32, oldest
+    for i in range(6):
+        sch.submit(_req(f"long{i}", 200))         # bucket 256, fuller
+    w1 = sch.next_wave(4)
+    # one slot stayed reserved for the deferred (fresh) anchor
+    assert [it.sid for it in w1] == ["long0", "long1", "long2"]
+    w2 = sch.next_wave(1)                         # engine: 1 slot left
+    assert [it.sid for it in w2] == ["short0"]    # commitment honored
+    # deferral never chains: shorts are now anchored until they drain
+    w3 = sch.next_wave(1)
+    assert {it.sid for it in w3} <= {"short1", "short2", "long3", "long4",
+                                     "long5"}
+
+
+def test_lookahead_no_deferral_when_composition_ties():
+    """A lone short anchor and one slot's worth of longs: both orders
+    compose identically, so the tok/s scores tie and fairness (oldest first)
+    wins — the margin keeps reordering from being free."""
+    sch = WaveScheduler(bucket_min=16, cost_model=_overhead_model())
+    sch.submit(_req("short", 20))
+    sch.submit(_req("long", 200))
+    w1 = sch.next_wave(4)
+    assert [it.sid for it in w1] == ["short"]
+
+
+def test_planner_off_is_plain_oldest_first():
+    """cost_model=None must reproduce the pre-planner policy exactly."""
+    sch = WaveScheduler(bucket_min=16)
+    for i in range(4):
+        sch.submit(_req(f"s{i}", 10))
+    sch.submit(_req("big", 100))
+    assert [it.sid for it in sch.next_wave(2)] == ["s0", "s1"]
+    assert [it.sid for it in sch.next_wave(8)] == ["s2", "s3"]
+    assert [it.sid for it in sch.next_wave(8)] == ["big"]
+
+
+def test_cancel_clears_pending_deferral():
+    sch = WaveScheduler(bucket_min=16, cost_model=_overhead_model())
+    for i in range(3):
+        sch.submit(_req(f"short{i}", 20))
+    for i in range(6):
+        sch.submit(_req(f"long{i}", 200))
+    sch.next_wave(4)                              # defers the short anchor
+    sch.cancel("short0")                          # ...who then disconnects
+    w2 = sch.next_wave(4)                         # no stale commitment left
+    assert "short0" not in {it.sid for it in w2}
+    assert w2                                     # scheduling continues
+
+
+# --------------------------------------------------------- engine stats()
+def test_engine_stats_occupancy_accounting():
+    sig = mso_series(3, 601)
+    u, y = sig[:-1, None], sig[1:, None]
+    params = esn_fn.diag_params(CFG)
+    readout = esn_fn.fit(params, u[:400], y[:400], washout=50)
+    eng = ReservoirEngine(params, max_slots=4, readout=readout,
+                          autotune=True)
+    for i in range(6):
+        eng.submit(i, u[:100])                    # one bucket (128)
+    eng.flush()                                   # one full wave of 4
+    st = eng.stats()
+    assert st["waves_total"] == 1 and st["rows_total"] == 4
+    assert st["fresh_rows_total"] == 4
+    assert st["occupancy_mean"] == pytest.approx(1.0)
+    assert st["prefill_tokens"] == 400
+    assert st["sessions_queued"] == 2 and st["sessions_ready"] == 4
+    # autotune timed the wave and fed the model
+    assert st["wave_us_mean"] and st["wave_us_mean"] > 0
+    assert eng.cost_model.n_observations == 1
+    assert st["wave_costs"][0]["b"] == 4
+    assert st["by_bucket"][128]["waves"] == 1
+    assert st["by_bucket"][128]["tokens"] == 400
+    eng.evict(0), eng.evict(1)
+    eng.flush()                                   # half-full wave of 2
+    st = eng.stats()
+    assert st["waves_total"] == 2 and st["rows_total"] == 6
+    assert st["occupancy_mean"] == pytest.approx(0.75)
+    assert st["prefill_tokens"] == 600
+    ys = eng.decode_closed_loop(5)
+    st = eng.stats()
+    assert st["decode_tokens"] == 5 * len(ys)
+    # counters are engine-lifetime: reset() keeps them and the cost model
+    eng.reset()
+    assert eng.stats()["waves_total"] == 2
+    assert eng.cost_model.n_observations == 2
