@@ -12,6 +12,16 @@ Measures the serving phases the three-layer stack separates:
   it replaces.  The acceptance bar: >= 1.2x tok/s on CPU.  The autotuned
   engine's measured wave timings are exported under ``"wave_costs"`` — the
   offline seed ``serve.cost.WaveCostModel.from_artifact`` consumes.
+* **mixed.decode_aware vs mixed.decode_blind** — the decode-starvation
+  scenario continuous-batching servers gate on: live decoders mid-generation
+  while a chunked prefill flood drains.  The decode-blind planner runs every
+  runnable prefill wave before the serve loop can decode again (inter-token
+  gap ~ one whole flush); decode-aware planning (``decode_slo_us``)
+  interleaves closed-loop decode waves whenever the planned prefill cost
+  since the decoders' last token hits the SLO.  Reported: decode p50/p95
+  inter-token gap and prefill tok/s under both policies.  The acceptance
+  bar: p95 bounded (well under the blind drain) at <= 15% prefill tok/s
+  cost.
 * **prefill / decode vs lock-step** — engine scan / closed loop vs a
   per-token python loop over the jit'd batched step (what
   ``launch/serve.py`` did before the engine existed).
@@ -34,7 +44,7 @@ import jax
 from repro.core import esn as esn_fn
 from repro.core.esn import ESNConfig
 from repro.launch.mesh import make_local_mesh
-from repro.serve import ReservoirEngine
+from repro.serve import ReservoirEngine, bucket_length
 
 from repro.data.signals import mso_series
 
@@ -163,14 +173,145 @@ def main(quick: bool = False):
         f"tok_s={mix_tokens / (static_us * 1e-6):.0f};"
         f"autotuned_speedup=x{static_us / auto_us:.2f}"))
 
+    # -------- mixed load: live decoders + chunked prefill flood, decode-
+    # aware planner (decode_slo_us) vs the decode-blind PR-4 planner.  Both
+    # engines plan with the SAME learned cost model and chunking; the only
+    # difference is the SLO, so the deltas are pure scheduling policy.
+    dec_n = 2
+    mslots = 2 * slots                # bigger arena: the flood is the point
+    chunk_len = max(64, prompt_t // 2)
+    chunk_bucket = bucket_length(chunk_len)   # the bucket the scheduler uses
+    flood_n = int(1.5 * mslots)
+    flood_len = 8 * prompt_t          # each flood prompt = 16 chunk waves
+    long_mix = np.concatenate([sig[:-1]] * (flood_len // len(sig) + 2))
+    flood_prompts = [long_mix[7 * i:7 * i + flood_len, None]
+                     for i in range(flood_n)]
+    flood_tokens = flood_n * flood_len
+    dec_sids = [("dec", i) for i in range(dec_n)]
+
+    def mixed_drain(eng, interleave):
+        eng.reset()
+        for i, s in enumerate(dec_sids):
+            eng.submit(s, prompts[i][:chunk_len])
+        eng.flush()
+        jax.block_until_ready(
+            eng.decode_closed_loop(1, sids=dec_sids)[dec_sids[0]])
+        for i in range(flood_n):
+            eng.submit(("flood", i), flood_prompts[i])
+        while True:
+            eng.flush(decode_interleave=interleave)
+            # the decode-blind loop can only decode HERE — after the whole
+            # flush drained; the aware flush interleaved decode waves inside.
+            # Block on the token: a dispatched-but-unmaterialized token is
+            # still latency, so the gap percentiles must see real wall time.
+            jax.block_until_ready(
+                eng.decode_closed_loop(1, sids=dec_sids)[dec_sids[0]])
+            for s in list(eng.ready_sessions):
+                if s[0] == "flood":
+                    eng.evict(s)
+            if not (len(eng.pending)
+                    or any(s[0] == "flood" for s in eng.active_sessions)):
+                return eng.states
+
+    # Learn-then-serve on the mixed shape itself: an autotune pass measures
+    # these exact (B, chunk_bucket) waves and decode dispatches, so the
+    # decode budget is priced in *this* scenario's real wall costs — a model
+    # fitted on other shapes underestimates them and the SLO goes soft.
+    mixed_learner = ReservoirEngine(params, max_slots=mslots,
+                                    readout=readout, autotune=True,
+                                    chunk_max=chunk_len)
+    mixed_drain(mixed_learner, False)       # compile pass (polluted timings)
+    mixed_learner.cost_model.clear()
+    mixed_drain(mixed_learner, False)       # measurement pass: clean fits
+    # decode surface: the drain loop only ever decodes dec_n rows, so add
+    # narrower widths for >= 2 distinct B in the affine fit — autotune
+    # times and observes each dispatch itself, and the closed-loop trace is
+    # mask-agnostic (already compiled by the drains), so nothing here pays
+    # a compile.  Settle the drain's pending async work (evictions,
+    # releases) first: the first timed dispatch would otherwise block on it
+    # and land an order-of-magnitude outlier in the fit.
+    jax.block_until_ready(mixed_learner.states)
+    for b in range(1, dec_n + 1):
+        for _ in range(3):   # 3 samples/width: the median fit sheds any
+            mixed_learner.decode_closed_loop(1, sids=dec_sids[:b])  # stall
+    mcost = mixed_learner.cost_model
+    # Budget: ~4 full chunk waves of planned prefill between decode waves,
+    # plus the decode wave's own predicted cost (the engine reserves it out
+    # of the budget) — the blind drain runs ALL runnable chunks back to
+    # back (tens of waves per flush), while the decode syncs stay a small
+    # tax on prefill tok/s (each interleaved decode wave blocks, trading
+    # pipelining for latency; a tighter SLO buys lower p50/p95 at a
+    # steeper tok/s price).
+    slo_us = (4.0 * mcost.predict_us(mslots - dec_n, chunk_bucket)
+              + mcost.predict_decode_us(dec_n))
+
+    def warm_wave_sizes(eng):
+        # The budget trimmer may pop any wave size 1..free; each distinct
+        # (B, T_bucket) is its own XLA trace, and a first-call compile
+        # landing inside a timed drain would swamp the gap percentiles.
+        eng.reset()
+        for b in range(1, mslots - dec_n + 1):
+            for i in range(b):
+                eng.submit(("w", b, i), long_mix[:chunk_len, None])
+            eng.flush()
+            for i in range(b):
+                eng.evict(("w", b, i))
+        jax.block_until_ready(eng.states)
+
+    def measure_mixed(eng, interleave):
+        warm_wave_sizes(eng)
+        mixed_drain(eng, interleave)       # compile pass
+        # the percentiles must price serving, not XLA compilation
+        eng.clear_decode_gaps()
+        us = _util.timeit(mixed_drain, eng, interleave, reps=3, warmup=0)
+        st = eng.stats()
+        nan = float("nan")
+        return (us,
+                nan if st["decode_gap_p50_us"] is None
+                else st["decode_gap_p50_us"],
+                nan if st["decode_gap_p95_us"] is None
+                else st["decode_gap_p95_us"])
+
+    aware_eng = ReservoirEngine(params, max_slots=mslots, readout=readout,
+                                cost_model=mcost,
+                                chunk_max=chunk_len, decode_slo_us=slo_us)
+    blind_eng = ReservoirEngine(params, max_slots=mslots, readout=readout,
+                                cost_model=mcost, chunk_max=chunk_len)
+    aware_us, aware_p50, aware_p95 = measure_mixed(aware_eng, True)
+    blind_us, blind_p50, blind_p95 = measure_mixed(blind_eng, False)
+    # re-export: the artifact seed now carries prefill AND decode surfaces
+    # (both scenarios' observations — seed() merges them on load)
+    res["wave_costs"] = (learner.cost_model.records() + mcost.records())
+    res["mixed_decode_aware"] = {
+        "aware_us": aware_us, "blind_us": blind_us, "tokens": flood_tokens,
+        "decode_slo_us": slo_us, "decoders": dec_n, "chunk_len": chunk_len,
+        "slots": mslots, "flood_sessions": flood_n, "flood_len": flood_len,
+        "aware_gap_p50_us": aware_p50, "aware_gap_p95_us": aware_p95,
+        "blind_gap_p50_us": blind_p50, "blind_gap_p95_us": blind_p95,
+        "interleave_waves":
+            aware_eng.stats()["decode_interleave_waves"]}
+    rows.append(_util.csv_row(
+        "serve.mixed.decode_aware", aware_us,
+        f"tok_s={flood_tokens / (aware_us * 1e-6):.0f};"
+        f"gap_p95_ms={aware_p95 / 1e3:.1f};"
+        f"prefill_cost=x{aware_us / blind_us:.3f}"))
+    rows.append(_util.csv_row(
+        "serve.mixed.decode_blind", blind_us,
+        f"tok_s={flood_tokens / (blind_us * 1e-6):.0f};"
+        f"gap_p95_ms={blind_p95 / 1e3:.1f};"
+        f"p95_speedup=x{blind_p95 / aware_p95:.1f}"))
+
     # ---------------- prefill: engine scan vs per-token lock-step loop
     eng = ReservoirEngine(params, max_slots=slots, readout=readout)
     for s in range(slots):
         eng.add_session(s)
 
     def engine_prefill():
+        import dataclasses
         for s in range(slots):
-            eng.states = eng.states.at[eng.sessions[s].slot].set(0.0)
+            eng.arena = dataclasses.replace(
+                eng.arena,
+                states=eng.arena.states.at[eng.sessions[s].slot].set(0.0))
             eng.prefill(s, prompts[s])
         return eng.states
 

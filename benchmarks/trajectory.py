@@ -30,12 +30,19 @@ import json
 import os
 import sys
 
-#: metric name -> (json section, micros key, tokens expression)
+#: metric name -> (json section, micros key, tokens expression).
+#: ``None`` tokens reuse the decode section's count; the sentinel ``"_unit"``
+#: gates a *latency* in the same higher-is-better table by exporting its
+#: reciprocal (1 / seconds) — a decode p95 regression shows up as the rate
+#: dropping, so the one gate covers throughput and latency metrics alike.
 _SERVE_METRICS = {
     "serve.prefill.bucketed": ("prefill_wave", "bucketed_us", "tokens"),
     "serve.prefill.sequential": ("prefill_wave", "sequential_us", "tokens"),
     "serve.prefill.autotuned": ("prefill_autotuned", "autotuned_us",
                                 "tokens"),
+    "serve.mixed.decode_aware": ("mixed_decode_aware", "aware_us", "tokens"),
+    "serve.mixed.decode_p95": ("mixed_decode_aware", "aware_gap_p95_us",
+                               "_unit"),
     "serve.prefill.engine": ("prefill", "engine_us", "tokens"),
     "serve.decode.engine": ("decode", "engine_us", "tokens"),
     "serve.decode.sharded": ("decode_sharded", "us", None),
@@ -54,12 +61,17 @@ def tok_s(res, section, us_key, tok_key):
     sec = (res or {}).get(section)
     if not isinstance(sec, dict) or us_key not in sec:
         return None
-    us = float(sec[us_key])
+    try:
+        us = float(sec[us_key])
+    except (TypeError, ValueError):
+        return None
     if tok_key is None:                       # decode_sharded reuses decode's
         tokens = (res.get("decode") or {}).get("tokens")
+    elif tok_key == "_unit":                  # latency metric: gate 1/seconds
+        tokens = 1.0
     else:
         tokens = sec.get(tok_key)
-    if not tokens or us <= 0:
+    if not tokens or us <= 0 or us != us:     # us != us: NaN (no gaps seen)
         return None
     return float(tokens) / (us * 1e-6)
 

@@ -18,6 +18,16 @@ artifact via ``--cost-seed artifacts/serve_engine.json``); ``--chunk-max``
 splits long prompts into sequential chunk waves so one huge prompt cannot
 monopolize the arena.
 
+``--decode-slo US`` turns on decode-aware planning: flushes interleave
+closed-loop decode waves whenever the predicted prefill cost since the ready
+decoders' last token would exceed the budget (combine with ``--chunk-max``
+so decode waves can preempt *within* a long flush, not just between
+flushes), and the demo loop mixes open-loop traffic in (teacher-forced
+``decode_step`` + ``observe``) alongside the closed-loop generation.
+``--cost-save PATH`` persists the engine's refined cost model on shutdown
+(``WaveCostModel.to_artifact``); point ``--cost-seed`` at the same path to
+reload it on the next start — the learned model now survives the process.
+
 LM smoke loop (token-synchronous prefill + lock-step decode over the
 transformer/hybrid archs — KV/state caches):
 
@@ -91,7 +101,10 @@ def serve_reservoir(args) -> None:
               "wave timings")
     engine_kw = dict(mesh=mesh, bucket_min=args.bucket,
                      chunk_max=args.chunk_max, autotune=args.autotune,
-                     cost_model=cost_model)
+                     cost_model=cost_model, decode_slo_us=args.decode_slo)
+    if args.decode_slo is not None:
+        print(f"decode-aware planning: SLO {args.decode_slo:.0f} us of "
+              f"predicted prefill cost between decode waves")
 
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
@@ -143,9 +156,16 @@ def serve_reservoir(args) -> None:
         for i in range(wb):
             engine.submit(("warm", i), sig[:args.prompt_len, None])
         engine.flush()
+        if args.decode_slo is not None:
+            # interleaved decode waves and the open-loop mixed traffic run
+            # their own trace shapes — warm those too
+            engine.decode_closed_loop(engine.decode_wave_tokens)
+            engine.decode_step({("warm", 0): sig[:1]})
         engine.decode_closed_loop(args.gen)
         jax.block_until_ready(engine.states)
         engine.reset()
+    # warmup gaps span XLA compiles; the reported decode p50/p95 must not
+    engine.clear_decode_gaps()
     # All sessions "arrive" up front and accumulate in the wave scheduler;
     # each flush() admits what fits and runs ONE bucketed batched prefill
     # per wave (async admission replaces the old FIFO-on-add).
@@ -156,26 +176,63 @@ def serve_reservoir(args) -> None:
     done = 0
     prefill_tokens = 0
     decode_tokens = 0
+    interleaved_tokens = 0
     t0 = time.time()
     t_prefill = 0.0
     t_decode = 0.0
+    interleave = args.decode_slo is not None
+    # Under --decode-slo one session stays resident across flushes (a live
+    # "chat" stream): the interleaved decode waves are what protect ITS
+    # inter-token latency while the other sessions' prefills flood through.
+    persistent = 0 if interleave and args.sessions > 1 else None
+    seen_ready: set = set()
     while engine.active_sessions or len(engine.pending):
         t1 = time.time()
-        engine.flush()      # wave-batched bucketed prefill of what fits
+        # wave-batched bucketed prefill of what fits; with --decode-slo the
+        # flush itself interleaves decode waves for the sessions that were
+        # already ready (their tokens buffer — collected below)
+        engine.flush(decode_interleave=interleave)
         jax.block_until_ready(engine.states)  # don't let prefill drain into the decode timer
         t_prefill += time.time() - t1
         # ready (not active): chunk-in-flight sessions hold slots but must
         # not free-run mid-prompt (flush() drains all runnable chunks, so
         # the sets only differ under flush(max_waves=...) partial drains)
         wave = list(engine.ready_sessions)
-        prefill_tokens += args.prompt_len * len(wave)
+        # a resident session re-appears in every wave; count its prompt once
+        prefill_tokens += args.prompt_len * len(set(wave) - seen_ready)
+        seen_ready.update(wave)
         t1 = time.time()
+        if interleave and wave:
+            # tokens the interleaved decode waves already generated while
+            # the flush drained (decode never fully stalls behind prefill);
+            # counted separately — their wall time sits in the flush timer,
+            # so folding them into decode_tokens would inflate decode tok/s
+            for sid, buf in engine.collect_decoded().items():
+                interleaved_tokens += int(buf.shape[0])
+                assert np.isfinite(np.asarray(buf)).all()
+            # mixed open-loop traffic: a NON-persistent ready session
+            # streams a few teacher-forced tokens (decode_step + observe —
+            # ground truth replaces the model's feedback between steps).
+            # The persistent session stays purely closed-loop: it is the
+            # one the interleaved decode waves protect, and injecting
+            # free-run tokens into an open-loop stream is exactly what
+            # flush(decode_sids=...) exists to prevent.  Fresh wave
+            # sessions were not ready at flush start, so the interleave
+            # never touched them — their streams are clean.
+            open_sid = next((s for s in wave if s != persistent), None)
+            if open_sid is not None:
+                for t in range(args.prompt_len, args.prompt_len + 4):
+                    engine.decode_step({open_sid: sig[t, None]})
+                    engine.observe(open_sid, sig[t + 1, None])
+                    decode_tokens += 1
         ys = engine.decode_closed_loop(args.gen, sids=wave)
         jax.block_until_ready(engine.states)
         t_decode += time.time() - t1
         decode_tokens += args.gen * len(wave)
         for sid in wave:
             assert np.isfinite(ys[sid]).all()
+            if sid == persistent and len(engine.pending):
+                continue        # resident until the prefill flood drains
             engine.evict(sid)   # queued prompts wait for the next flush wave
             done += 1
     wall = time.time() - t0
@@ -199,6 +256,20 @@ def serve_reservoir(args) -> None:
             print(f"    bucket {t_bucket:>6}: {row['waves']} waves, "
                   f"{row['rows']} rows, {row['tokens']} tok, "
                   f"~{us / 1e3:.1f} ms/wave")
+    if args.decode_slo is not None:
+        st = engine.stats()
+        p50, p95 = st["decode_gap_p50_us"], st["decode_gap_p95_us"]
+        fmt = lambda v: "n/a" if v is None else f"{v / 1e3:.1f} ms"  # noqa: E731
+        print(f"  decode-aware: {st['decode_interleave_waves']} interleaved "
+              f"decode waves / {st['decode_waves_total']} decode dispatches, "
+              f"{interleaved_tokens} tok generated mid-flush; "
+              f"inter-token gap p50 {fmt(p50)}, p95 {fmt(p95)} "
+              f"(SLO {args.decode_slo / 1e3:.1f} ms of planned prefill)")
+    if args.cost_save and engine.cost_model is not None:
+        engine.cost_model.to_artifact(args.cost_save)
+        print(f"cost model saved: {engine.cost_model.n_observations} "
+              f"observations -> {args.cost_save} (reload next run via "
+              f"--cost-seed {args.cost_save})")
 
 
 # ----------------------------------------------------------------------- lm
@@ -295,6 +366,16 @@ def main():
                     help="split prompts longer than this into sequential "
                          "chunk waves (same slot, bit-exact) so one huge "
                          "prompt cannot monopolize the arena")
+    ap.add_argument("--decode-slo", type=float, default=None, metavar="US",
+                    help="decode-aware planning: bound the predicted prefill "
+                         "cost (microseconds) that may accumulate between a "
+                         "ready session's decode waves — flushes interleave "
+                         "closed-loop decode waves to hold it (combine with "
+                         "--chunk-max so decode can preempt inside a flush)")
+    ap.add_argument("--cost-save", default=None, metavar="PATH",
+                    help="persist the engine's refined cost model to PATH on "
+                         "shutdown (WaveCostModel.to_artifact); reload it "
+                         "next run via --cost-seed PATH")
     args = ap.parse_args()
     if args.reservoir:
         serve_reservoir(args)

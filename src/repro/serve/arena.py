@@ -45,6 +45,7 @@ __all__ = [
     "place",
     "place_many",
     "release",
+    "force_output",
     "arena_step",
     "apply_readout",
     "decode_step",
@@ -107,6 +108,19 @@ def release(arena: SlotArena, slot: int) -> SlotArena:
     returns lazy slices of them, so zeroing here would race the caller."""
     return SlotArena(states=arena.states, y_prev=arena.y_prev,
                      active=arena.active.at[slot].set(False))
+
+
+def force_output(arena: SlotArena, slot: int, y_true) -> SlotArena:
+    """Teacher-force ``slot``: overwrite its feedback output ``y_prev[slot]``
+    with ground truth, leaving the recurrent state untouched.  The next
+    ``decode_step`` / ``closed_loop`` of that slot then drives from the true
+    output instead of the model's own prediction — the open-loop serving
+    correction (``ReservoirEngine.observe``).  Returns the rebuilt arena;
+    like every function here it never mutates, so the caller must store the
+    result (dropping it is the silent-no-op bug this API exists to avoid).
+    """
+    return dataclasses.replace(arena,
+                               y_prev=arena.y_prev.at[slot].set(y_true))
 
 
 # ------------------------------------------------------------------ stepping

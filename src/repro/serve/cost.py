@@ -12,6 +12,19 @@ from measured wave timings, and the scheduler's two-wave lookahead
 (``serve.scheduler.WaveScheduler.next_wave``) uses it to pick the wave that
 maximizes predicted true-tokens-per-second.
 
+Decode has its own surface: a decode dispatch advances every active slot one
+token, so its cost is affine in the *active rows* only,
+
+    c_dec(B)  ~=  alpha_dec + beta_dec * B          (one fit, no buckets)
+
+fitted from timed decode dispatches (``ReservoirEngine`` autotune times both
+open-loop ``decode_step`` and per-token closed-loop waves).  The planner uses
+both surfaces for decode-aware interleaving: the decode wave's own predicted
+cost is *reserved* out of the latency budget (the inter-token gap ends when
+its tokens exist), and a candidate prefill wave whose predicted cost would
+overrun what remains of ``decode_slo_us`` is shrunk or deferred so the
+decode wave runs first.
+
 Why affine-per-bucket: every wave of a bucket reuses one compiled
 ``(B, T_bucket)`` trace, so within a bucket the cost is a fixed dispatch/
 launch overhead (``alpha_T``) plus a per-row term (``beta_T``) — the scan
@@ -59,14 +72,22 @@ class WaveCostModel:
     """
 
     def __init__(self, *, base_us: float = 300.0,
-                 per_token_us: float = 0.05):
+                 per_token_us: float = 0.05,
+                 decode_base_us: float = 150.0,
+                 decode_per_row_us: float = 1.0):
         self.base_us = float(base_us)
         self.per_token_us = float(per_token_us)
+        self.decode_base_us = float(decode_base_us)
+        self.decode_per_row_us = float(decode_per_row_us)
         self._obs: Dict[int, Deque[Tuple[int, float]]] = {}
         self._fits: Dict[int, Optional[Tuple[float, float]]] = {}
         self._global: Optional[Tuple[float, float]] = None
         self._dirty: set = set()
         self._global_dirty = False
+        self._dec_obs: Deque[Tuple[int, float]] = collections.deque(
+            maxlen=_OBS_CAP)
+        self._dec_fit: Optional[Tuple[float, float]] = None
+        self._dec_dirty = False
 
     # ------------------------------------------------------------ observing
     def observe(self, b: int, t_bucket: int, us: float) -> None:
@@ -80,15 +101,30 @@ class WaveCostModel:
         self._dirty.add(t)
         self._global_dirty = True
 
+    def observe_decode(self, b: int, us: float) -> None:
+        """Record one timed decode dispatch: ``b`` active rows advanced one
+        token in ``us`` wall microseconds (multi-token closed-loop waves are
+        divided per token by the caller)."""
+        if b <= 0 or us <= 0:
+            return
+        self._dec_obs.append((int(b), float(us)))
+        self._dec_dirty = True
+
     def seed(self, records: Iterable[dict]) -> int:
-        """Bulk-observe ``{"b":, "t_bucket":, "us":}`` records (the shape
-        ``benchmarks/serve_engine.py`` exports).  Returns how many landed."""
+        """Bulk-observe ``{"b":, "t_bucket":, "us":}`` prefill records and
+        ``{"kind": "decode", "b":, "us":}`` decode records (the shapes
+        :meth:`records` emits and ``benchmarks/serve_engine.py`` exports).
+        Returns how many landed."""
         n = 0
         for r in records:
             try:
-                self.observe(int(r["b"]), int(r["t_bucket"]), float(r["us"]))
+                if r.get("kind") == "decode":
+                    self.observe_decode(int(r["b"]), float(r["us"]))
+                else:
+                    self.observe(int(r["b"]), int(r["t_bucket"]),
+                                 float(r["us"]))
                 n += 1
-            except (KeyError, TypeError, ValueError):
+            except (KeyError, TypeError, ValueError, AttributeError):
                 continue
         return n
 
@@ -110,7 +146,8 @@ class WaveCostModel:
 
     @property
     def n_observations(self) -> int:
-        return sum(len(d) for d in self._obs.values())
+        return (sum(len(d) for d in self._obs.values())
+                + len(self._dec_obs))
 
     def clear(self) -> None:
         """Drop every observation and fit (cold-start constants remain).
@@ -122,13 +159,36 @@ class WaveCostModel:
         self._global = None
         self._dirty.clear()
         self._global_dirty = False
+        self._dec_obs.clear()
+        self._dec_fit = None
+        self._dec_dirty = False
 
     def records(self) -> list:
-        """The retained observations as ``{"b", "t_bucket", "us"}`` dicts —
+        """The retained observations as ``{"b", "t_bucket", "us"}`` prefill
+        dicts followed by ``{"kind": "decode", "b", "us"}`` decode dicts —
         the exact shape :meth:`seed` / :meth:`from_artifact` consume (what
         ``benchmarks/serve_engine.py`` exports under ``"wave_costs"``)."""
-        return [{"b": b, "t_bucket": t, "us": us}
-                for t, d in sorted(self._obs.items()) for b, us in d]
+        return ([{"b": b, "t_bucket": t, "us": us}
+                 for t, d in sorted(self._obs.items()) for b, us in d]
+                + [{"kind": "decode", "b": b, "us": us}
+                   for b, us in self._dec_obs])
+
+    def to_artifact(self, path: str) -> None:
+        """Persist the retained observations under ``"wave_costs"`` in
+        ``path`` — the same schema :meth:`from_artifact` loads, closing the
+        persistence loop (a served engine's refined model survives the
+        process).  An existing JSON object at ``path`` (e.g. the benchmark
+        artifact) keeps its other keys; anything unreadable is replaced."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if not isinstance(data, dict):
+                data = {}
+        except (OSError, json.JSONDecodeError):
+            data = {}
+        data["wave_costs"] = self.records()
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1)
 
     # ------------------------------------------------------------ predicting
     def _fit_bucket(self, t: int) -> Optional[Tuple[float, float]]:
@@ -172,6 +232,38 @@ class WaveCostModel:
             a0, a1 = self._global
             return max(a0 + a1 * b * t, 1.0)
         return max(self.base_us + self.per_token_us * b * t, 1.0)
+
+    def predict_decode_us(self, b: int) -> float:
+        """Predicted wall microseconds to advance ``b`` active slots one
+        decode token.  Affine fit over timed decode dispatches when trained
+        (>= 2 distinct B), cold-start constants before; always >= 1.
+
+        The fit goes through the per-width **medians**, not the raw points:
+        decode dispatches are a few hundred microseconds, so any host
+        hiccup (GC, scheduler preemption, a stray pending async op) lands
+        an order-of-magnitude outlier that would drag a least-squares fit —
+        and through it the reserved decode budget — far off the truth."""
+        if self._dec_dirty:
+            groups: Dict[int, list] = {}
+            for bb, u in self._dec_obs:
+                groups.setdefault(bb, []).append(u)
+            if len(groups) >= 2:
+                bs = np.asarray(sorted(groups), float)
+                us = np.asarray([float(np.median(groups[int(x)]))
+                                 for x in bs])
+                a = np.stack([np.ones_like(bs), bs], axis=1)
+                (alpha, beta), *_ = np.linalg.lstsq(a, us, rcond=None)
+                # Same physical clamp as the prefill fits: never negative at
+                # B=0, never cheaper with more rows.
+                self._dec_fit = (max(float(alpha), 0.0),
+                                 max(float(beta), 0.0))
+            else:
+                self._dec_fit = None
+            self._dec_dirty = False
+        if self._dec_fit is not None:
+            alpha, beta = self._dec_fit
+            return max(alpha + beta * b, 1.0)
+        return max(self.decode_base_us + self.decode_per_row_us * b, 1.0)
 
     def throughput(self, b: int, t_bucket: int, true_tokens: int) -> float:
         """Predicted true-tokens-per-second of a candidate wave (``b`` rows of

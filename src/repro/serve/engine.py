@@ -24,6 +24,14 @@ admission + prefill) -> ``decode_step`` / ``decode_closed_loop`` -> ``evict``
 bit-for-bit).  The legacy eager flow (``add_session`` then ``prefill``) keeps
 working as a deprecation shim with identical numerics.
 
+Decode-aware planning (``decode_slo_us`` + ``flush(decode_interleave=True)``)
+prices prefill *and* decode on the same cost model so an oversubscribed
+prefill queue cannot starve decode latency: whenever the predicted prefill
+cost charged since the ready decoders' last token would blow the SLO, the
+scheduler shrinks or defers the prefill wave and a closed-loop decode wave
+interleaves (Orca-style iteration-level scheduling, priced instead of
+round-robined).  The policy only reorders waves — outputs are bit-exact.
+
 ``from_param_batch`` serves B independently-seeded reservoirs (slot i =
 reservoir i) from one vmap-ed trace; ``ensemble="mean"`` additionally fuses
 their B predictions into one ensemble output — which is also what feeds back
@@ -96,10 +104,21 @@ class ReservoirEngine:
     ``chunk_max``: prompts longer than this drain as sequential chunk waves
     resumed from the slot's carried state (bit-exact vs one wave; pinned by
     test) — a 500k-token prompt no longer monopolizes the arena.
-    ``autotune``: time every flushed wave, feed the measurements into a
-    ``serve.cost.WaveCostModel`` (pass a pre-seeded one via ``cost_model``),
-    and let the scheduler's two-wave lookahead plan waves by predicted
-    tokens-per-second instead of the static ``max_wave`` cap.
+    ``autotune``: time every flushed wave *and* every decode dispatch, feed
+    the measurements into a ``serve.cost.WaveCostModel`` (pass a pre-seeded
+    one via ``cost_model``), and let the scheduler's two-wave lookahead plan
+    waves by predicted tokens-per-second instead of the static ``max_wave``
+    cap.
+
+    ``decode_slo_us``: decode-aware planning (default off).  When set, any
+    :meth:`flush` call with ``decode_interleave=True`` bounds how much
+    *predicted* prefill cost may accumulate while ready-to-decode sessions
+    wait: a candidate prefill wave that would push the decode inter-token
+    gap past the budget is shrunk or deferred so a closed-loop decode wave
+    (``decode_wave_tokens`` tokens over every ready session, buffered for
+    :meth:`collect_decoded`) interleaves first.  The policy only *reorders*
+    waves — outputs stay bit-exact (pinned by test).  A cold cost model is
+    created automatically if none is supplied.
 
     The engine **snapshots (params, readout) at construction** — both are
     immutable structs, so nothing can mutate underneath the compiled step
@@ -111,6 +130,8 @@ class ReservoirEngine:
                  bucket_min: int = 16, ensemble: str = "off",
                  chunk_max: Optional[int] = None, autotune: bool = False,
                  cost_model: Optional[WaveCostModel] = None,
+                 decode_slo_us: Optional[float] = None,
+                 decode_wave_tokens: int = 1,
                  _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
@@ -156,19 +177,46 @@ class ReservoirEngine:
         # pre-seeded model (WaveCostModel.from_artifact) can be passed in;
         # autotune without one starts cold and learns from the first flush.
         self._autotune = bool(autotune)
-        if autotune and cost_model is None:
+        if decode_slo_us is not None and decode_slo_us <= 0:
+            raise ValueError(
+                f"decode_slo_us must be positive (got {decode_slo_us}); "
+                f"use None to disable decode-aware planning")
+        if decode_wave_tokens < 1:
+            raise ValueError(f"decode_wave_tokens must be >= 1, "
+                             f"got {decode_wave_tokens}")
+        self.decode_slo_us = (None if decode_slo_us is None
+                              else float(decode_slo_us))
+        self.decode_wave_tokens = int(decode_wave_tokens)
+        # Decode-aware planning needs a cost surface to price the candidate
+        # prefill waves against the budget — a cold model's documented
+        # constants are enough to start; autotune refines them in place.
+        if cost_model is None and (autotune or decode_slo_us is not None):
             cost_model = WaveCostModel()
         self.cost_model = cost_model
         self.scheduler = WaveScheduler(bucket_min=bucket_min,
                                        chunk_max=chunk_max,
                                        cost_model=cost_model)
         self._chunk_outs: Dict[Hashable, List] = {}
+        self._decode_buf: Dict[Hashable, List] = {}
         self._stats = {"waves": 0, "rows": 0, "fresh_rows": 0,
                        "prefill_tokens": 0, "decode_tokens": 0,
                        "occupancy_sum": 0.0,
                        "wave_us_sum": 0.0, "timed_waves": 0,
+                       "decode_waves": 0, "decode_rows": 0,
+                       "decode_interleave_waves": 0,
+                       "decode_us_sum": 0.0, "decode_timed_steps": 0,
                        "by_bucket": {}}
         self._wave_log: collections.deque = collections.deque(maxlen=256)
+        # Decode latency bookkeeping: the planning clock (predicted/measured
+        # prefill cost charged since the last decode wave), the wall stamp
+        # of the last decode event (host overhead — evictions, admissions,
+        # queue drains — consumes latency budget no cost model predicts),
+        # and the measured wall-clock inter-token gaps per session.
+        self._decode_clock_us = 0.0
+        self._last_decode_t = time.perf_counter()
+        self._last_decode_wall: Dict[Hashable, float] = {}
+        self._decode_gaps_us: collections.deque = collections.deque(
+            maxlen=4096)
         self._decode_jit = jax.jit(functools.partial(
             arena_mod.decode_step, batched=self._batched,
             ensemble=self.ensemble))
@@ -196,7 +244,9 @@ class ReservoirEngine:
                          bucket_min: int = 16,
                          chunk_max: Optional[int] = None,
                          autotune: bool = False,
-                         cost_model: Optional[WaveCostModel] = None
+                         cost_model: Optional[WaveCostModel] = None,
+                         decode_slo_us: Optional[float] = None,
+                         decode_wave_tokens: int = 1
                          ) -> "ReservoirEngine":
         """Engine over a *batch* of independently-seeded reservoirs.
 
@@ -217,6 +267,8 @@ class ReservoirEngine:
         return cls(params, max_slots=b, readout=readout, ensemble=ensemble,
                    mesh=mesh, bucket_min=bucket_min, chunk_max=chunk_max,
                    autotune=autotune, cost_model=cost_model,
+                   decode_slo_us=decode_slo_us,
+                   decode_wave_tokens=decode_wave_tokens,
                    _param_batch=True)
 
     # -------------------------------------------------------------- compat
@@ -228,23 +280,23 @@ class ReservoirEngine:
     def param_batched(self) -> bool:
         return self._batched
 
+    # Read-only views into the arena.  Deliberately NO setters: the arena is
+    # the one owner of the serving arrays, and a correctness-critical write
+    # routed through an attribute assignment is exactly how teacher forcing
+    # became a silent no-op (observe() assigned `self.y_prev = ...`; had the
+    # compat property been dropped, the assignment would have bound a stray
+    # instance attribute and the arena would never see the ground truth).
+    # Writers go through `self.arena = dataclasses.replace(...)` / the pure
+    # ``serve.arena`` functions, and a stray attribute write now raises.
     @property
     def states(self):
         """The arena's (max_slots, N) state block (owned by ``serve.arena``;
-        kept as a property for callers that peek or zero slots directly)."""
+        kept as a read-only property for callers that peek at slots)."""
         return self.arena.states
-
-    @states.setter
-    def states(self, value):
-        self.arena = dataclasses.replace(self.arena, states=value)
 
     @property
     def y_prev(self):
         return self.arena.y_prev
-
-    @y_prev.setter
-    def y_prev(self, value):
-        self.arena = dataclasses.replace(self.arena, y_prev=value)
 
     @property
     def pending(self):
@@ -334,7 +386,9 @@ class ReservoirEngine:
 
     def flush(self, *, method: str = "auto", chunk: int = 128,
               want_outputs: bool = False,
-              max_waves: Optional[int] = None) -> Dict[Hashable, object]:
+              max_waves: Optional[int] = None,
+              decode_interleave: bool = False,
+              decode_sids=None) -> Dict[Hashable, object]:
         """Drain the admission queue, one batched prefill per same-bucket
         wave.  Returns sid -> per-step outputs for the prompt sessions that
         *completed* their prefill this flush (None entries unless
@@ -348,23 +402,208 @@ class ReservoirEngine:
         a long prompt drains as K sequential chunk rows resumed from the
         slot's carried state, interleaved with other buckets' waves; chunk
         *continuation* rows need no free slot, so they keep draining even
-        with the arena full.  ``max_waves`` bounds how many waves this call
-        runs (None: until nothing is runnable) — serving loops use it to
-        interleave decode between waves.  Keep ``want_outputs`` consistent
+        with the arena full.  ``max_waves`` bounds how many *prefill* waves
+        this call runs (None: until nothing is runnable) — serving loops use
+        it to interleave decode between waves; interleaved decode waves
+        never consume the quota, so ``flush(max_waves=1)`` always makes
+        prefill progress even under an unsatisfiable decode budget (pinned
+        by test).  Keep ``want_outputs`` consistent
         across the flushes that drain one chunked prompt: chunks that ran
         under ``want_outputs=False`` recorded no outputs to concatenate.
+
+        ``decode_interleave=True`` (needs ``decode_slo_us`` set and a
+        closed-loop-capable engine): the flush drains prefill *and* decode
+        as alternating waves.  The protected decoders are the sessions in
+        ``decode_sids`` (each must be ready; default: every session ready
+        when the flush began — pass an explicit subset when some ready
+        sessions are driven open-loop by the caller, or a free-run token
+        would be injected into their stream); whenever the predicted
+        prefill cost charged since their last decode wave would exceed
+        ``decode_slo_us``, the scheduler shrinks or defers the candidate
+        prefill wave and a ``decode_wave_tokens``-token closed-loop decode
+        wave runs instead (outputs buffered — :meth:`collect_decoded`).
+        Planning only reorders waves, so every output is bit-exact vs the
+        decode-blind schedule.  An SLO below even a single-row wave's
+        predicted cost degrades to strict prefill/decode alternation
+        (progress is never traded for an unsatisfiable budget).
         """
+        if not decode_interleave:
+            decode_sids = []
+        else:
+            if self.decode_slo_us is None:
+                raise ValueError(
+                    "decode_interleave=True needs decode_slo_us set on the "
+                    "engine — the latency budget that prices when a decode "
+                    "wave must preempt prefill")
+            if self.readout is None or self.cfg.d_in != self.cfg.d_out:
+                raise ValueError(
+                    "interleaved decode waves free-run (closed loop): the "
+                    "engine needs a trained readout and d_in == d_out")
+            ready = self.ready_sessions
+            if decode_sids is None:
+                decode_sids = list(ready)
+            else:
+                decode_sids = list(dict.fromkeys(decode_sids))
+                missing = [s for s in decode_sids if s not in set(ready)]
+                if missing:
+                    raise KeyError(
+                        f"decode_sids must be ready sessions; not ready: "
+                        f"{missing!r}")
         results: Dict[Hashable, object] = {}
         waves_run = 0
+        just_decoded = False
         while max_waves is None or waves_run < max_waves:
             capacity = self.free_slots
-            wave = self.scheduler.next_wave(capacity)
-            if not wave:
+            if not self.scheduler.has_runnable(capacity):
                 break
+            budget = (self._decode_budget(len(decode_sids))
+                      if decode_sids else None)
+            wave = self.scheduler.next_wave(capacity, budget_us=budget)
+            if not wave:
+                if not just_decoded:
+                    # Runnable prefill exists but is over the decode budget:
+                    # a decode wave runs instead and resets the clock.  It
+                    # does NOT count toward max_waves — a partial drain's
+                    # wave quota is prefill progress, and spending it on
+                    # decode would livelock a flush(max_waves=1) loop under
+                    # an unsatisfiable SLO (pinned by test).
+                    self._decode_wave(decode_sids)
+                    just_decoded = True
+                    continue
+                # Fresh budget: waive the shrink-efficiency floor — a
+                # slow-but-SLO-compliant part-wave beats blowing the budget
+                # on the full one.
+                wave = self.scheduler.next_wave(
+                    capacity, budget_us=self._decode_budget(
+                        len(decode_sids)), shrink_floor=0.0)
+                if not wave:
+                    # Truly unsatisfiable: not even one row fits the SLO;
+                    # run unbudgeted rather than spin decode-only forever.
+                    wave = self.scheduler.next_wave(capacity)
+                    if not wave:
+                        break
+            just_decoded = False
             waves_run += 1
             self._run_wave(wave, capacity, results, method=method,
                            chunk=chunk, want_outputs=want_outputs)
         return results
+
+    def _decode_budget(self, n_decoders: int) -> float:
+        """Remaining decode latency budget in microseconds.  Consumed = the
+        larger of the planned prefill cost and the real wall time since the
+        last decode (host work — evictions, admissions, queue drains — and
+        mispredicted waves eat latency the cost model never sees); the
+        decode wave's own predicted cost is reserved up front, because the
+        inter-token gap the SLO bounds ends when the decode wave's tokens
+        *exist*, not when it starts."""
+        elapsed = max(self._decode_clock_us,
+                      (time.perf_counter() - self._last_decode_t) * 1e6)
+        reserve = (self.cost_model.predict_decode_us(n_decoders)
+                   * self.decode_wave_tokens)
+        return self.decode_slo_us - elapsed - reserve
+
+    def _dispatch_decode(self, launch, sids, *, tokens: int,
+                         block: bool, interleave: bool = False):
+        """Shared wrapper around every decode dispatch: optional wall timing
+        (always when ``block``, else only under autotune), decode-surface
+        observation (autotune only — there every prefill wave was itself
+        synced, so the wall time is decode alone; in pipelined serving a
+        block also drains queued prefill waves, and that drain time would
+        poison the fit), and the gap/counter/clock accounting.  ``launch``
+        performs the jitted call, stores the new arena, and returns the
+        output array to block on."""
+        timed = (block or self._autotune) and sids and tokens
+        t0 = time.perf_counter() if timed else None
+        out = launch()
+        us = None
+        if t0 is not None:
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) * 1e6
+            if self._autotune:
+                self.cost_model.observe_decode(len(sids), us / tokens)
+        if sids and tokens:
+            self._note_decode(sids, us=us, tokens=tokens,
+                              interleave=interleave)
+        return out
+
+    def _decode_wave(self, sids: List) -> None:
+        """One interleaved decode wave: advance every protected decoder by
+        ``decode_wave_tokens`` free-running tokens, buffered for
+        :meth:`collect_decoded`.
+
+        The wave **always blocks** until its tokens exist: the decode SLO is
+        a *latency* contract, and on an async backend a dispatched-but-
+        unmaterialized token is still latency — blocking here is what makes
+        the inter-token gap statistics (and the clock reset) real wall
+        time, and it drains the queued prefill waves the tokens depend on.
+        """
+        mask = np.zeros((self.max_slots,), bool)
+        for sid in sids:
+            st = self.sessions[sid]
+            mask[st.slot] = True
+            st.tokens_decoded += self.decode_wave_tokens
+        self._stats["decode_tokens"] += self.decode_wave_tokens * len(sids)
+
+        def launch():
+            self.arena, ys = self._closed_jit(
+                self.params, self.w_out, self.arena, jnp.asarray(mask),
+                int(self.decode_wave_tokens))
+            return ys
+
+        ys = self._dispatch_decode(launch, sids,
+                                   tokens=self.decode_wave_tokens,
+                                   block=True, interleave=True)
+        for sid in sids:
+            self._decode_buf.setdefault(sid, []).append(
+                ys[:, self.sessions[sid].slot])
+
+    def clear_decode_gaps(self) -> None:
+        """Drop the recorded inter-token gap samples (``decode_gap_*`` in
+        :meth:`stats`).  Call after a warmup phase: first-dispatch gaps span
+        XLA compilation and would sit at the top of the percentile window
+        for the whole serving run otherwise."""
+        self._decode_gaps_us.clear()
+
+    def collect_decoded(self, sid: Optional[Hashable] = None):
+        """Drain the tokens that interleaved decode waves buffered.
+
+        With ``sid``: that session's (n_tokens, D_out) array (length 0 when
+        nothing buffered).  Without: a dict over every session that has
+        buffered tokens.  Buffers clear on read; evicting a session drops
+        its buffer, so collect before evicting."""
+        if sid is not None:
+            chunks = self._decode_buf.pop(sid, [])
+            if not chunks:
+                return jnp.zeros((0, self.cfg.d_out), self._dtype)
+            return (chunks[0] if len(chunks) == 1
+                    else jnp.concatenate(chunks, axis=0))
+        out = {s: (c[0] if len(c) == 1 else jnp.concatenate(c, axis=0))
+               for s, c in self._decode_buf.items()}
+        self._decode_buf.clear()
+        return out
+
+    def _note_decode(self, sids, *, us=None, tokens: int = 1,
+                     interleave: bool = False) -> None:
+        """Decode-side accounting shared by every decode path: wall-clock
+        inter-token gaps per session, decode wave counters, and the planning
+        clock reset (a decode just ran, so the prefill-cost-since-decode
+        budget restarts)."""
+        wall = time.perf_counter()
+        for sid in sids:
+            prev = self._last_decode_wall.get(sid)
+            if prev is not None:
+                self._decode_gaps_us.append((wall - prev) * 1e6)
+            self._last_decode_wall[sid] = wall
+        s = self._stats
+        s["decode_waves"] += 1
+        s["decode_rows"] += len(sids)
+        if interleave:
+            s["decode_interleave_waves"] += 1
+        if us is not None:
+            s["decode_us_sum"] += us
+            s["decode_timed_steps"] += tokens
+        self._decode_clock_us = 0.0
+        self._last_decode_t = wall
 
     def _run_wave(self, wave: List[WaveItem], capacity: int,
                   results: Dict[Hashable, object], *, method: str,
@@ -427,6 +666,14 @@ class ReservoirEngine:
         tokens = int(lengths.sum())
         self._record_wave(t_bucket, len(wave), len(fresh), capacity,
                           tokens, us)
+        # Charge the decode clock with what this wave cost (measured when
+        # autotune timed it, else the model's prediction): the budget decode
+        # -aware flushes plan against is "prefill cost since the last decode
+        # wave", whether or not this particular flush is interleaving.
+        if us is not None:
+            self._decode_clock_us += us
+        elif self.cost_model is not None:
+            self._decode_clock_us += self.cost_model.predict_us(bw, t_bucket)
         for i, it in enumerate(prompts):
             st = self.sessions[it.sid]
             st.tokens_prefilled += int(lengths[i])
@@ -477,9 +724,30 @@ class ReservoirEngine:
         feed the cost model and the ``launch/serve.py --autotune`` report;
         ``wave_log`` holds the last 256 waves for offline inspection, and
         ``wave_costs`` is exactly the record list
-        ``WaveCostModel.seed`` / ``from_artifact`` consume."""
+        ``WaveCostModel.seed`` / ``from_artifact`` consume — exported from
+        ``cost_model.records()`` (the model's full retained observation set,
+        prefill and decode), NOT from the bounded wave log: a long-serving
+        engine's ring forgets everything past 256 waves, and persisting a
+        truncated set would silently degrade the reloaded model.
+
+        Decode counters: ``decode_waves_total`` counts decode dispatches
+        (interleaved waves + user-called steps/closed loops;
+        ``decode_interleave_waves`` is the interleaved subset),
+        ``decode_us_per_step`` the mean timed dispatch cost per token, and
+        ``decode_gap_p50_us`` / ``decode_gap_p95_us`` the measured
+        wall-clock inter-token gap percentiles over the last 4096 gaps —
+        the serving-latency numbers ``--decode-slo`` bounds."""
         s = self._stats
         waves = s["waves"]
+        gaps = (np.asarray(self._decode_gaps_us, float)
+                if self._decode_gaps_us else None)
+        if self.cost_model is not None:
+            wave_costs = self.cost_model.records()
+        else:           # no model: best effort from the (bounded) wave log
+            wave_costs = [{"b": w["rows"], "t_bucket": w["t_bucket"],
+                           "us": w["us"]}
+                          for w in self._wave_log
+                          if w["us"] is not None and w["rows"] > 0]
         return {
             "sessions_active": len(self.sessions),
             "sessions_ready": len(self.ready_sessions),
@@ -494,12 +762,20 @@ class ReservoirEngine:
             "occupancy_mean": (s["occupancy_sum"] / waves) if waves else None,
             "wave_us_mean": (s["wave_us_sum"] / s["timed_waves"]
                              if s["timed_waves"] else None),
+            "decode_waves_total": s["decode_waves"],
+            "decode_rows_total": s["decode_rows"],
+            "decode_interleave_waves": s["decode_interleave_waves"],
+            "decode_us_per_step": (s["decode_us_sum"]
+                                   / s["decode_timed_steps"]
+                                   if s["decode_timed_steps"] else None),
+            "decode_gaps": 0 if gaps is None else int(gaps.size),
+            "decode_gap_p50_us": (None if gaps is None
+                                  else float(np.percentile(gaps, 50))),
+            "decode_gap_p95_us": (None if gaps is None
+                                  else float(np.percentile(gaps, 95))),
             "by_bucket": {t: dict(v) for t, v in s["by_bucket"].items()},
             "wave_log": list(self._wave_log),
-            "wave_costs": [{"b": w["rows"], "t_bucket": w["t_bucket"],
-                            "us": w["us"]}
-                           for w in self._wave_log
-                           if w["us"] is not None and w["rows"] > 0],
+            "wave_costs": wave_costs,
         }
 
     def _place(self, sid, slot: int, h0, y0) -> int:
@@ -547,6 +823,8 @@ class ReservoirEngine:
             # WaveScheduler.cancel) and the arena slot holds the carry.
             self.scheduler.cancel(sid)
         self._chunk_outs.pop(sid, None)
+        self._decode_buf.pop(sid, None)
+        self._last_decode_wall.pop(sid, None)
         state = self.arena.states[st.slot]
         y = self.arena.y_prev[st.slot]
         self._slots[st.slot] = None
@@ -566,6 +844,10 @@ class ReservoirEngine:
         self._slots = [None] * self.max_slots
         self.sessions.clear()
         self._chunk_outs.clear()
+        self._decode_buf.clear()
+        self._last_decode_wall.clear()
+        self._decode_clock_us = 0.0
+        self._last_decode_t = time.perf_counter()
         self.scheduler = WaveScheduler(bucket_min=self.scheduler.bucket_min,
                                        max_wave=self.scheduler.max_wave,
                                        chunk_max=self.scheduler.chunk_max,
@@ -685,7 +967,11 @@ class ReservoirEngine:
         With ``ensemble="mean"`` every queried sid maps to the SAME fused
         prediction (the mean over the stepped reservoirs).
         The prediction is stored as the session's feedback ``y_prev``; call
-        :meth:`observe` afterwards to teacher-force a ground-truth output.
+        :meth:`observe` afterwards to teacher-force a ground-truth output —
+        the observed value replaces the prediction in the arena, so the next
+        step drives open-loop from ground truth.
+        Under ``autotune`` the dispatch is timed (host sync — the price of a
+        measurement) and feeds the cost model's decode surface.
         """
         # Resolve every sid and validate every vector before mutating
         # anything: a bad input must not leave other sessions' stats
@@ -701,20 +987,48 @@ class ReservoirEngine:
             mask[st.slot] = True
             st.tokens_decoded += 1
         self._stats["decode_tokens"] += len(vecs)
-        self.arena, y = self._decode_jit(
-            self.params, self.w_out, self.arena, jnp.asarray(u),
-            jnp.asarray(mask))
+
+        def launch():
+            self.arena, y = self._decode_jit(
+                self.params, self.w_out, self.arena, jnp.asarray(u),
+                jnp.asarray(mask))
+            return y
+
+        y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False)
         if self.readout is None:
             return {}
         y = np.asarray(y)
         return {sid: y[self.sessions[sid].slot] for sid in inputs}
 
     def observe(self, sid: Hashable, y_true):
-        """Teacher-force: overwrite ``sid``'s feedback output with ground
-        truth (used between open-loop decode steps)."""
+        """Teacher-force ``sid``: overwrite its stored output with the
+        ground-truth ``y_true`` (D_out,).  On a **feedback model** the next
+        :meth:`decode_step` then drives from the true output instead of the
+        model's own prediction — the open-loop serving correction; the next
+        prediction matches the dense teacher-forced reference (pinned by
+        regression test).  On a non-feedback model the stored output is
+        only read as the **closed-loop seed**, so observe retargets the
+        next :meth:`decode_closed_loop` free-run but leaves open-loop
+        ``decode_step`` predictions untouched (their features never see y).
+
+        The arena is rebuilt in place (``arena.force_output``); with
+        ``ensemble="mean"`` the correction lands in every *ready* slot —
+        the fused mean is what fed back into all of them, so a one-slot
+        write would leave B-1 reservoirs driving from the stale prediction
+        (chunk-in-flight slots are excluded: their ``y_prev`` carries the
+        teacher-forced chunk state, which the fused mean never touched).
+        Resolves the session first, so observing a queued / chunk-in-flight
+        sid raises instead of silently dropping the correction."""
         st = self._active(sid)
-        self.y_prev = self.arena.y_prev.at[st.slot].set(
-            jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out))
+        y = jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out)
+        if self.ensemble == "mean":
+            slots = jnp.asarray([self.sessions[s].slot
+                                 for s in self.ready_sessions])
+            self.arena = dataclasses.replace(
+                self.arena,
+                y_prev=self.arena.y_prev.at[slots].set(y))
+            return
+        self.arena = arena_mod.force_output(self.arena, st.slot, y)
 
     # ----------------------------------------------------------- closed loop
     def decode_closed_loop(self, n_steps: int, sids=None):
@@ -740,10 +1054,19 @@ class ReservoirEngine:
             mask[stats[sid].slot] = True
             stats[sid].tokens_decoded += n_steps
         self._stats["decode_tokens"] += n_steps * len(targets)
-        self.arena, ys = self._closed_jit(
-            self.params, self.w_out, self.arena, jnp.asarray(mask),
-            int(n_steps))
+
+        def launch():
+            self.arena, ys = self._closed_jit(
+                self.params, self.w_out, self.arena, jnp.asarray(mask),
+                int(n_steps))
+            return ys
+
+        # Autotune times the dispatch (host sync, the price of a
+        # measurement) — the per-token cost feeds the decode surface the
+        # decode-aware planner budgets against.
+        ys = self._dispatch_decode(launch, targets, tokens=n_steps,
+                                   block=False)
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
         # callers (pipelined serving loops) stay async; convert to host
-        # memory on their own schedule.
+        # memory on their own schedule (autotune forces the sync above).
         return {sid: ys[:, stats[sid].slot] for sid in targets}

@@ -29,6 +29,16 @@ Two orthogonal extensions ride on the same queue:
   (the fix for fragmenting buckets under-filling waves).  The deferral is
   **committed**: the very next wave must serve the deferred anchor, so the
   no-starvation bound only gains a one-wave slack.
+* **Decode-aware budgets** (``next_wave(budget_us=...)``): the engine passes
+  the remaining decode latency budget when ready-to-decode sessions are
+  waiting (``decode_slo_us`` minus the prefill cost already charged since
+  their last decode wave).  A candidate wave whose predicted cost exceeds
+  the budget is *shrunk* from the tail (youngest rows first — the anchor is
+  never trimmed away) until it fits; when even the anchor alone cannot fit,
+  the wave is deferred entirely (``[]`` returns, nothing pops) and the
+  engine interleaves a decode wave before retrying.  The budget only ever
+  removes or delays rows — arrival order within a bucket is untouched, so
+  the fairness bounds survive with the decode waves inserted between.
 
 Scheduling invariants, all pinned by test:
 
@@ -56,6 +66,14 @@ __all__ = ["PrefillRequest", "WaveItem", "bucket_length", "WaveScheduler"]
 #: this factor in predicted tok/s before the anchor is pushed back one wave —
 #: fairness is the default, reordering has to pay for itself.
 _DEFER_MARGIN = 1.05
+
+#: Budget-shrink efficiency floor: a decode-budget-trimmed wave must retain
+#: at least this fraction of the full wave's predicted tokens-per-second.
+#: When wave cost is alpha-dominated (dispatch overhead), a shrunk wave pays
+#: nearly the full cost for a fraction of the tokens — deferring (decode
+#: now, full wave on the fresh budget) is strictly better for throughput
+#: and equally SLO-safe; shrinking only wins in the beta-dominated regime.
+_SHRINK_EFFICIENCY = 0.9
 
 
 @dataclasses.dataclass
@@ -215,7 +233,18 @@ class WaveScheduler:
                 return r
         return None
 
-    def next_wave(self, capacity: int) -> List[WaveItem]:
+    def has_runnable(self, capacity: int) -> bool:
+        """Would :meth:`next_wave` have work right now (ignoring any decode
+        budget)?  A non-popping probe: the engine's interleaved flush uses it
+        to tell "queue drained / nothing admissible" apart from "prefill
+        deferred for decode" — only the latter warrants a decode wave and a
+        retry."""
+        return self._anchor(max(0, int(capacity))) is not None
+
+    def next_wave(self, capacity: int, *,
+                  budget_us: Optional[float] = None,
+                  shrink_floor: float = _SHRINK_EFFICIENCY
+                  ) -> List[WaveItem]:
         """Pop the next wave.  Returns [] when nothing is runnable.
 
         Without a cost model: the wave is anchored on the globally-oldest
@@ -226,6 +255,16 @@ class WaveScheduler:
         first when that strictly improves predicted tok/s over both waves
         (see :meth:`_plan_deferral`); the deferral is committed, so the
         anchor is served in the immediately-following wave.
+
+        ``budget_us`` (needs a cost model): the remaining decode latency
+        budget.  The popped wave's predicted cost must fit it — the wave is
+        shrunk from its tail until it does, and deferred entirely (``[]``,
+        nothing pops, queue untouched) when even one row cannot fit or the
+        surviving wave would fall under ``shrink_floor`` of the full wave's
+        predicted tok/s.  The caller owns the follow-up policy (run a
+        decode wave, then retry — passing ``shrink_floor=0.0`` on the
+        fresh-budget retry accepts *any* SLO-compliant wave rather than
+        blowing the budget on the full one).
         """
         capacity = max(0, int(capacity))
         anchor = self._anchor(capacity)
@@ -235,13 +274,53 @@ class WaveScheduler:
         wave = self._gather(abucket, capacity)
         defer_allowed = (self.cost_model is not None
                          and self._deferred is None)
-        self._deferred = None            # a pending commitment is honored now
+        deferring = False
         if defer_allowed:
             alt = self._plan_deferral(anchor, abucket, wave, capacity)
             if alt is not None:
-                self._deferred = anchor.sid
-                wave = alt
+                wave, deferring = alt, True
+        if budget_us is not None and self.cost_model is not None:
+            wave = self._fit_budget(wave, budget_us, shrink_floor)
+            if not wave:
+                # Deferred for decode: nothing pops and commitments are
+                # untouched — the engine retries after its decode wave with
+                # a fresh budget, so the lookahead re-plans the same queue.
+                return []
+        # Only a *popped* wave consumes or creates a commitment: a pending
+        # deferral is honored by this wave (the anchor leads it), and a new
+        # one is recorded only when the lookahead's alternative actually ran.
+        self._deferred = anchor.sid if deferring else None
         return self._pop(wave)
+
+    def _fit_budget(self, wave: List[WaveItem], budget_us: float,
+                    shrink_floor: float) -> List[WaveItem]:
+        """Shrink ``wave`` until its predicted cost fits ``budget_us``, or
+        defer it entirely.  Rows drop youngest-first (the list is
+        queue-ordered, so the oldest — the anchor, when this is the anchor's
+        wave — is trimmed last); dropped rows simply stay queued.  Returns
+        [] when no row fits, or when the surviving wave would keep less than
+        ``shrink_floor`` of the full wave's predicted tok/s (the
+        alpha-dominated regime, where a part-wave pays almost the whole
+        dispatch cost — the caller decodes now and retries on a fresh
+        budget, waiving the floor there if SLO compliance is at stake)."""
+        if not wave:
+            return wave
+        bucket = bucket_length(wave[0].length, bucket_min=self.bucket_min)
+        full_tokens = sum(it.length for it in wave)
+        full_cost = self.cost_model.predict_us(len(wave), bucket)
+        if full_cost <= budget_us:
+            return wave
+        shrunk = wave
+        while shrunk and self.cost_model.predict_us(len(shrunk),
+                                                    bucket) > budget_us:
+            shrunk = shrunk[:-1]
+        if not shrunk:
+            return []
+        tokens = sum(it.length for it in shrunk)
+        cost = self.cost_model.predict_us(len(shrunk), bucket)
+        if tokens * full_cost < shrink_floor * full_tokens * cost:
+            return []
+        return shrunk
 
     def _pop(self, items: List[WaveItem]) -> List[WaveItem]:
         """Commit a gathered wave: finished requests leave the queue; a

@@ -284,6 +284,109 @@ def test_prefill_with_readout_keeps_teacher_feedback():
     np.testing.assert_allclose(eng.state_of("s"), ref[100], rtol=0, atol=1e-8)
 
 
+def test_observe_regression_teacher_forcing_is_not_a_noop():
+    """REGRESSION (PR-5 headline bugfix): ``observe()`` wrote through a
+    compat attribute path instead of rebuilding ``self.arena`` directly, so
+    teacher forcing was one property-deletion away from becoming a silent
+    no-op.  Two pins on the now-explicit semantics: (a) an observed output
+    *changes* the next ``decode_step`` prediction vs an identically-prepared
+    engine that skipped ``observe`` — a no-op implementation ties them; (b)
+    the teacher-forced open-loop decode trajectory matches the dense
+    lock-step reference <= 1e-5."""
+    cfg_fb = ESNConfig(n=40, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                       input_scaling=0.5, use_feedback=True, seed=5)
+    sig = _mso(401)
+    u, y = sig[:-1, None], sig[1:, None]
+    m = LinearESN.standard(cfg_fb).fit(u[:300], y[:300], washout=50)
+    w, w_in, w_fb = np.asarray(m.w), np.asarray(m.w_in), np.asarray(m.w_fb)
+    w_out = np.asarray(m.w_out)
+
+    # dense teacher-forced prefill: feedback at step t is y[t-1] (y[-1]=0)
+    r = np.zeros(cfg_fb.n)
+    yfb = np.zeros(1)
+    for t in range(300):
+        r = r @ w + u[t] @ w_in + yfb @ w_fb
+        yfb = y[t]
+    r_pre = r.copy()
+
+    def fresh():
+        e = ReservoirEngine(m, max_slots=1)
+        e.add_session("s")
+        e.prefill("s", u[:300], y_teacher=y[:300])
+        return e
+
+    # (a) the observed value must reach the next prediction
+    forced, free = fresh(), fresh()
+    y_obs = y[300] + 7.0                      # a correction far from the fit
+    forced.observe("s", y_obs)
+    p_forced = forced.decode_step({"s": u[300]})["s"]
+    p_free = free.decode_step({"s": u[300]})["s"]
+    assert not np.allclose(p_forced, p_free, atol=1e-3), \
+        "observe() was a no-op: the forced output never reached the arena"
+    r_f = r_pre @ w + u[300] @ w_in + y_obs @ w_fb
+    ref_f = np.concatenate([[1.0], y_obs.ravel(), r_f]) @ w_out
+    np.testing.assert_allclose(p_forced, ref_f, rtol=0, atol=1e-5)
+
+    # (b) decode_step + observe in a loop == dense lock-step teacher forcing
+    eng = fresh()
+    y_prev = y[299]
+    for t in range(300, 320):
+        r = r @ w + u[t] @ w_in + y_prev @ w_fb
+        ref = np.concatenate([[1.0], y_prev.ravel(), r]) @ w_out
+        got = eng.decode_step({"s": u[t]})["s"]
+        np.testing.assert_allclose(got, ref, rtol=0, atol=1e-5)
+        eng.observe("s", y[t])                # ground truth replaces the pred
+        np.testing.assert_allclose(np.asarray(eng.y_prev[0]), y[t],
+                                   rtol=0, atol=1e-12)
+        y_prev = y[t]
+
+
+def test_observe_ensemble_mean_corrects_every_slot():
+    """Under ensemble='mean' the fused prediction was fed back into EVERY
+    stepped slot's y_prev, so a teacher-forced correction must also land in
+    every slot — a one-slot write would leave B-1 reservoirs free-running
+    from the stale prediction."""
+    from repro.core import esn as esn_fn
+    from repro.core.params import Readout, stack_params
+    import dataclasses as dc
+    sig = _mso(601)
+    u, y = sig[:-1, None], sig[1:, None]
+    batch = [esn_fn.dpg_params(dc.replace(CFG, seed=CFG.seed + i),
+                               "noisy_golden", sigma=0.1)
+             for i in range(3)]
+    params = stack_params(batch)
+    readout = Readout(jnp.stack([
+        esn_fn.fit(p, u[:400], y[:400], washout=50).w_out for p in batch]))
+    eng = ReservoirEngine.from_param_batch(params, readout=readout,
+                                           ensemble="mean")
+    for i in range(3):
+        eng.submit(i, u[:100])
+    eng.flush()
+    eng.decode_step({i: u[100] for i in range(3)})
+    eng.observe(0, [3.25])
+    np.testing.assert_array_equal(
+        np.asarray(eng.y_prev), np.full((3, 1), 3.25))
+    # ... and the corrected seed is what the fused free-run starts from
+    # (ensemble closed-loop numerics vs singles are pinned in
+    # test_serve_stack; the contract here is the all-slots write)
+    ys = eng.decode_closed_loop(1)
+    assert np.isfinite(np.asarray(ys[0])).all()
+
+
+def test_arena_views_are_read_only():
+    """The engine's ``states`` / ``y_prev`` are views, not storage: writing
+    them must raise (a silent instance-attribute shadow is exactly how the
+    observe() no-op could regress).  This is the pin that FAILS on the
+    pre-fix engine: there the compat setters made these assignments
+    succeed, which is what observe() was leaning on."""
+    _, dia, u, _ = _models()
+    eng = ReservoirEngine(dia, max_slots=1)
+    with pytest.raises(AttributeError):
+        eng.y_prev = eng.arena.y_prev
+    with pytest.raises(AttributeError):
+        eng.states = eng.arena.states
+
+
 def test_prefill_without_readout_keeps_teacher_feedback():
     cfg_fb = ESNConfig(n=40, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
                        input_scaling=0.5, use_feedback=True, seed=5)

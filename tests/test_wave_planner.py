@@ -172,7 +172,14 @@ def test_engine_stats_occupancy_accounting():
     ys = eng.decode_closed_loop(5)
     st = eng.stats()
     assert st["decode_tokens"] == 5 * len(ys)
+    # autotune times decode dispatches too: one closed loop = one decode
+    # wave, one decode cost observation, a per-step latency estimate
+    assert st["decode_waves_total"] == 1
+    assert st["decode_rows_total"] == len(ys)
+    assert st["decode_us_per_step"] and st["decode_us_per_step"] > 0
     # counters are engine-lifetime: reset() keeps them and the cost model
     eng.reset()
     assert eng.stats()["waves_total"] == 2
-    assert eng.cost_model.n_observations == 2
+    assert eng.cost_model.n_observations == 3      # 2 prefill + 1 decode
+    # stats exports the model's full record set (prefill + decode kinds)
+    assert eng.stats()["wave_costs"] == eng.cost_model.records()
