@@ -10,6 +10,10 @@ probes give the exact per-layer body cost, extrapolated to full depth:
     flops(L) = rest + L * body,   body = (P4 - P2) / (L4 - L2)
 
 collective bytes come from parsing the optimized HLO (trip-count-adjusted).
+
+The fused-decode section is self-contained (no dryrun artifact): it lowers
+one fused K-token decode dispatch and reports achieved vs theoretical
+bytes/token — see :func:`fused_decode_cost`.
 """
 from __future__ import annotations
 
@@ -106,6 +110,65 @@ def roofline_row(rec, probes):
     }
 
 
+def fused_decode_cost(n=512, b=8, k=16, d=1, seed=0):
+    """Achieved vs theoretical HBM bytes/token for the fused decode kernel.
+
+    Builds a DPG reservoir at the requested decode shape, lowers ONE fused
+    K-token dispatch (``core.dispatch.run_decode_fused`` — diag step +
+    readout + ensemble reduce + feedback write in one kernel) and reads the
+    compiled ``cost_analysis()`` bytes.  The theoretical floor is the
+    streaming minimum: every weight operand read once per dispatch, slot
+    state read + written once, K*B output tokens written once — the number
+    the kernel approaches as K amortizes the weight traffic.  Reported
+    ``bytes_ratio`` = theory / achieved (1.0 = at the roofline floor;
+    the trajectory gate watches it so kernel regressions that re-materialize
+    state or re-read weights show up as the ratio dropping).
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dispatch as core_dispatch
+    from repro.core import esn as esn_fn
+    from repro.core.esn import ESNConfig
+
+    cfg = ESNConfig(n=n, d_in=d, d_out=d, spectral_radius=0.95, leak=0.9,
+                    input_scaling=0.5, ridge_alpha=1e-8, seed=seed)
+    params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
+    rng = np.random.default_rng(seed)
+    sig = np.sin(0.2 * np.arange(1501)) + rng.normal(0, 0.05, 1501)
+    w_out = esn_fn.fit(params, sig[:-1, None], sig[1:, None],
+                       washout=100).w_out
+    use_fb = params.cfg.use_feedback
+    w_drive = params.win_q + params.wfb_q if use_fb else params.win_q
+    dt = params.lam_q.dtype
+    states = jnp.zeros((b, params.lam_q.shape[-1]), dt)
+    y_prev = jnp.zeros((b, d), dt)
+    mask = jnp.ones((b,), bool)
+    fn = jax.jit(functools.partial(
+        core_dispatch.run_decode_fused, use_bias=params.cfg.use_bias,
+        use_feedback=use_fb, ensemble="off"), static_argnums=(1, 7))
+    comp = fn.lower(params.lam_q, params.n_real, w_drive, w_out,
+                    states, y_prev, mask, k).compile()
+    ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):          # older jax: list of dicts
+        ca = ca[0] if ca else {}
+    achieved = float((ca or {}).get("bytes accessed", float("nan")))
+    weight_b = (params.lam_q.size + w_drive.size + w_out.size) * dt.itemsize
+    state_b = (states.size + y_prev.size) * dt.itemsize + mask.size
+    theory = weight_b + 2 * state_b + k * b * d * dt.itemsize
+    tokens = k * b
+    ratio = theory / achieved if achieved == achieved and achieved > 0 \
+        else float("nan")
+    return {"bytes_per_token_theory": theory / tokens,
+            "bytes_per_token_achieved": achieved / tokens,
+            "bytes_ratio": ratio,
+            "fused_flops_per_token":
+                float((ca or {}).get("flops", float("nan"))) / tokens}
+
+
 def main(quick=False):
     recs, probes = load_records()
     rows = []
@@ -120,10 +183,20 @@ def main(quick=False):
             row[row["dominant"] + "_s"] * 1e6,
             f"dominant={row['dominant']};frac={row['roofline_fraction']:.3f};"
             f"useful={row['useful_ratio']:.2f}"))
+    # Fused-decode roofline needs no dryrun artifact: it lowers the serving
+    # kernel itself, so the achieved-vs-theoretical ratio is always reported.
+    n, b, k = (256, 4, 8) if quick else (512, 8, 16)
+    fused = {"arch": "reservoir", "shape": f"decode_fused.n{n}.b{b}.k{k}",
+             **fused_decode_cost(n=n, b=b, k=k)}
+    table.append(fused)
+    rows.append(_util.csv_row(
+        f"roofline.decode_fused", fused["bytes_per_token_achieved"],
+        f"theory_B_tok={fused['bytes_per_token_theory']:.0f};"
+        f"ratio={fused['bytes_ratio']:.3f}"))
     _util.save_artifact("roofline.json", table)
-    if not rows:
+    if len(rows) == 1:
         rows.append(_util.csv_row("roofline.pending", 0.0,
-                                  "run repro.launch.dryrun first"))
+                                  "run repro.launch.dryrun for the arch rows"))
     return rows
 
 

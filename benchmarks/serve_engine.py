@@ -25,6 +25,10 @@ Measures the serving phases the three-layer stack separates:
 * **prefill / decode vs lock-step** — engine scan / closed loop vs a
   per-token python loop over the jit'd batched step (what
   ``launch/serve.py`` did before the engine existed).
+* **decode.fused** — ONE fused K-token kernel dispatch (diag step + readout
+  matmul + ensemble reduce + feedback write entirely on-device) for a full
+  decode arena, with achieved vs theoretical bytes/token from the compiled
+  cost analysis — both gated by the perf trajectory.
 * **decode.sharded** — the same closed-loop decode with the arena placed on
   a 1x1 local mesh via ``sharding.rules.plan_arena`` (placement machinery
   on; with one CPU device this prices the overhead, on a pod it prices the
@@ -48,7 +52,7 @@ from repro.serve import ReservoirEngine, bucket_length
 
 from repro.data.signals import mso_series
 
-from . import _util
+from . import _util, roofline
 
 
 def _build(n):
@@ -92,9 +96,9 @@ def main(quick: bool = False):
     def sequential_prefill():
         seq_eng.reset()
         for s in range(slots):
-            seq_eng.add_session(s)
-            seq_eng.prefill(s, prompts[s], want_outputs=False)
-        return seq_eng.states
+            seq_eng.submit(s, prompts[s])
+            seq_eng.flush()              # one-row wave per session: the
+        return seq_eng.states            # eager pre-scheduler serving path
 
     seq_us = _util.timeit(sequential_prefill, reps=3, warmup=1)
     pre_tok = slots * prompt_t
@@ -243,7 +247,7 @@ def main(quick: bool = False):
     # pipelining for latency; a tighter SLO buys lower p50/p95 at a
     # steeper tok/s price).
     slo_us = (4.0 * mcost.predict_us(mslots - dec_n, chunk_bucket)
-              + mcost.predict_decode_us(dec_n))
+              + mcost.predict_decode_us(dec_n, 1))   # drain decodes K=1 waves
 
     def warm_wave_sizes(eng):
         # The budget trimmer may pop any wave size 1..free; each distinct
@@ -303,23 +307,20 @@ def main(quick: bool = False):
 
     # ---------------- prefill: engine scan vs per-token lock-step loop
     eng = ReservoirEngine(params, max_slots=slots, readout=readout)
-    for s in range(slots):
-        eng.add_session(s)
 
     def engine_prefill():
-        import dataclasses
+        eng.reset()
         for s in range(slots):
-            eng.arena = dataclasses.replace(
-                eng.arena,
-                states=eng.arena.states.at[eng.sessions[s].slot].set(0.0))
-            eng.prefill(s, prompts[s])
-        return eng.states
+            eng.submit(s, prompts[s])
+            eng.flush(want_outputs=True)   # one-row wave with outputs: what
+        return eng.states                  # the eager prefill used to return
 
     eng_pre_us = _util.timeit(engine_prefill, reps=3, warmup=1)
 
     lock = ReservoirEngine(params, max_slots=slots, readout=readout)
     for s in range(slots):
-        lock.add_session(s)
+        lock.submit(s, prompts[s][:1])     # admit via a 1-token wave
+    lock.flush()
 
     def lockstep_prefill():
         out = None
@@ -368,12 +369,47 @@ def main(quick: bool = False):
         f"tok_s={dec_tok / (lock_dec_us * 1e-6):.0f};"
         f"engine_speedup=x{lock_dec_us / eng_dec_us:.2f}"))
 
+    # ---------------- decode: the fused K-token kernel at serving batch
+    # ONE fused dispatch running K = gen_t tokens for a full decode arena
+    # (2x the prefill wave width — decode slots are state-resident, so the
+    # arena holds more concurrent decoders than one prefill wave admits).
+    # The kernel folds diag step + readout matmul + ensemble reduce +
+    # feedback write into that single dispatch; on CPU the per-dispatch
+    # host overhead (~hundreds of us) is what K amortizes, on TPU it's the
+    # weight HBM traffic.  The roofline terms come from the SAME shapes via
+    # compiled cost analysis, so the trajectory gate watches both the
+    # throughput and the achieved-vs-theoretical bytes/token ratio.
+    dec_k = gen_t
+    dec_b = 2 * slots
+    fus_eng = ReservoirEngine(params, max_slots=dec_b, readout=readout,
+                              decode_wave_tokens=dec_k)
+    for s in range(dec_b):
+        fus_eng.submit(s, prompts[s])
+    fus_eng.flush()
+
+    def fused_decode():
+        out = fus_eng.decode_closed_loop(dec_k)
+        fus_eng.collect_decoded()          # drain the token buffers
+        return out[0]
+
+    fus_dec_us = _util.timeit(fused_decode, reps=3, warmup=1)
+    fus_tok = dec_b * dec_k
+    res["decode_fused"] = {"us": fus_dec_us, "tokens": fus_tok,
+                           "k": dec_k, "b": dec_b,
+                           "b4_engine_us": eng_dec_us}
+    res["decode_fused"].update(
+        roofline.fused_decode_cost(n=n, b=dec_b, k=dec_k))
+    rows.append(_util.csv_row(
+        "serve.decode.fused", fus_dec_us,
+        f"tok_s={fus_tok / (fus_dec_us * 1e-6):.0f};k={dec_k};b={dec_b};"
+        f"bytes_ratio={res['decode_fused']['bytes_ratio']:.3f}"))
+
     # ---------------- decode with the arena placed on a local mesh
     sh_eng = ReservoirEngine(params, max_slots=slots, readout=readout,
                              mesh=make_local_mesh(1, 1))
     for s in range(slots):
-        sh_eng.add_session(s)
-        sh_eng.prefill(s, prompts[s], want_outputs=False)
+        sh_eng.submit(s, prompts[s])
+    sh_eng.flush()
 
     def sharded_decode():
         return sh_eng.decode_closed_loop(gen_t)[0]

@@ -35,6 +35,9 @@ import sys
 #: gates a *latency* in the same higher-is-better table by exporting its
 #: reciprocal (1 / seconds) — a decode p95 regression shows up as the rate
 #: dropping, so the one gate covers throughput and latency metrics alike.
+#: The sentinel ``"_value"`` gates the stored value itself (already
+#: higher-is-better, e.g. the fused-decode roofline bytes ratio); NaN or
+#: non-positive values drop out of the gate rather than poisoning it.
 _SERVE_METRICS = {
     "serve.prefill.bucketed": ("prefill_wave", "bucketed_us", "tokens"),
     "serve.prefill.sequential": ("prefill_wave", "sequential_us", "tokens"),
@@ -45,6 +48,9 @@ _SERVE_METRICS = {
                                "_unit"),
     "serve.prefill.engine": ("prefill", "engine_us", "tokens"),
     "serve.decode.engine": ("decode", "engine_us", "tokens"),
+    "serve.decode.fused": ("decode_fused", "us", "tokens"),
+    "serve.decode.fused_bytes_ratio": ("decode_fused", "bytes_ratio",
+                                       "_value"),
     "serve.decode.sharded": ("decode_sharded", "us", None),
 }
 
@@ -65,6 +71,8 @@ def tok_s(res, section, us_key, tok_key):
         us = float(sec[us_key])
     except (TypeError, ValueError):
         return None
+    if tok_key == "_value":                   # direct higher-is-better value
+        return us if us == us and us > 0 else None
     if tok_key is None:                       # decode_sharded reuses decode's
         tokens = (res.get("decode") or {}).get("tokens")
     elif tok_key == "_unit":                  # latency metric: gate 1/seconds
@@ -88,6 +96,8 @@ def compare(prev_dir: str, cur_dir: str, threshold: float):
     record = {"metrics": {}, "gate": {"threshold_pct": threshold,
                                       "regressions": []}}
     regressions = []
+    # ratio-style metrics live below 1.0 — a ",.0f" render would show "0"
+    fmt = lambda v: f"{v:,.0f}" if v >= 100 else f"{v:.3f}"  # noqa: E731
     for name, (section, us_key, tok_key) in _SERVE_METRICS.items():
         c = tok_s(cur, section, us_key, tok_key)
         p = tok_s(prev, section, us_key, tok_key)
@@ -100,10 +110,10 @@ def compare(prev_dir: str, cur_dir: str, threshold: float):
             if delta < -threshold:
                 regressions.append((name, p, c, delta))
                 flag = " ⚠"
-            lines.append(f"| {name} | {p:,.0f} | {c:,.0f} |"
+            lines.append(f"| {name} | {fmt(p)} | {fmt(c)} |"
                          f" {delta:+.1f}%{flag} |")
         else:
-            lines.append(f"| {name} | – | {c:,.0f} | n/a |")
+            lines.append(f"| {name} | – | {fmt(c)} | n/a |")
     record["gate"]["regressions"] = [
         {"metric": n, "prev_tok_s": p, "cur_tok_s": c, "delta_pct": d}
         for n, p, c, d in regressions]

@@ -1,11 +1,12 @@
 """Streaming reservoir sessions through the ReservoirEngine.
 
 Demonstrates the serving lifecycle the paper's O(N) step makes cheap:
-sessions are admitted into fixed slots (overflow queues FIFO), prefill their
-prompt with the time-parallel scan (backend picked by ``serve.dispatch``),
-free-run a closed-loop continuation in lock-step, and can be *parked* —
-evicted with their exact state returned — then re-admitted later to continue
-bit-for-bit.
+sessions are *submitted* (requests queue in the wave scheduler), a *flush*
+admits what fits into fixed slots and prefills each same-bucket wave as ONE
+batched time-parallel scan (backend picked by ``core.dispatch``), admitted
+sessions free-run a closed-loop continuation in lock-step, and can be
+*parked* — evicted with their exact state returned — then re-submitted later
+with ``h0=``/``y0=`` to continue where they stopped.
 
     PYTHONPATH=src python examples/serve_sessions.py
 """
@@ -38,30 +39,36 @@ def main():
           f"(prefill backend for T=400: "
           f"{resolve_method(400)!r})")
 
-    # Three sessions arrive; only two slots — the third queues.
+    # Three sessions arrive: submit() queues all three, one flush() admits
+    # what fits and runs the batched prefill waves — carol waits for a slot.
+    engine.submit("alice", sig[:400, None])
+    engine.submit("bob", sig[100:500, None])
+    engine.submit("carol", sig[200:600, None])
+    engine.flush()
     for sid in ("alice", "bob", "carol"):
-        slot = engine.add_session(sid)
-        print(f"  {sid}: {'slot ' + str(slot) if slot is not None else 'queued'}")
+        print(f"  {sid}: "
+              f"{'active' if sid in engine.active_sessions else 'queued'}")
 
-    # Prefill + closed-loop continuation for the resident pair.
-    engine.prefill("alice", sig[:400, None])
-    engine.prefill("bob", sig[100:500, None])
+    # Closed-loop continuation for the resident pair.
     ys = engine.decode_closed_loop(50, sids=["alice", "bob"])
     err_a = np.sqrt(np.mean((ys["alice"][:, 0] - sig[400:450]) ** 2))
     print(f"alice: decoded 50 tokens closed-loop, rmse vs signal {err_a:.4f}")
 
-    # Park alice (exact state comes back) -> carol is auto-admitted.
+    # Park alice (exact state comes back); the next flush admits carol.
     state, y_prev = engine.evict("alice")
+    engine.flush()
     print(f"alice parked (state {state.shape}); active: "
           f"{engine.active_sessions}")
-    engine.prefill("carol", sig[200:600, None])
     engine.decode_closed_loop(25, sids=["carol"])
 
-    # Re-admit alice where she left off; continuation matches bit-for-bit.
+    # Re-admit alice from the parked state: submit(h0=, y0=) restores her
+    # slot exactly, and the one-token prompt (the true signal value her last
+    # decode landed on) teacher-forces a single step before free-running.
     engine.evict("bob")
-    engine.add_session("alice", h0=state, y0=y_prev)
+    engine.submit("alice", sig[449:450, None], h0=state, y0=y_prev)
+    engine.flush()
     more = engine.decode_closed_loop(25, sids=["alice"])["alice"]
-    err_b = np.sqrt(np.mean((more[:, 0] - sig[450:475]) ** 2))
+    err_b = np.sqrt(np.mean((more[:, 0] - sig[451:476]) ** 2))
     print(f"alice resumed after parking, rmse vs signal {err_b:.4f}")
     assert np.isfinite(more).all()
 

@@ -16,11 +16,17 @@ strings scattered across callers:
   depth without the chunk bookkeeping, best when T is too short to amortize
   chunk fix-ups but too long for a serial scan.
 
+Closed-loop decode has its own funnel: ``run_decode_fused`` executes K
+feedback steps per dispatch (diag step + readout + ensemble reduce + feedback
+write) through the fused Pallas kernel on TPU and the jnp reference
+(``kernels.ref.decode_fused_ref``) everywhere else —
+``resolve_decode_method`` picks between them.
+
 All entry points take Q-basis (Appendix-A realified) operands; ``run_scan_q``
 is the single execution funnel used by the ``core.esn`` pure functions and
 ``serve.engine.ReservoirEngine``.  This module lives in ``core`` (it depends
-only on ``core.scan`` + ``kernels``); ``serve.dispatch`` re-exports it for
-compatibility.
+only on ``core.scan`` + ``kernels``) and is imported directly — the old
+``serve.dispatch`` re-export shim is gone.
 """
 from __future__ import annotations
 
@@ -31,12 +37,15 @@ import jax.numpy as jnp
 
 from . import scan as scan_mod
 from ..kernels import ops as kernel_ops
+from ..kernels import ref as kernel_refs
 
 __all__ = [
     "SEQUENTIAL_MAX_T",
     "PALLAS_MIN_T",
     "resolve_method",
     "run_scan_q",
+    "resolve_decode_method",
+    "run_decode_fused",
 ]
 
 # Thresholds in steps along the time axis.  Calibrated coarsely: the
@@ -114,3 +123,93 @@ def run_scan_q(lam_q, x_q, n_real: int, h0=None, *, method: str = "auto",
         return _pallas_scan_q(lam_q, x_q, n_real, h0, time_axis=time_axis)
     return scan_mod.diag_scan_q(lam_q, x_q, n_real, h0, method=method,
                                 chunk=chunk, time_axis=time_axis)
+
+
+# --------------------------------------------------------------------------- #
+# Fused multi-token closed-loop decode                                         #
+# --------------------------------------------------------------------------- #
+def resolve_decode_method(backend: Optional[str] = None) -> str:
+    """Backend for the fused K-token decode: the Pallas kernel on TPU, the
+    jnp reference everywhere else.  Unlike prefill there is no T threshold —
+    decode work is always step-serial, the only question is who runs it."""
+    if backend is None:
+        backend = jax.default_backend()
+    return "pallas" if backend == "tpu" else "ref"
+
+
+def _q_lanes(v, nr: int, axis: int = -1):
+    """Packed Q layout -> (re, im) lane arrays along ``axis``: real slots
+    first (zero imag), then the (re, im) interleaved pairs de-interleaved.
+    Width nc = nr + (N - nr) // 2."""
+    sl = [slice(None)] * v.ndim
+    sl[axis] = slice(None, nr)
+    reals = v[tuple(sl)]
+    sl[axis] = slice(nr, None, 2)
+    pre = v[tuple(sl)]
+    sl[axis] = slice(nr + 1, None, 2)
+    pim = v[tuple(sl)]
+    re = jnp.concatenate([reals, pre], axis=axis)
+    im = jnp.concatenate([jnp.zeros_like(reals), pim], axis=axis)
+    return re, im
+
+
+def _q_repack(re, im, nr: int):
+    """Inverse of ``_q_lanes`` on the last axis: real lanes back in front,
+    pair lanes re-interleaved to the packed layout."""
+    pre, pim = re[..., nr:], im[..., nr:]
+    pairs = jnp.stack([pre, pim], axis=-1).reshape(
+        pre.shape[:-1] + (2 * pre.shape[-1],))
+    return jnp.concatenate([re[..., :nr], pairs], axis=-1)
+
+
+def run_decode_fused(lam_q, n_real: int, w_drive, w_out, states, y_prev,
+                     mask, k: int, *, use_bias: bool, use_feedback: bool,
+                     ensemble: str = "off", method: str = "auto",
+                     backend: Optional[str] = None):
+    """Execute K fused closed-loop decode steps over the slot block.
+
+    ``lam_q``: (N,) packed — or (B, N) for a slot-batched param stack (the
+    batched case is implied by ``lam_q.ndim == 2``); ``w_drive``: the
+    pre-summed drive map ``win_q (+ wfb_q)`` (D, N) / (B, D, N) — closed loop
+    feeds y back as u, so the two matmuls fuse into one; ``w_out``:
+    (F, D) / (B, F, D) readout with rows ``[bias? | y_prev? | states]``
+    (``core.esn.assemble_features`` order); ``states``/``y_prev``/``mask``:
+    the (B, N)/(B, D)/(B,) arena arrays.  Returns ``(states', y_prev', ys)``
+    in the packed layout, ``ys`` (k, B, D) — numerics identical to K
+    ``arena.decode_step`` feedback steps (pinned by test).
+    """
+    if method == "auto":
+        method = resolve_decode_method(backend)
+    nr = n_real
+    d = y_prev.shape[-1]
+    a_re, a_im = _q_lanes(lam_q, nr)
+    h_re, h_im = _q_lanes(states, nr)
+    wd_re, wd_im = _q_lanes(w_drive, nr)
+
+    idx = 0
+    if use_bias:
+        b_out = w_out[..., 0, :]
+        idx = 1
+    else:
+        b_out = jnp.zeros(w_out.shape[:-2] + (d,), w_out.dtype)
+    if use_feedback:
+        wy = w_out[..., idx:idx + d, :]
+        idx += d
+    else:
+        wy = jnp.zeros(w_out.shape[:-2] + (d, d), w_out.dtype)
+    wh_re, wh_im = _q_lanes(w_out[..., idx:, :], nr, axis=-2)
+
+    y0 = y_prev
+    if ensemble == "mean":
+        # Seed parity with arena.closed_loop: the first fed-back input of
+        # every masked slot is the ensemble mean of the masked seeds.
+        m = jnp.asarray(mask, y0.dtype)[:, None]
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        y_mean = jnp.sum(y0 * m, axis=0, keepdims=True) / denom
+        y0 = jnp.where(m > 0.5, jnp.broadcast_to(y_mean, y0.shape), y0)
+
+    fn = (kernel_ops.decode_fused if method == "pallas"
+          else kernel_refs.decode_fused_ref)
+    h_re, h_im, y, ys = fn(a_re, a_im, h_re, h_im, y0, wd_re, wd_im, wy,
+                           b_out, wh_re, wh_im, mask, k=k, ensemble=ensemble)
+    return _q_repack(h_re, h_im, nr), y, ys

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["diag_scan_pallas_raw"]
+__all__ = ["diag_scan_pallas_raw", "decode_fused_pallas_raw"]
 
 
 def _kernel(h0_re_ref, h0_im_ref, a_re_ref, a_im_ref, x_re_ref, x_im_ref,
@@ -102,3 +102,82 @@ def diag_scan_pallas_raw(a_re, a_im, x_re, x_im, h0_re, h0_im, *,
         **kw,
     )(h0_re, h0_im, a_re, a_im, x_re, x_im)
     return o_re, o_im
+
+
+# --------------------------------------------------------------------------- #
+# Fused multi-token closed-loop decode                                         #
+# --------------------------------------------------------------------------- #
+def _decode_kernel(a_re_ref, a_im_ref, h0_re_ref, h0_im_ref, y0_ref,
+                   wd_re_ref, wd_im_ref, wy_ref, b_out_ref, wh_re_ref,
+                   wh_im_ref, m_ref, o_h_re_ref, o_h_im_ref, o_y_ref,
+                   o_ys_ref, *, k: int, ensemble: str):
+    a_re = a_re_ref[...]                 # (B, NC)
+    a_im = a_im_ref[...]
+    wd_re = wd_re_ref[...]               # (B, D, NC)
+    wd_im = wd_im_ref[...]
+    wy = wy_ref[...]                     # (B, D, D)
+    b_out = b_out_ref[...]               # (B, D)
+    wh_re = wh_re_ref[...]               # (B, NC, D)
+    wh_im = wh_im_ref[...]
+    m = m_ref[...][:, :1]                # (B, 1) float occupancy mask
+    live = m > 0.5
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+
+    def body(t, carry):
+        hr, hi, y = carry
+        # Drive from the fed-back output (u == y in closed loop; the caller
+        # pre-summed W_in + W_fb into wd).  Broadcast-reduce instead of
+        # dot_general: B and D are decode-sized, the VPU handles it.
+        dr = jnp.sum(y[:, :, None] * wd_re, axis=1)
+        di = jnp.sum(y[:, :, None] * wd_im, axis=1)
+        nhr = a_re * hr - a_im * hi + dr
+        nhi = a_re * hi + a_im * hr + di
+        hr = jnp.where(live, nhr, hr)
+        hi = jnp.where(live, nhi, hi)
+        # Readout on the NEW state, feedback column from the carried y —
+        # identical ordering to arena.closed_loop's assemble_features.
+        y_new = (b_out + jnp.sum(y[:, :, None] * wy, axis=1)
+                 + jnp.sum(hr[:, :, None] * wh_re, axis=1)
+                 + jnp.sum(hi[:, :, None] * wh_im, axis=1))
+        if ensemble == "mean":
+            y_new = jnp.broadcast_to(
+                jnp.sum(y_new * m, axis=0, keepdims=True) / denom,
+                y_new.shape)
+        y_new = jnp.where(live, y_new, y)
+        o_ys_ref[t, :, :] = y_new
+        return hr, hi, y_new
+
+    hr, hi, y = jax.lax.fori_loop(
+        0, k, body, (h0_re_ref[...], h0_im_ref[...], y0_ref[...]))
+    o_h_re_ref[...] = hr
+    o_h_im_ref[...] = hi
+    o_y_ref[...] = y
+
+
+def decode_fused_pallas_raw(a_re, a_im, h0_re, h0_im, y0, wd_re, wd_im, wy,
+                            b_out, wh_re, wh_im, m, *, k: int,
+                            ensemble: str = "off",
+                            interpret: bool | None = None):
+    """K closed-loop decode steps in ONE dispatch: diag step + readout matmul
+    + ensemble reduce + feedback write, carry resident on-device.
+
+    Realified-lane operands (ops.py pads/broadcasts): ``a_*``/``h0_*``
+    (B, NC), ``y0``/``b_out`` (B, D), ``wd_*`` (B, D, NC), ``wy`` (B, D, D),
+    ``wh_*`` (B, NC, D), ``m`` (B, LANES) replicated float mask.  No grid —
+    decode blocks are VMEM-sized by construction (B <= slots, NC = state
+    lanes), so the whole K-step loop runs out of one resident block.
+    Returns ``(h_re, h_im, y, ys)`` with ``ys`` (K, B, D).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, d = y0.shape
+    out_shape = [
+        jax.ShapeDtypeStruct(h0_re.shape, h0_re.dtype),
+        jax.ShapeDtypeStruct(h0_im.shape, h0_im.dtype),
+        jax.ShapeDtypeStruct((b, d), y0.dtype),
+        jax.ShapeDtypeStruct((k, b, d), y0.dtype),
+    ]
+    kernel = functools.partial(_decode_kernel, k=k, ensemble=ensemble)
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=interpret)(
+        a_re, a_im, h0_re, h0_im, y0, wd_re, wd_im, wy, b_out, wh_re,
+        wh_im, m)

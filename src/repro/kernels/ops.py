@@ -15,10 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as ref_mod
-from .diag_scan import diag_scan_pallas_raw
+from .diag_scan import decode_fused_pallas_raw, diag_scan_pallas_raw
 from .flash_attention import flash_attention_pallas
 
-__all__ = ["diag_scan", "flash_attention"]
+__all__ = ["diag_scan", "decode_fused", "flash_attention"]
 
 
 def _round_up(x, m):
@@ -115,6 +115,49 @@ def _bwd(block_b, block_t, block_n, interpret, res, g):
 
 
 _diag_scan_vjp.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Fused multi-token decode wrapper                                             #
+# --------------------------------------------------------------------------- #
+def decode_fused(a_re, a_im, h_re, h_im, y0, wd_re, wd_im, wy, b_out, wh_re,
+                 wh_im, mask, *, k: int, ensemble: str = "off",
+                 interpret: bool | None = None):
+    """K-token fused closed-loop decode through the Pallas kernel.
+
+    Accepts the same shared-or-batched realified-lane operands as
+    ``ref.decode_fused_ref``; broadcasts shared weights to a slot batch and
+    pads (B -> sublane, NC/D -> lane multiples) before the kernel call.  All
+    padding is inert: padded slots carry a zero mask (frozen zero rows,
+    excluded from the ensemble mean) and padded lanes carry zero weights.
+    """
+    b, nc = h_re.shape
+    d = y0.shape[-1]
+    bp, ncp, dp = _round_up(b, 8), _round_up(nc, 128), _round_up(d, 128)
+
+    def bcast(w, shape):
+        return jnp.broadcast_to(w, shape) if w.ndim < len(shape) else w
+
+    wd_re = bcast(wd_re, (b, d, nc))
+    wd_im = bcast(wd_im, (b, d, nc))
+    wy = bcast(wy, (b, d, d))
+    b_out = bcast(b_out, (b, d))
+    wh_re = bcast(wh_re, (b, nc, d))
+    wh_im = bcast(wh_im, (b, nc, d))
+    a_re, a_im = bcast(a_re, (b, nc)), bcast(a_im, (b, nc))
+
+    pb, pn, pd = (0, bp - b), (0, ncp - nc), (0, dp - d)
+    args = (jnp.pad(a_re, (pb, pn)), jnp.pad(a_im, (pb, pn)),
+            jnp.pad(h_re, (pb, pn)), jnp.pad(h_im, (pb, pn)),
+            jnp.pad(y0, (pb, pd)),
+            jnp.pad(wd_re, (pb, pd, pn)), jnp.pad(wd_im, (pb, pd, pn)),
+            jnp.pad(wy, (pb, pd, pd)), jnp.pad(b_out, (pb, pd)),
+            jnp.pad(wh_re, (pb, pn, pd)), jnp.pad(wh_im, (pb, pn, pd)))
+    m = jnp.pad(jnp.broadcast_to(
+        jnp.asarray(mask, y0.dtype)[:, None], (b, 128)), (pb, (0, 0)))
+    o_re, o_im, y, ys = decode_fused_pallas_raw(
+        *args, m, k=k, ensemble=ensemble, interpret=interpret)
+    return o_re[:b, :nc], o_im[:b, :nc], y[:b, :d], ys[:, :b, :d]
 
 
 # --------------------------------------------------------------------------- #

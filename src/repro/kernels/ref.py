@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["diag_scan_ref", "attention_ref"]
+__all__ = ["diag_scan_ref", "decode_fused_ref", "attention_ref"]
 
 
 def diag_scan_ref(a, x, h0=None):
@@ -26,6 +26,49 @@ def diag_scan_ref(a, x, h0=None):
 
     _, hs = jax.lax.scan(step, h, (at.astype(dtype), xt.astype(dtype)))
     return jnp.moveaxis(hs, 0, -2)
+
+
+def _mm(v, w):
+    """Row-batch times (possibly slot-batched) weight: (B, F) @ (F, G) for
+    shared weights, per-row einsum for a (B, F, G) stacked weight batch."""
+    if w.ndim == 2:
+        return v @ w
+    return jnp.einsum("bf,bfg->bg", v, w)
+
+
+def decode_fused_ref(a_re, a_im, h_re, h_im, y0, wd_re, wd_im, wy, b_out,
+                     wh_re, wh_im, mask, *, k: int, ensemble: str = "off"):
+    """K fused closed-loop decode steps via lax.scan — the non-Pallas backend
+    for ``decode_fused`` and the kernel's ground truth.
+
+    Same step body as ``diag_scan._decode_kernel`` on realified lanes:
+    ``a_*``/``h_*`` (B, NC); ``y0`` (B, D); weights shared 2D or slot-batched
+    3D (``wd_*`` (D, NC), ``wy`` (D, D), ``wh_*`` (NC, D), ``b_out`` (D,) —
+    or each with a leading B); ``mask`` (B,) bool/float.  Returns
+    ``(h_re, h_im, y, ys)`` with ``ys`` (k, B, D).
+    """
+    live = (jnp.asarray(mask) > 0.5 if not jnp.issubdtype(
+        jnp.asarray(mask).dtype, jnp.bool_) else jnp.asarray(mask))[:, None]
+    m = live.astype(y0.dtype)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+
+    def step(carry, _):
+        hr, hi, y = carry
+        nhr = a_re * hr - a_im * hi + _mm(y, wd_re)
+        nhi = a_re * hi + a_im * hr + _mm(y, wd_im)
+        hr = jnp.where(live, nhr, hr)
+        hi = jnp.where(live, nhi, hi)
+        y_new = b_out + _mm(y, wy) + _mm(hr, wh_re) + _mm(hi, wh_im)
+        if ensemble == "mean":
+            y_new = jnp.broadcast_to(
+                jnp.sum(y_new * m, axis=0, keepdims=True) / denom,
+                y_new.shape)
+        y_new = jnp.where(live, y_new, y)
+        return (hr, hi, y_new), y_new
+
+    (h_re, h_im, y), ys = jax.lax.scan(step, (h_re, h_im, y0), None,
+                                       length=k)
+    return h_re, h_im, y, ys
 
 
 def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):

@@ -24,6 +24,8 @@ decoders' last token would exceed the budget (combine with ``--chunk-max``
 so decode waves can preempt *within* a long flush, not just between
 flushes), and the demo loop mixes open-loop traffic in (teacher-forced
 ``decode_step`` + ``observe``) alongside the closed-loop generation.
+``--decode-wave-tokens K`` sizes those waves: each is ONE fused K-token
+kernel dispatch (diag step + readout + feedback write entirely on-device).
 ``--cost-save PATH`` persists the engine's refined cost model on shutdown
 (``WaveCostModel.to_artifact``); point ``--cost-seed`` at the same path to
 reload it on the next start — the learned model now survives the process.
@@ -101,10 +103,12 @@ def serve_reservoir(args) -> None:
               "wave timings")
     engine_kw = dict(mesh=mesh, bucket_min=args.bucket,
                      chunk_max=args.chunk_max, autotune=args.autotune,
-                     cost_model=cost_model, decode_slo_us=args.decode_slo)
+                     cost_model=cost_model, decode_slo_us=args.decode_slo,
+                     decode_wave_tokens=args.decode_wave_tokens)
     if args.decode_slo is not None:
         print(f"decode-aware planning: SLO {args.decode_slo:.0f} us of "
-              f"predicted prefill cost between decode waves")
+              f"predicted prefill cost between decode waves "
+              f"({args.decode_wave_tokens} tok per fused decode wave)")
 
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
@@ -366,6 +370,12 @@ def main():
                     help="split prompts longer than this into sequential "
                          "chunk waves (same slot, bit-exact) so one huge "
                          "prompt cannot monopolize the arena")
+    ap.add_argument("--decode-wave-tokens", type=int, default=1, metavar="K",
+                    help="tokens per interleaved decode wave — each wave is "
+                         "ONE fused K-token kernel dispatch (diag step + "
+                         "readout + feedback write on-device), so K amortizes "
+                         "dispatch overhead and weight traffic at the price "
+                         "of K-token reaction latency to new prefill work")
     ap.add_argument("--decode-slo", type=float, default=None, metavar="US",
                     help="decode-aware planning: bound the predicted prefill "
                          "cost (microseconds) that may accumulate between a "

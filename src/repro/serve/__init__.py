@@ -2,29 +2,34 @@
 
 ``arena``     — device-side layer: the ``SlotArena`` pytree (``states (B, N)``,
 ``y_prev``, active mask) + pure ``prefill_wave`` / ``decode_step`` /
-``closed_loop`` functions; placeable on a multi-device mesh via
-``sharding.rules.plan_arena``.
+``closed_loop`` / ``closed_loop_fused`` functions; placeable on a
+multi-device mesh via ``sharding.rules.plan_arena``.
 ``scheduler`` — host-side admission: requests accumulate, bucket by padded
 prompt length (powers of two), and drain as same-bucket waves — each wave is
 ONE batched prefill.  Long prompts split into sequential chunk waves
 (``chunk_max``), and an optional cost model drives a two-wave lookahead.
 ``cost``      — ``WaveCostModel``: per-bucket affine wave-cost fits from
 measured timings (seeded offline by ``benchmarks/serve_engine.py``, refined
-online from engine-recorded wave timings) — what the lookahead plans against.
+online from engine-recorded wave timings) — what the lookahead plans against,
+plus the c_dec(B, K) fused-decode surface.
 ``engine``    — ``ReservoirEngine``: the thin orchestrator (session <-> slot
 mapping, submit/flush/decode/evict lifecycle, ensemble-mean readout fusion,
-wave occupancy/latency ``stats()``, legacy eager API preserved as shims).
-``dispatch``  — compatibility re-export of ``core.dispatch`` (the
-shape-heuristic scan-backend selection moved down into core).
+wave occupancy/latency ``stats()``, legacy eager API preserved as deprecation
+shims).  Decode tokens drain through ``collect_decoded()`` as one typed
+``DecodeResult`` whatever path produced them.
+
+Backend selection lives in ``core.dispatch`` (the PR-2-era ``serve.dispatch``
+re-export shim is gone); ``resolve_method`` / ``run_scan_q`` stay re-exported
+here for callers that reach them through the serve namespace.
 """
-from . import arena, cost, dispatch, engine, scheduler
+from . import arena, cost, engine, scheduler
+from ..core.dispatch import resolve_method, run_scan_q
 from .arena import SlotArena
 from .cost import WaveCostModel
-from .dispatch import resolve_method, run_scan_q
-from .engine import ReservoirEngine, SessionStats
+from .engine import DecodeResult, ReservoirEngine, SessionStats
 from .scheduler import PrefillRequest, WaveItem, WaveScheduler, bucket_length
 
-__all__ = ["arena", "cost", "dispatch", "engine", "scheduler",
+__all__ = ["arena", "cost", "engine", "scheduler",
            "SlotArena", "WaveCostModel", "resolve_method", "run_scan_q",
-           "ReservoirEngine", "SessionStats",
+           "DecodeResult", "ReservoirEngine", "SessionStats",
            "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length"]

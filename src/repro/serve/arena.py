@@ -37,6 +37,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..core import dispatch as dispatch_mod
 from ..core import esn as esn_fn
 
 __all__ = [
@@ -50,6 +51,7 @@ __all__ = [
     "apply_readout",
     "decode_step",
     "closed_loop",
+    "closed_loop_fused",
     "prefill_wave",
 ]
 
@@ -191,6 +193,30 @@ def closed_loop(params, w_out, arena: SlotArena, mask, n_steps: int, *,
         y0 = jnp.where(mask[:, None], _ensemble_reduce(y0, mask), y0)
     (states, y_prev), ys = jax.lax.scan(
         step, (arena.states, y0), None, length=n_steps)
+    return dataclasses.replace(arena, states=states, y_prev=y_prev), ys
+
+
+def closed_loop_fused(params, w_out, arena: SlotArena, mask, n_steps: int, *,
+                      batched: bool = False, ensemble: str = "off",
+                      method: str = "auto"):
+    """:func:`closed_loop` through the fused K-token decode kernel: one
+    dispatch runs all ``n_steps`` (diag step + readout + ensemble reduce +
+    feedback write) with the carry resident on-device
+    (``core.dispatch.run_decode_fused`` — Pallas on TPU, the jnp reference
+    elsewhere).  Same signature, same ``(arena', ys)`` contract; dense-mode
+    params or a missing readout fall back to the scan path (where ``batched``
+    still applies — the fused path infers it from ``lam_q.ndim``).
+    """
+    if w_out is None or params.mode != "diag":
+        return closed_loop(params, w_out, arena, mask, n_steps,
+                           batched=batched, ensemble=ensemble)
+    cfg = params.cfg
+    w_drive = (params.win_q + params.wfb_q if cfg.use_feedback
+               else params.win_q)
+    states, y_prev, ys = dispatch_mod.run_decode_fused(
+        params.lam_q, params.n_real, w_drive, w_out, arena.states,
+        arena.y_prev, mask, int(n_steps), use_bias=cfg.use_bias,
+        use_feedback=cfg.use_feedback, ensemble=ensemble, method=method)
     return dataclasses.replace(arena, states=states, y_prev=y_prev), ys
 
 

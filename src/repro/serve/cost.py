@@ -12,13 +12,17 @@ from measured wave timings, and the scheduler's two-wave lookahead
 (``serve.scheduler.WaveScheduler.next_wave``) uses it to pick the wave that
 maximizes predicted true-tokens-per-second.
 
-Decode has its own surface: a decode dispatch advances every active slot one
-token, so its cost is affine in the *active rows* only,
+Decode has its own surface: a decode wave advances every active slot by K
+fused closed-loop tokens in one dispatch, so its cost is affine in the
+per-dispatch work,
 
-    c_dec(B)  ~=  alpha_dec + beta_dec * B          (one fit, no buckets)
+    c_dec(B, K)  ~=  alpha + beta_k * K + beta_bk * B * K    (one fit)
 
 fitted from timed decode dispatches (``ReservoirEngine`` autotune times both
-open-loop ``decode_step`` and per-token closed-loop waves).  The planner uses
+open-loop ``decode_step`` (K=1) and fused K-token closed-loop waves).  The
+alpha term is exactly what the fused kernel amortizes: K tokens pay ONE
+dispatch constant, which is why a multi-token decode wave beats K single
+steps and why the planner must price K explicitly.  The planner uses
 both surfaces for decode-aware interleaving: the decode wave's own predicted
 cost is *reserved* out of the latency budget (the inter-token gap ends when
 its tokens exist), and a candidate prefill wave whose predicted cost would
@@ -84,9 +88,9 @@ class WaveCostModel:
         self._global: Optional[Tuple[float, float]] = None
         self._dirty: set = set()
         self._global_dirty = False
-        self._dec_obs: Deque[Tuple[int, float]] = collections.deque(
+        self._dec_obs: Deque[Tuple[int, int, float]] = collections.deque(
             maxlen=_OBS_CAP)
-        self._dec_fit: Optional[Tuple[float, float]] = None
+        self._dec_fit: Optional[Tuple[float, float, float]] = None
         self._dec_dirty = False
 
     # ------------------------------------------------------------ observing
@@ -101,13 +105,14 @@ class WaveCostModel:
         self._dirty.add(t)
         self._global_dirty = True
 
-    def observe_decode(self, b: int, us: float) -> None:
-        """Record one timed decode dispatch: ``b`` active rows advanced one
-        token in ``us`` wall microseconds (multi-token closed-loop waves are
-        divided per token by the caller)."""
-        if b <= 0 or us <= 0:
+    def observe_decode(self, b: int, us: float, k: int = 1) -> None:
+        """Record one timed decode dispatch: ``b`` active rows advanced ``k``
+        fused tokens in ``us`` wall microseconds.  The whole wave is ONE
+        point on the c_dec(B, K) surface — per-token averaging would erase
+        the dispatch constant the fused kernel amortizes."""
+        if b <= 0 or us <= 0 or k <= 0:
             return
-        self._dec_obs.append((int(b), float(us)))
+        self._dec_obs.append((int(b), int(k), float(us)))
         self._dec_dirty = True
 
     def seed(self, records: Iterable[dict]) -> int:
@@ -119,7 +124,8 @@ class WaveCostModel:
         for r in records:
             try:
                 if r.get("kind") == "decode":
-                    self.observe_decode(int(r["b"]), float(r["us"]))
+                    self.observe_decode(int(r["b"]), float(r["us"]),
+                                        k=int(r.get("k", 1)))
                 else:
                     self.observe(int(r["b"]), int(r["t_bucket"]),
                                  float(r["us"]))
@@ -165,13 +171,16 @@ class WaveCostModel:
 
     def records(self) -> list:
         """The retained observations as ``{"b", "t_bucket", "us"}`` prefill
-        dicts followed by ``{"kind": "decode", "b", "us"}`` decode dicts —
-        the exact shape :meth:`seed` / :meth:`from_artifact` consume (what
+        dicts followed by ``{"kind": "decode", "b", "us"}`` decode dicts
+        (multi-token waves add ``"k"``; K=1 records omit it, so the schema
+        older artifacts wrote is exactly what K=1 still reads) — the shape
+        :meth:`seed` / :meth:`from_artifact` consume (what
         ``benchmarks/serve_engine.py`` exports under ``"wave_costs"``)."""
         return ([{"b": b, "t_bucket": t, "us": us}
                  for t, d in sorted(self._obs.items()) for b, us in d]
-                + [{"kind": "decode", "b": b, "us": us}
-                   for b, us in self._dec_obs])
+                + [{"kind": "decode", "b": b, "us": us} if k == 1 else
+                   {"kind": "decode", "b": b, "k": k, "us": us}
+                   for b, k, us in self._dec_obs])
 
     def to_artifact(self, path: str) -> None:
         """Persist the retained observations under ``"wave_costs"`` in
@@ -233,37 +242,42 @@ class WaveCostModel:
             return max(a0 + a1 * b * t, 1.0)
         return max(self.base_us + self.per_token_us * b * t, 1.0)
 
-    def predict_decode_us(self, b: int) -> float:
-        """Predicted wall microseconds to advance ``b`` active slots one
-        decode token.  Affine fit over timed decode dispatches when trained
-        (>= 2 distinct B), cold-start constants before; always >= 1.
+    def predict_decode_us(self, b: int, k: int = 1) -> float:
+        """Predicted wall microseconds for one fused decode wave advancing
+        ``b`` active slots by ``k`` tokens: c_dec(B, K) ~= alpha + beta_k*K
+        + beta_bk*B*K.  Fitted over timed decode dispatches when trained
+        (>= 2 distinct (B, K) groups), cold-start constants before; always
+        >= 1.
 
-        The fit goes through the per-width **medians**, not the raw points:
-        decode dispatches are a few hundred microseconds, so any host
-        hiccup (GC, scheduler preemption, a stray pending async op) lands
-        an order-of-magnitude outlier that would drag a least-squares fit —
-        and through it the reserved decode budget — far off the truth."""
+        The fit goes through the per-(B, K)-group **medians**, not the raw
+        points: decode dispatches are a few hundred microseconds, so any
+        host hiccup (GC, scheduler preemption, a stray pending async op)
+        lands an order-of-magnitude outlier that would drag a least-squares
+        fit — and through it the reserved decode budget — far off the
+        truth.  (All-K=1 data makes the intercept and K columns collinear;
+        the min-norm solution still reproduces the K=1 surface exactly.)"""
         if self._dec_dirty:
-            groups: Dict[int, list] = {}
-            for bb, u in self._dec_obs:
-                groups.setdefault(bb, []).append(u)
+            groups: Dict[Tuple[int, int], list] = {}
+            for bb, kk, u in self._dec_obs:
+                groups.setdefault((bb, kk), []).append(u)
             if len(groups) >= 2:
-                bs = np.asarray(sorted(groups), float)
-                us = np.asarray([float(np.median(groups[int(x)]))
-                                 for x in bs])
-                a = np.stack([np.ones_like(bs), bs], axis=1)
-                (alpha, beta), *_ = np.linalg.lstsq(a, us, rcond=None)
+                keys = sorted(groups)
+                bs = np.asarray([bb for bb, _ in keys], float)
+                ks = np.asarray([kk for _, kk in keys], float)
+                us = np.asarray([float(np.median(groups[key]))
+                                 for key in keys])
+                a = np.stack([np.ones_like(bs), ks, bs * ks], axis=1)
+                coef, *_ = np.linalg.lstsq(a, us, rcond=None)
                 # Same physical clamp as the prefill fits: never negative at
-                # B=0, never cheaper with more rows.
-                self._dec_fit = (max(float(alpha), 0.0),
-                                 max(float(beta), 0.0))
+                # B=0, never cheaper with more rows or more tokens.
+                self._dec_fit = tuple(max(float(c), 0.0) for c in coef)
             else:
                 self._dec_fit = None
             self._dec_dirty = False
         if self._dec_fit is not None:
-            alpha, beta = self._dec_fit
-            return max(alpha + beta * b, 1.0)
-        return max(self.decode_base_us + self.decode_per_row_us * b, 1.0)
+            alpha, beta_k, beta_bk = self._dec_fit
+            return max(alpha + beta_k * k + beta_bk * b * k, 1.0)
+        return max(self.decode_base_us + self.decode_per_row_us * b * k, 1.0)
 
     def throughput(self, b: int, t_bucket: int, true_tokens: int) -> float:
         """Predicted true-tokens-per-second of a candidate wave (``b`` rows of

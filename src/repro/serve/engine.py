@@ -43,7 +43,8 @@ import collections
 import dataclasses
 import functools
 import time
-from typing import Dict, Hashable, List, Optional
+import warnings
+from typing import Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +57,48 @@ from .cost import WaveCostModel
 from .scheduler import (PrefillRequest, WaveItem, WaveScheduler,
                         bucket_length)
 
-__all__ = ["SessionStats", "ReservoirEngine"]
+__all__ = ["SessionStats", "DecodeResult", "ReservoirEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeResult:
+    """The one decode-output type: what :meth:`ReservoirEngine.collect_decoded`
+    returns for single-step, interleaved, and fused K-token decode alike.
+
+    ``tokens``: sid -> (n_tokens, D_out) array — every decode path buffers in
+    this shape, so a caller never branches on where a token came from.
+    ``waves``: per-dispatch metadata dicts (``kind`` "step" / "closed_loop" /
+    "interleave", ``rows``, ``tokens`` per row, ``us`` wall time when timed,
+    ``fused`` whether the K-token fused kernel ran) for the dispatches whose
+    tokens this result drained.  Mapping-shaped on ``tokens`` (iter / ``[]`` /
+    ``items`` / ``get``), so dict-era callers keep working unchanged.
+    """
+    tokens: Dict[Hashable, jnp.ndarray]
+    waves: Tuple[dict, ...] = ()
+
+    def __getitem__(self, sid):
+        return self.tokens[sid]
+
+    def __iter__(self):
+        return iter(self.tokens)
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def __contains__(self, sid) -> bool:
+        return sid in self.tokens
+
+    def keys(self):
+        return self.tokens.keys()
+
+    def values(self):
+        return self.tokens.values()
+
+    def items(self):
+        return self.tokens.items()
+
+    def get(self, sid, default=None):
+        return self.tokens.get(sid, default)
 
 
 @dataclasses.dataclass(slots=True)
@@ -198,6 +240,7 @@ class ReservoirEngine:
                                        cost_model=cost_model)
         self._chunk_outs: Dict[Hashable, List] = {}
         self._decode_buf: Dict[Hashable, List] = {}
+        self._decode_meta: List[dict] = []
         self._stats = {"waves": 0, "rows": 0, "fresh_rows": 0,
                        "prefill_tokens": 0, "decode_tokens": 0,
                        "occupancy_sum": 0.0,
@@ -220,10 +263,19 @@ class ReservoirEngine:
         self._decode_jit = jax.jit(functools.partial(
             arena_mod.decode_step, batched=self._batched,
             ensemble=self.ensemble))
+        # Closed-loop decode routes through the fused K-token path
+        # (arena.closed_loop_fused -> core.dispatch.run_decode_fused): one
+        # dispatch per wave instead of per token, Pallas kernel on TPU, jnp
+        # reference elsewhere; dense params fall back to the scan inside.
+        # The arena argument is donated on TPU so the (B, N) slot state
+        # updates in place — never copies per wave (donation elsewhere is a
+        # no-op that XLA warns about, so it is gated).
+        donate = (2,) if jax.default_backend() == "tpu" else ()
         self._closed_jit = jax.jit(
-            functools.partial(arena_mod.closed_loop, batched=self._batched,
+            functools.partial(arena_mod.closed_loop_fused,
+                              batched=self._batched,
                               ensemble=self.ensemble),
-            static_argnums=4)
+            static_argnums=4, donate_argnums=donate)
         self._wave_jit = jax.jit(
             functools.partial(arena_mod.prefill_wave, batched=self._batched),
             static_argnames=("method", "chunk", "want_outputs"))
@@ -319,7 +371,18 @@ class ReservoirEngine:
         was evicted from: re-admission with ``h0`` there *requires* ``slot=``
         — otherwise the state would silently continue under a different
         reservoir's weights.
+
+        .. deprecated:: :meth:`submit` + :meth:`flush` are the serving
+           surface — ``submit(sid, u, h0=..., y0=...)`` queues prompt and
+           parked state together and ``flush()`` admits wave-batched.  This
+           shim stays one release for slot-pinned re-admission (the one flow
+           waves cannot express) and emits a ``DeprecationWarning``.
         """
+        warnings.warn(
+            "ReservoirEngine.add_session is deprecated: use "
+            "submit(sid, u, h0=, y0=) + flush() — eager admission serves "
+            "one session at a time where a flush wave batches them",
+            DeprecationWarning, stacklevel=2)
         if sid in self.sessions or self.scheduler.has(sid):
             raise KeyError(f"session {sid!r} already admitted")
         if slot is not None:
@@ -498,12 +561,16 @@ class ReservoirEngine:
         *exist*, not when it starts."""
         elapsed = max(self._decode_clock_us,
                       (time.perf_counter() - self._last_decode_t) * 1e6)
-        reserve = (self.cost_model.predict_decode_us(n_decoders)
-                   * self.decode_wave_tokens)
+        # c_dec(B, K): one fused K-token wave, not K times a single step —
+        # the fused kernel amortizes the dispatch constant over K, which is
+        # exactly why multi-token decode waves are worth planning.
+        reserve = self.cost_model.predict_decode_us(n_decoders,
+                                                    self.decode_wave_tokens)
         return self.decode_slo_us - elapsed - reserve
 
     def _dispatch_decode(self, launch, sids, *, tokens: int,
-                         block: bool, interleave: bool = False):
+                         block: bool, interleave: bool = False,
+                         kind: str = "closed_loop"):
         """Shared wrapper around every decode dispatch: optional wall timing
         (always when ``block``, else only under autotune), decode-surface
         observation (autotune only — there every prefill wave was itself
@@ -520,10 +587,13 @@ class ReservoirEngine:
             jax.block_until_ready(out)
             us = (time.perf_counter() - t0) * 1e6
             if self._autotune:
-                self.cost_model.observe_decode(len(sids), us / tokens)
+                # The whole K-token wave is ONE observation on the
+                # c_dec(B, K) surface — dividing by K would erase the very
+                # dispatch amortization the fused kernel buys.
+                self.cost_model.observe_decode(len(sids), us, k=tokens)
         if sids and tokens:
             self._note_decode(sids, us=us, tokens=tokens,
-                              interleave=interleave)
+                              interleave=interleave, kind=kind)
         return out
 
     def _decode_wave(self, sids: List) -> None:
@@ -552,7 +622,8 @@ class ReservoirEngine:
 
         ys = self._dispatch_decode(launch, sids,
                                    tokens=self.decode_wave_tokens,
-                                   block=True, interleave=True)
+                                   block=True, interleave=True,
+                                   kind="interleave")
         for sid in sids:
             self._decode_buf.setdefault(sid, []).append(
                 ys[:, self.sessions[sid].slot])
@@ -564,30 +635,50 @@ class ReservoirEngine:
         for the whole serving run otherwise."""
         self._decode_gaps_us.clear()
 
-    def collect_decoded(self, sid: Optional[Hashable] = None):
-        """Drain the tokens that interleaved decode waves buffered.
+    def collect_decoded(self, sid: Optional[Hashable] = None) -> DecodeResult:
+        """Drain the decoded tokens every decode path buffered — single
+        :meth:`decode_step` rows, :meth:`decode_closed_loop` runs, and the
+        fused K-token waves that interleaved flushes dispatch all land in
+        the same per-session buffers.
 
-        With ``sid``: that session's (n_tokens, D_out) array (length 0 when
-        nothing buffered).  Without: a dict over every session that has
-        buffered tokens.  Buffers clear on read; evicting a session drops
-        its buffer, so collect before evicting."""
+        Returns a :class:`DecodeResult`: ``tokens`` maps each drained sid to
+        its (n_tokens, D_out) array and ``waves`` carries the metadata of
+        the dispatches drained.  With ``sid`` the result is restricted to
+        that session (its array has length 0 when nothing is buffered).
+        Buffers clear on read; evicting a session drops its buffer, so
+        collect before evicting."""
         if sid is not None:
             chunks = self._decode_buf.pop(sid, [])
-            if not chunks:
-                return jnp.zeros((0, self.cfg.d_out), self._dtype)
-            return (chunks[0] if len(chunks) == 1
-                    else jnp.concatenate(chunks, axis=0))
+            arr = (jnp.zeros((0, self.cfg.d_out), self._dtype)
+                   if not chunks else
+                   chunks[0] if len(chunks) == 1
+                   else jnp.concatenate(chunks, axis=0))
+            waves = []
+            for meta in list(self._decode_meta):
+                pending = meta["_pending"]
+                if sid in pending:
+                    waves.append({k: v for k, v in meta.items()
+                                  if k != "_pending"})
+                    pending.discard(sid)
+                    if not pending:
+                        self._decode_meta.remove(meta)
+            return DecodeResult(tokens={sid: arr}, waves=tuple(waves))
         out = {s: (c[0] if len(c) == 1 else jnp.concatenate(c, axis=0))
                for s, c in self._decode_buf.items()}
         self._decode_buf.clear()
-        return out
+        waves = tuple({k: v for k, v in meta.items() if k != "_pending"}
+                      for meta in self._decode_meta)
+        self._decode_meta.clear()
+        return DecodeResult(tokens=out, waves=waves)
 
     def _note_decode(self, sids, *, us=None, tokens: int = 1,
-                     interleave: bool = False) -> None:
+                     interleave: bool = False,
+                     kind: str = "closed_loop") -> None:
         """Decode-side accounting shared by every decode path: wall-clock
-        inter-token gaps per session, decode wave counters, and the planning
-        clock reset (a decode just ran, so the prefill-cost-since-decode
-        budget restarts)."""
+        inter-token gaps per session, decode wave counters, the per-dispatch
+        metadata :meth:`collect_decoded` reports, and the planning clock
+        reset (a decode just ran, so the prefill-cost-since-decode budget
+        restarts)."""
         wall = time.perf_counter()
         for sid in sids:
             prev = self._last_decode_wall.get(sid)
@@ -602,6 +693,11 @@ class ReservoirEngine:
         if us is not None:
             s["decode_us_sum"] += us
             s["decode_timed_steps"] += tokens
+        fused = (kind != "step" and self.params.mode == "diag"
+                 and self.readout is not None)
+        self._decode_meta.append({"kind": kind, "rows": len(sids),
+                                  "tokens": int(tokens), "us": us,
+                                  "fused": fused, "_pending": set(sids)})
         self._decode_clock_us = 0.0
         self._last_decode_t = wall
 
@@ -824,6 +920,10 @@ class ReservoirEngine:
             self.scheduler.cancel(sid)
         self._chunk_outs.pop(sid, None)
         self._decode_buf.pop(sid, None)
+        for meta in list(self._decode_meta):
+            meta["_pending"].discard(sid)
+            if not meta["_pending"]:
+                self._decode_meta.remove(meta)
         self._last_decode_wall.pop(sid, None)
         state = self.arena.states[st.slot]
         y = self.arena.y_prev[st.slot]
@@ -845,6 +945,7 @@ class ReservoirEngine:
         self.sessions.clear()
         self._chunk_outs.clear()
         self._decode_buf.clear()
+        self._decode_meta.clear()
         self._last_decode_wall.clear()
         self._decode_clock_us = 0.0
         self._last_decode_t = time.perf_counter()
@@ -941,6 +1042,11 @@ class ReservoirEngine:
         ``want_outputs=False`` skips the per-step readout and returns None —
         cheaper when the caller only needs the slot warmed up (the feedback
         seed for closed-loop decode is still computed)."""
+        warnings.warn(
+            "ReservoirEngine.prefill is deprecated: use submit(sid, u) + "
+            "flush(want_outputs=...) — the eager path is a one-row wave, "
+            "the flush path batches every same-bucket prompt into one",
+            DeprecationWarning, stacklevel=2)
         st = self._active(sid)
         # xp=jnp: device-resident prompts stay on device (async dispatch —
         # validation only reads shape metadata, no host transfer).
@@ -994,11 +1100,18 @@ class ReservoirEngine:
                 jnp.asarray(mask))
             return y
 
-        y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False)
+        y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False,
+                                  kind="step")
         if self.readout is None:
             return {}
         y = np.asarray(y)
-        return {sid: y[self.sessions[sid].slot] for sid in inputs}
+        out = {sid: y[self.sessions[sid].slot] for sid in inputs}
+        for sid, row in out.items():
+            # Unified decode surface: single steps buffer as (1, D) rows so
+            # collect_decoded() drains every path the same way.
+            self._decode_buf.setdefault(sid, []).append(
+                jnp.asarray(row)[None])
+        return out
 
     def observe(self, sid: Hashable, y_true):
         """Teacher-force ``sid``: overwrite its stored output with the
@@ -1069,4 +1182,7 @@ class ReservoirEngine:
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
         # callers (pipelined serving loops) stay async; convert to host
         # memory on their own schedule (autotune forces the sync above).
-        return {sid: ys[:, stats[sid].slot] for sid in targets}
+        out = {sid: ys[:, stats[sid].slot] for sid in targets}
+        for sid, arr in out.items():
+            self._decode_buf.setdefault(sid, []).append(arr)
+        return out

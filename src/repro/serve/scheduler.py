@@ -32,7 +32,9 @@ Two orthogonal extensions ride on the same queue:
 * **Decode-aware budgets** (``next_wave(budget_us=...)``): the engine passes
   the remaining decode latency budget when ready-to-decode sessions are
   waiting (``decode_slo_us`` minus the prefill cost already charged since
-  their last decode wave).  A candidate wave whose predicted cost exceeds
+  their last decode wave, minus the fused K-token decode wave's own
+  reserved cost ``c_dec(B, K)`` — planning prices the whole multi-token
+  wave, not K single steps).  A candidate wave whose predicted cost exceeds
   the budget is *shrunk* from the tail (youngest rows first — the anchor is
   never trimmed away) until it fits; when even the anchor alone cannot fit,
   the wave is deferred entirely (``[]`` returns, nothing pops) and the

@@ -223,6 +223,7 @@ def _build_engine(params, readout, u, slo):
     e.submit("d1", u[:30])
     e.flush()
     e.decode_closed_loop(1)                    # gap/wall baseline
+    e.collect_decoded()                        # drain the baseline token
     for i in range(4):
         e.submit(("f", i), u[:400])            # 4 chunk waves each
     return e
@@ -243,8 +244,10 @@ def test_interleave_is_bit_exact_and_actually_interleaves():
         np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]))
     st = aware.stats()
     assert st["decode_interleave_waves"] > 0   # the SLO really preempted
-    buf = aware.collect_decoded()
-    assert set(buf) == {"d0", "d1"}
+    res = aware.collect_decoded()
+    assert set(res) == {"d0", "d1"}
+    assert all(w["kind"] == "interleave" and w["fused"] for w in res.waves)
+    buf = {s: np.asarray(res[s]) for s in res}   # DecodeResult is immutable
     n_tok = int(buf["d0"].shape[0])
     assert n_tok == st["decode_interleave_waves"] * aware.decode_wave_tokens
     for _ in range(n_tok):
@@ -254,7 +257,7 @@ def test_interleave_is_bit_exact_and_actually_interleaves():
                                           np.asarray(ys[s]))
             buf[s] = buf[s][1:]
     # collect drains: a second read is empty, not a replay
-    assert aware.collect_decoded("d0").shape == (0, 1)
+    assert aware.collect_decoded("d0")["d0"].shape == (0, 1)
 
 
 def test_interleave_decode_latency_counters():
@@ -268,7 +271,7 @@ def test_interleave_decode_latency_counters():
     assert st["decode_gap_p95_us"] >= st["decode_gap_p50_us"] > 0.0
     # evicting a decoder drops its buffered tokens and gap tracking
     aware.evict("d0")
-    assert aware.collect_decoded("d0").shape == (0, 1)
+    assert aware.collect_decoded("d0")["d0"].shape == (0, 1)
 
 
 def test_flush_interleave_validation():

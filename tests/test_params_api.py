@@ -7,7 +7,9 @@ The acceptance bar for the API redesign:
 * ``jax.jit`` and ``jax.vmap`` of the pure ``run``/``predict`` over a batch
   of param structs match the per-model loop at <= 1e-5.
 * ``core`` imports nothing from ``serve`` (the dispatch mechanism moved
-  down); ``serve.dispatch`` still re-exports it.
+  down); the PR-2-era ``serve.dispatch`` re-export shim is deleted — the
+  serve package re-exports ``resolve_method``/``run_scan_q`` straight from
+  ``core.dispatch``.
 * The batched ``ReservoirEngine`` (one vmap-ed decode trace over a stacked
   param struct) matches per-model engines slot for slot.
 """
@@ -182,14 +184,17 @@ def test_core_never_imports_serve():
                    cwd=str(root.parent.parent.parent))
 
 
-def test_serve_dispatch_still_reexports():
+def test_serve_dispatch_shim_is_gone():
+    """The PR-2-era ``serve.dispatch`` re-export module is deleted: imports
+    go to ``core.dispatch`` (the serve package re-exports the two names the
+    serve namespace historically carried)."""
+    import repro.serve as serve_pkg
     from repro.core import dispatch as core_dispatch
-    from repro.serve import dispatch as serve_dispatch
-    from repro.serve.dispatch import resolve_method, run_scan_q
-    assert run_scan_q is core_dispatch.run_scan_q
-    assert resolve_method is core_dispatch.resolve_method
-    assert serve_dispatch.SEQUENTIAL_MAX_T == core_dispatch.SEQUENTIAL_MAX_T
-    assert serve_dispatch.PALLAS_MIN_T == core_dispatch.PALLAS_MIN_T
+    with pytest.raises(ImportError):
+        import repro.serve.dispatch  # noqa: F401
+    assert serve_pkg.run_scan_q is core_dispatch.run_scan_q
+    assert serve_pkg.resolve_method is core_dispatch.resolve_method
+    assert "dispatch" not in serve_pkg.__all__
 
 
 # ------------------------------------------------- batched reservoir engine

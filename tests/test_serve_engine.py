@@ -10,7 +10,8 @@ import pytest
 
 from repro.core.esn import ESNConfig, LinearESN
 from repro.data.signals import mso_series
-from repro.serve import ReservoirEngine, dispatch, resolve_method, run_scan_q
+from repro.core import dispatch
+from repro.serve import ReservoirEngine, resolve_method, run_scan_q
 
 CFG = ESNConfig(n=48, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
                 input_scaling=0.5, ridge_alpha=1e-8, seed=7)
