@@ -33,6 +33,11 @@ Measures the serving phases the three-layer stack separates:
   a 1x1 local mesh via ``sharding.rules.plan_arena`` (placement machinery
   on; with one CPU device this prices the overhead, on a pod it prices the
   win).
+* **park.restore** — the tiered session store under sessions >> slots churn:
+  4x oversubscribed round-robin decode groups, so every decode wave promotes
+  a fully-parked group (demoting the previous one through the host pool and
+  the cold tier).  Reported: end-to-end tok/s including the page waves, and
+  the promote-wave (restore) latency p95 — both trajectory-gated.
 
 Plus the full session lifecycle (submit -> flush -> decode -> evict with
 queued admission) as sessions/sec.
@@ -40,6 +45,7 @@ queued admission) as sessions/sec.
 from __future__ import annotations
 
 import argparse
+import tempfile
 
 import numpy as np
 
@@ -421,6 +427,49 @@ def main(quick: bool = False):
         "serve.decode.sharded", sh_dec_us,
         f"tok_s={dec_tok / (sh_dec_us * 1e-6):.0f};mesh=1x1;"
         f"vs_single=x{eng_dec_us / sh_dec_us:.2f}"))
+
+    # ------------- tiered store: promote/demote churn, sessions >> slots
+    # 4x oversubscription with a host pool of 2*slots rows: at any moment
+    # one group is hot, two groups fit in the host pool, and the remaining
+    # group lives in the cold tier — so the round-robin decode laps exercise
+    # BOTH page paths (device<->host and host<->disk) every rotation.
+    park_sessions = 4 * slots
+    park_gen = max(8, gen_t // 4)
+    park_eng = ReservoirEngine(params, max_slots=slots, readout=readout,
+                               park_host_rows=2 * slots,
+                               cold_dir=tempfile.mkdtemp(prefix="serve_cold_"))
+    for s in range(park_sessions):
+        park_eng.submit(("park", s), prompts[s % len(prompts)])
+    park_eng.flush()
+    park_groups = [[("park", g * slots + i) for i in range(slots)]
+                   for g in range(park_sessions // slots)]
+
+    def park_churn():
+        out = None
+        for grp in park_groups:        # each group decode = one full page
+            out = park_eng.decode_closed_loop(park_gen, sids=grp)[grp[0]]
+        park_eng.collect_decoded()     # don't let token buffers grow
+        return out
+
+    park_churn()                       # compile pass (traces + page scatter)
+    park_eng._promote_us.clear()       # p95 must price serving, not compiles
+    park_us = _util.timeit(park_churn, reps=3, warmup=0)
+    park_tok = park_sessions * park_gen
+    pst = park_eng.stats()
+    nan = float("nan")
+    park_p95 = pst["promote_us_p95"]
+    res["park_restore"] = {
+        "us": park_us, "tokens": park_tok, "sessions": park_sessions,
+        "slots": slots, "host_rows": 2 * slots, "gen": park_gen,
+        "promote_waves": pst["promote_waves"],
+        "demote_waves": pst["demote_waves"],
+        "page_rows": pst["page_rows_total"],
+        "restore_p95_us": nan if park_p95 is None else park_p95}
+    rows.append(_util.csv_row(
+        "serve.park.restore", park_us,
+        f"tok_s={park_tok / (park_us * 1e-6):.0f};"
+        f"sessions={park_sessions};slots={slots};"
+        f"restore_p95_ms={res['park_restore']['restore_p95_us'] / 1e3:.1f}"))
 
     # ---------------- full lifecycle with queued admission
     life_eng = ReservoirEngine(params, max_slots=slots, readout=readout)

@@ -52,6 +52,8 @@ _SERVE_METRICS = {
     "serve.decode.fused_bytes_ratio": ("decode_fused", "bytes_ratio",
                                        "_value"),
     "serve.decode.sharded": ("decode_sharded", "us", None),
+    "serve.park.restore": ("park_restore", "us", "tokens"),
+    "serve.park.restore_p95": ("park_restore", "restore_p95_us", "_unit"),
 }
 
 

@@ -29,6 +29,18 @@ kernel dispatch (diag step + readout + feedback write entirely on-device).
 ``--cost-save PATH`` persists the engine's refined cost model on shutdown
 (``WaveCostModel.to_artifact``); point ``--cost-seed`` at the same path to
 reload it on the next start — the learned model now survives the process.
+Cost artifacts are keyed by ``(backend, n, d_out)``: a seed recorded on a
+different backend or model shape is shelved with a warning instead of
+poisoning this run's fits.
+
+``--park-host-rows R`` turns on the tiered session store: the slot arena
+becomes a cache of hot sessions over a pinned host-memory pool of R rows
+(plus an optional ``--cold-dir`` disk tier behind it), so ``--sessions`` can
+exceed ``--slots`` without the caller ever touching state — a full arena
+parks its least-recently-used idle sessions in batched page waves and decode
+on a parked session transparently promotes it back.  ``--snapshot PATH``
+serializes the whole engine (arena + parked table + queue + cost model) on
+shutdown; ``ReservoirEngine.restore(PATH)`` resumes it bit-exactly.
 
 LM smoke loop (token-synchronous prefill + lock-step decode over the
 transformer/hybrid archs — KV/state caches):
@@ -66,7 +78,7 @@ def serve_reservoir(args) -> None:
     from repro.core.esn import ESNConfig
     from repro.core.params import Readout, stack_params
     from repro.data.signals import mso_series
-    from repro.serve import ReservoirEngine, WaveCostModel
+    from repro.serve import ReservoirEngine, WaveCostModel, cost_key
 
     cfg = ESNConfig(n=args.n, spectral_radius=0.95, leak=0.9,
                     input_scaling=0.5, ridge_alpha=1e-8, seed=args.seed)
@@ -87,29 +99,46 @@ def serve_reservoir(args) -> None:
         print(f"arena mesh: ({d}, {m}) over (data, model) — slots "
               f"data-parallel, N TP-sharded")
 
+    # Cost fits only transfer within one (backend, n, d_out) — key the model
+    # so a stale artifact from another machine/shape shelves instead of fits.
+    run_key = cost_key(jax.default_backend(), args.n, 1)
     cost_model = None
     if args.cost_seed:
         # A seed alone enables cost-model *planning* (no per-wave timing
         # sync — the steady-state serving mode); --autotune adds online
         # refinement on top.
-        cost_model = WaveCostModel.from_artifact(args.cost_seed)
+        cost_model = WaveCostModel.from_artifact(args.cost_seed, key=run_key)
         mode = ("refining online" if args.autotune
                 else "planning only — add --autotune to refine online")
         print(f"cost model seeded with {cost_model.n_observations} offline "
               f"wave timings from {args.cost_seed} ({mode})")
     elif args.autotune:
-        cost_model = WaveCostModel()
+        cost_model = WaveCostModel(key=run_key)
         print("autotune: cold cost model — learning from this run's "
               "wave timings")
     engine_kw = dict(mesh=mesh, bucket_min=args.bucket,
                      chunk_max=args.chunk_max, autotune=args.autotune,
                      cost_model=cost_model, decode_slo_us=args.decode_slo,
-                     decode_wave_tokens=args.decode_wave_tokens)
+                     decode_wave_tokens=args.decode_wave_tokens,
+                     park_host_rows=args.park_host_rows,
+                     cold_dir=args.cold_dir)
+    if args.cold_dir and args.park_host_rows is None:
+        raise SystemExit("--cold-dir needs --park-host-rows (the cold tier "
+                         "sits behind the host pool)")
+    if args.park_host_rows is not None:
+        tiers = (f"{args.slots} hot slots -> {args.park_host_rows} host rows"
+                 + (f" -> cold dir {args.cold_dir}" if args.cold_dir else ""))
+        print(f"tiered session store: {tiers} — capacity is sessions, "
+              f"not slots")
     if args.decode_slo is not None:
         print(f"decode-aware planning: SLO {args.decode_slo:.0f} us of "
               f"predicted prefill cost between decode waves "
               f"({args.decode_wave_tokens} tok per fused decode wave)")
 
+    if args.ensemble and args.park_host_rows is not None:
+        raise SystemExit("--park-host-rows is incompatible with --ensemble: "
+                         "a param-batched engine binds slot i to reservoir "
+                         "i, so parked state cannot move slots")
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
                                    "noisy_golden", sigma=0.1)
@@ -190,7 +219,8 @@ def serve_reservoir(args) -> None:
     # inter-token latency while the other sessions' prefills flood through.
     persistent = 0 if interleave and args.sessions > 1 else None
     seen_ready: set = set()
-    while engine.active_sessions or len(engine.pending):
+    while (engine.active_sessions or len(engine.pending)
+           or engine.parked_sessions):
         t1 = time.time()
         # wave-batched bucketed prefill of what fits; with --decode-slo the
         # flush itself interleaves decode waves for the sessions that were
@@ -202,6 +232,10 @@ def serve_reservoir(args) -> None:
         # not free-run mid-prompt (flush() drains all runnable chunks, so
         # the sets only differ under flush(max_waves=...) partial drains)
         wave = list(engine.ready_sessions)
+        if not wave and engine.parked_sessions:
+            # a tiered engine may have parked freshly-prefilled sessions
+            # before they ever decoded — decode promotes them transparently
+            wave = engine.parked_sessions[:args.slots]
         # a resident session re-appears in every wave; count its prompt once
         prefill_tokens += args.prompt_len * len(set(wave) - seen_ready)
         seen_ready.update(wave)
@@ -269,11 +303,24 @@ def serve_reservoir(args) -> None:
               f"{interleaved_tokens} tok generated mid-flush; "
               f"inter-token gap p50 {fmt(p50)}, p95 {fmt(p95)} "
               f"(SLO {args.decode_slo / 1e3:.1f} ms of planned prefill)")
+    if args.park_host_rows is not None:
+        st = engine.stats()
+        p95 = st["promote_us_p95"]
+        print(f"  paging: {st['demote_waves']} demote / "
+              f"{st['promote_waves']} promote waves, "
+              f"{st['page_rows_total']} rows moved, restore p95 "
+              f"{'n/a' if p95 is None else f'{p95 / 1e3:.1f} ms'}; "
+              f"store now holds {st['sessions_parked']} parked sessions "
+              f"({st['store']})")
     if args.cost_save and engine.cost_model is not None:
         engine.cost_model.to_artifact(args.cost_save)
         print(f"cost model saved: {engine.cost_model.n_observations} "
               f"observations -> {args.cost_save} (reload next run via "
               f"--cost-seed {args.cost_save})")
+    if args.snapshot:
+        engine.snapshot(args.snapshot)
+        print(f"engine snapshot -> {args.snapshot} (resume with "
+              f"ReservoirEngine.restore({args.snapshot!r}))")
 
 
 # ----------------------------------------------------------------------- lm
@@ -386,6 +433,22 @@ def main():
                     help="persist the engine's refined cost model to PATH on "
                          "shutdown (WaveCostModel.to_artifact); reload it "
                          "next run via --cost-seed PATH")
+    ap.add_argument("--park-host-rows", type=int, default=None, metavar="R",
+                    help="tiered session store: back the slot arena with a "
+                         "pinned host-memory pool of R parked-session rows — "
+                         "a full arena demotes its LRU idle sessions in "
+                         "batched page waves instead of queueing admissions, "
+                         "and touching a parked session promotes it back "
+                         "transparently")
+    ap.add_argument("--cold-dir", default=None, metavar="DIR",
+                    help="disk/fsspec cold tier behind the host pool: when "
+                         "the pool itself fills, its LRU sessions spill to "
+                         "per-session .npz records under DIR (requires "
+                         "--park-host-rows)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="serialize the whole engine on shutdown (arena + "
+                         "parked-session table + scheduler queue + cost "
+                         "model); ReservoirEngine.restore(PATH) resumes it")
     args = ap.parse_args()
     if args.reservoir:
         serve_reservoir(args)

@@ -17,19 +17,32 @@ mapping, submit/flush/decode/evict lifecycle, ensemble-mean readout fusion,
 wave occupancy/latency ``stats()``, legacy eager API preserved as deprecation
 shims).  Decode tokens drain through ``collect_decoded()`` as one typed
 ``DecodeResult`` whatever path produced them.
+``store``     — ``SessionStore``: tiered session capacity.  The arena is a
+*cache of hot sessions* over a pinned host-memory pool and an fsspec/disk
+cold tier; a full arena parks its LRU
+idle sessions in batched page waves (priced by the cost model's
+``kind:"page"`` surface) instead of rejecting admissions, and decode on a
+parked session promotes it transparently.  ``snapshot_engine`` /
+``restore_engine`` (surfaced as ``engine.snapshot()`` /
+``ReservoirEngine.restore()``) serialize the whole serving process for
+drain/upgrade/resume.
 
 Backend selection lives in ``core.dispatch`` (the PR-2-era ``serve.dispatch``
 re-export shim is gone); ``resolve_method`` / ``run_scan_q`` stay re-exported
 here for callers that reach them through the serve namespace.
 """
-from . import arena, cost, engine, scheduler
+from . import arena, cost, engine, scheduler, store
 from ..core.dispatch import resolve_method, run_scan_q
 from .arena import SlotArena
-from .cost import WaveCostModel
-from .engine import DecodeResult, ReservoirEngine, SessionStats
+from .cost import WaveCostModel, cost_key
+from .engine import (DecodeResult, EvictResult, ReservoirEngine,
+                     SessionStats)
 from .scheduler import PrefillRequest, WaveItem, WaveScheduler, bucket_length
+from .store import HostPool, SessionStore
 
-__all__ = ["arena", "cost", "engine", "scheduler",
-           "SlotArena", "WaveCostModel", "resolve_method", "run_scan_q",
-           "DecodeResult", "ReservoirEngine", "SessionStats",
-           "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length"]
+__all__ = ["arena", "cost", "engine", "scheduler", "store",
+           "SlotArena", "WaveCostModel", "cost_key",
+           "resolve_method", "run_scan_q",
+           "DecodeResult", "EvictResult", "ReservoirEngine", "SessionStats",
+           "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length",
+           "HostPool", "SessionStore"]

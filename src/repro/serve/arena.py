@@ -46,6 +46,7 @@ __all__ = [
     "place",
     "place_many",
     "release",
+    "release_many",
     "force_output",
     "arena_step",
     "apply_readout",
@@ -110,6 +111,15 @@ def release(arena: SlotArena, slot: int) -> SlotArena:
     returns lazy slices of them, so zeroing here would race the caller."""
     return SlotArena(states=arena.states, y_prev=arena.y_prev,
                      active=arena.active.at[slot].set(False))
+
+
+def release_many(arena: SlotArena, slots) -> SlotArena:
+    """Free a whole wave of slots in ONE scatter — the demote half of a page
+    wave (``serve.store``): the engine gathers the victims' rows with one
+    ``device_get`` and then frees all their slots here.  Same
+    leave-the-arrays-in-place contract as :func:`release`."""
+    return SlotArena(states=arena.states, y_prev=arena.y_prev,
+                     active=arena.active.at[slots].set(False))
 
 
 def force_output(arena: SlotArena, slot: int, y_true) -> SlotArena:

@@ -47,18 +47,48 @@ Seeding is two-stage, mirroring how the model is used:
   (``engine.stats()`` keeps the same numbers) and calls :meth:`observe`, so
   the model tracks the machine it is actually serving on.
 
+Paging adds a third surface: the session store (``serve.store``) demotes /
+promotes session rows between the device arena and a pinned host pool in ONE
+gather/scatter wave, so its cost is affine in the rows moved,
+
+    c_page(B)  ~=  alpha + beta * B          (one fit, group medians)
+
+and the scheduler charges it against the same latency budget as prefill and
+decode — a promote wave that would blow the decode SLO defers a prefill wave
+exactly like an expensive prefill would (``kind: "page"`` records).
+
+**Keying** — timings are machine- and shape-specific: a CPU-learned model
+must never price a TPU pod, and a model fitted at ``n=512`` must never price
+``n=4096``.  A model constructed with ``key=cost_key(backend, n, d_out)``
+only *fits* records carrying the same key; records with a different key (or
+legacy un-keyed records, loaded with a warning) are shelved verbatim so
+:meth:`to_artifact` re-exports them — one artifact file can hold surfaces
+for several machines without cross-contamination.  A key-less model keeps
+the pre-keying behavior (fits everything) for backward compatibility.
+
 Host-only module: no jax imports (numpy least squares only) — it must stay
-importable for pure scheduling tests and never touch a device.
+importable for pure scheduling tests and never touch a device.  Callers that
+want the backend name in the key resolve it themselves
+(``jax.default_backend()``) and pass it in.
 """
 from __future__ import annotations
 
 import collections
 import json
-from typing import Deque, Dict, Iterable, Optional, Tuple
+import warnings
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["WaveCostModel"]
+__all__ = ["WaveCostModel", "cost_key"]
+
+
+def cost_key(backend: str, n: int, d_out: int) -> Tuple[str, int, int]:
+    """The canonical observation key: ``(backend, n, d_out)``.  Wave cost
+    depends on the machine (backend) and the per-row work (state width ``n``,
+    readout width ``d_out``); everything else (B, T) is what the surfaces
+    model.  Kept as a helper so every producer spells the key the same way."""
+    return (str(backend), int(n), int(d_out))
 
 #: Keep this many most-recent observations per bucket: enough to fit a stable
 #: affine model, small enough that a drifting machine (thermal throttling,
@@ -78,11 +108,20 @@ class WaveCostModel:
     def __init__(self, *, base_us: float = 300.0,
                  per_token_us: float = 0.05,
                  decode_base_us: float = 150.0,
-                 decode_per_row_us: float = 1.0):
+                 decode_per_row_us: float = 1.0,
+                 page_base_us: float = 200.0,
+                 page_per_row_us: float = 2.0,
+                 key: Optional[Tuple[str, int, int]] = None):
         self.base_us = float(base_us)
         self.per_token_us = float(per_token_us)
         self.decode_base_us = float(decode_base_us)
         self.decode_per_row_us = float(decode_per_row_us)
+        self.page_base_us = float(page_base_us)
+        self.page_per_row_us = float(page_per_row_us)
+        #: Observation key (``cost_key(backend, n, d_out)``) or None for the
+        #: legacy fit-everything behavior.
+        self.key: Optional[Tuple[str, int, int]] = (
+            None if key is None else tuple(key))
         self._obs: Dict[int, Deque[Tuple[int, float]]] = {}
         self._fits: Dict[int, Optional[Tuple[float, float]]] = {}
         self._global: Optional[Tuple[float, float]] = None
@@ -92,6 +131,13 @@ class WaveCostModel:
             maxlen=_OBS_CAP)
         self._dec_fit: Optional[Tuple[float, float, float]] = None
         self._dec_dirty = False
+        self._page_obs: Deque[Tuple[int, float]] = collections.deque(
+            maxlen=_OBS_CAP)
+        self._page_fit: Optional[Tuple[float, float]] = None
+        self._page_dirty = False
+        #: Records seen by :meth:`seed` but not fitted (other key / legacy
+        #: un-keyed): kept verbatim so :meth:`to_artifact` round-trips them.
+        self._shelved: List[dict] = []
 
     # ------------------------------------------------------------ observing
     def observe(self, b: int, t_bucket: int, us: float) -> None:
@@ -115,23 +161,60 @@ class WaveCostModel:
         self._dec_obs.append((int(b), int(k), float(us)))
         self._dec_dirty = True
 
+    def observe_page(self, b: int, us: float) -> None:
+        """Record one timed page wave: ``b`` session rows moved between the
+        arena and the host pool (either direction — a demote's device->host
+        gather and a promote's host->device scatter move the same bytes) in
+        ``us`` wall microseconds."""
+        if b <= 0 or us <= 0:
+            return
+        self._page_obs.append((int(b), float(us)))
+        self._page_dirty = True
+
     def seed(self, records: Iterable[dict]) -> int:
-        """Bulk-observe ``{"b":, "t_bucket":, "us":}`` prefill records and
-        ``{"kind": "decode", "b":, "us":}`` decode records (the shapes
+        """Bulk-observe ``{"b":, "t_bucket":, "us":}`` prefill records,
+        ``{"kind": "decode", "b":, "us":}`` decode records and
+        ``{"kind": "page", "b":, "us":}`` page records (the shapes
         :meth:`records` emits and ``benchmarks/serve_engine.py`` exports).
-        Returns how many landed."""
+        Returns how many landed in the fits.
+
+        A keyed model (``key=`` passed to the constructor) only fits records
+        whose ``"key"`` matches; records with a *different* key are shelved
+        silently (normal multi-machine artifact) and un-keyed records are
+        shelved under ``legacy`` with a warning — both are re-exported
+        verbatim by :meth:`records` / :meth:`to_artifact`, so loading an
+        artifact never loses another machine's surface."""
         n = 0
+        legacy = 0
         for r in records:
             try:
-                if r.get("kind") == "decode":
+                if self.key is not None:
+                    rk = r.get("key")
+                    if rk is None:
+                        legacy += 1
+                        self._shelved.append(r)
+                        continue
+                    if tuple(rk) != self.key:
+                        self._shelved.append(r)
+                        continue
+                kind = r.get("kind")
+                if kind == "decode":
                     self.observe_decode(int(r["b"]), float(r["us"]),
                                         k=int(r.get("k", 1)))
+                elif kind == "page":
+                    self.observe_page(int(r["b"]), float(r["us"]))
                 else:
                     self.observe(int(r["b"]), int(r["t_bucket"]),
                                  float(r["us"]))
                 n += 1
             except (KeyError, TypeError, ValueError, AttributeError):
                 continue
+        if legacy:
+            warnings.warn(
+                f"WaveCostModel(key={self.key}): shelved {legacy} legacy "
+                "un-keyed cost record(s) (kept for re-export, not fitted) — "
+                "re-measure on this machine or export with a keyed model",
+                stacklevel=2)
         return n
 
     @classmethod
@@ -153,7 +236,7 @@ class WaveCostModel:
     @property
     def n_observations(self) -> int:
         return (sum(len(d) for d in self._obs.values())
-                + len(self._dec_obs))
+                + len(self._dec_obs) + len(self._page_obs))
 
     def clear(self) -> None:
         """Drop every observation and fit (cold-start constants remain).
@@ -168,19 +251,31 @@ class WaveCostModel:
         self._dec_obs.clear()
         self._dec_fit = None
         self._dec_dirty = False
+        self._page_obs.clear()
+        self._page_fit = None
+        self._page_dirty = False
+        self._shelved.clear()
 
     def records(self) -> list:
         """The retained observations as ``{"b", "t_bucket", "us"}`` prefill
         dicts followed by ``{"kind": "decode", "b", "us"}`` decode dicts
         (multi-token waves add ``"k"``; K=1 records omit it, so the schema
-        older artifacts wrote is exactly what K=1 still reads) — the shape
-        :meth:`seed` / :meth:`from_artifact` consume (what
-        ``benchmarks/serve_engine.py`` exports under ``"wave_costs"``)."""
-        return ([{"b": b, "t_bucket": t, "us": us}
-                 for t, d in sorted(self._obs.items()) for b, us in d]
-                + [{"kind": "decode", "b": b, "us": us} if k == 1 else
-                   {"kind": "decode", "b": b, "k": k, "us": us}
-                   for b, k, us in self._dec_obs])
+        older artifacts wrote is exactly what K=1 still reads) and
+        ``{"kind": "page", "b", "us"}`` page dicts — the shape :meth:`seed` /
+        :meth:`from_artifact` consume (what ``benchmarks/serve_engine.py``
+        exports under ``"wave_costs"``).  A keyed model tags each of its own
+        records with ``"key"`` and appends any shelved foreign/legacy records
+        verbatim, so the artifact round-trips every machine's surface."""
+        own = ([{"b": b, "t_bucket": t, "us": us}
+                for t, d in sorted(self._obs.items()) for b, us in d]
+               + [{"kind": "decode", "b": b, "us": us} if k == 1 else
+                  {"kind": "decode", "b": b, "k": k, "us": us}
+                  for b, k, us in self._dec_obs]
+               + [{"kind": "page", "b": b, "us": us}
+                  for b, us in self._page_obs])
+        if self.key is not None:
+            own = [{**r, "key": list(self.key)} for r in own]
+        return own + list(self._shelved)
 
     def to_artifact(self, path: str) -> None:
         """Persist the retained observations under ``"wave_costs"`` in
@@ -278,6 +373,36 @@ class WaveCostModel:
             alpha, beta_k, beta_bk = self._dec_fit
             return max(alpha + beta_k * k + beta_bk * b * k, 1.0)
         return max(self.decode_base_us + self.decode_per_row_us * b * k, 1.0)
+
+    def predict_page_us(self, b: int) -> float:
+        """Predicted wall microseconds for one page wave moving ``b`` session
+        rows between arena and host pool: c_page(B) ~= alpha + beta * B.
+        Fitted through per-B group medians when trained (>= 2 distinct B —
+        page waves are host-transfer bound, so the same hiccup-outlier
+        argument as :meth:`predict_decode_us` applies), cold-start constants
+        before; always >= 1.  ``b <= 0`` is free: a wave that demotes nothing
+        costs nothing, so the planner can price "no paging needed" as 0."""
+        if b <= 0:
+            return 0.0
+        if self._page_dirty:
+            groups: Dict[int, list] = {}
+            for bb, u in self._page_obs:
+                groups.setdefault(bb, []).append(u)
+            if len(groups) >= 2:
+                bs = np.asarray(sorted(groups), float)
+                us = np.asarray([float(np.median(groups[int(bb)]))
+                                 for bb in bs])
+                a = np.stack([np.ones_like(bs), bs], axis=1)
+                (alpha, beta), *_ = np.linalg.lstsq(a, us, rcond=None)
+                self._page_fit = (max(float(alpha), 0.0),
+                                  max(float(beta), 0.0))
+            else:
+                self._page_fit = None
+            self._page_dirty = False
+        if self._page_fit is not None:
+            alpha, beta = self._page_fit
+            return max(alpha + beta * b, 1.0)
+        return max(self.page_base_us + self.page_per_row_us * b, 1.0)
 
     def throughput(self, b: int, t_bucket: int, true_tokens: int) -> float:
         """Predicted true-tokens-per-second of a candidate wave (``b`` rows of

@@ -53,11 +53,12 @@ import numpy as np
 from ..core import dispatch
 from ..core.params import DiagParams, Readout, StandardParams
 from . import arena as arena_mod
-from .cost import WaveCostModel
+from . import store as store_mod
+from .cost import WaveCostModel, cost_key
 from .scheduler import (PrefillRequest, WaveItem, WaveScheduler,
                         bucket_length)
 
-__all__ = ["SessionStats", "DecodeResult", "ReservoirEngine"]
+__all__ = ["SessionStats", "DecodeResult", "EvictResult", "ReservoirEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,15 +102,41 @@ class DecodeResult:
         return self.tokens.get(sid, default)
 
 
+class EvictResult(tuple):
+    """What :meth:`ReservoirEngine.evict` returns: unpacks as the historical
+    ``(state, y_prev)`` 2-tuple (every existing ``state, y = evict(sid)``
+    call site keeps working), and additionally carries ``.decoded`` — the
+    :class:`DecodeResult` of any tokens the session had buffered but not yet
+    collected.  Eviction used to drop that buffer silently (documented, but
+    still token loss); now the tokens leave with the session."""
+
+    def __new__(cls, state, y_prev, decoded: DecodeResult):
+        self = super().__new__(cls, (state, y_prev))
+        self.decoded = decoded
+        return self
+
+    @property
+    def state(self):
+        return self[0]
+
+    @property
+    def y_prev(self):
+        return self[1]
+
+
 @dataclasses.dataclass(slots=True)
 class SessionStats:
     """Per-session accounting (host-side; never enters jit).
     ``prefill_pending``: the session holds a slot but chunk waves of its
-    prompt are still queued — decode is blocked until the last chunk lands."""
+    prompt are still queued — decode is blocked until the last chunk lands.
+    ``last_use``: monotone engine tick of the session's last prefill/decode/
+    observe touch — the LRU key paging demotes by (``slot`` is -1 while the
+    session is parked in the ``serve.store`` tiers)."""
     slot: int
     tokens_prefilled: int = 0
     tokens_decoded: int = 0
     prefill_pending: bool = False
+    last_use: int = 0
 
 
 def _coerce_model(model, readout):
@@ -174,6 +201,8 @@ class ReservoirEngine:
                  cost_model: Optional[WaveCostModel] = None,
                  decode_slo_us: Optional[float] = None,
                  decode_wave_tokens: int = 1,
+                 park_host_rows: Optional[int] = None,
+                 cold_dir: Optional[str] = None,
                  _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
@@ -229,11 +258,39 @@ class ReservoirEngine:
         self.decode_slo_us = (None if decode_slo_us is None
                               else float(decode_slo_us))
         self.decode_wave_tokens = int(decode_wave_tokens)
+        # Paged session store: capacity becomes sessions, not slots.  The
+        # arena turns into a cache of hot sessions over a pinned host pool
+        # (park_host_rows rows) and an optional disk/fsspec cold tier.
+        if cold_dir is not None and park_host_rows is None:
+            raise ValueError(
+                "cold_dir needs park_host_rows — the cold tier is the "
+                "spill target of the host pool, not a direct demote target")
+        if park_host_rows is not None and self._batched:
+            raise ValueError(
+                "param-batched engine: slot i IS reservoir i, so a parked "
+                "session cannot be promoted into whichever slot is free — "
+                "paging is unsupported (park/re-admit via evict + "
+                "add_session(slot=...) instead)")
+        self._park_host_rows = (None if park_host_rows is None
+                                else int(park_host_rows))
+        self._cold_dir = cold_dir
+        self.store = None
+        if self._park_host_rows is not None:
+            self.store = store_mod.SessionStore(
+                self.cfg.n, self.cfg.d_out, self._dtype,
+                host_rows=self._park_host_rows, cold_dir=cold_dir)
+        self._use_clock = 0
+        self._promote_us: collections.deque = collections.deque(maxlen=4096)
         # Decode-aware planning needs a cost surface to price the candidate
         # prefill waves against the budget — a cold model's documented
         # constants are enough to start; autotune refines them in place.
-        if cost_model is None and (autotune or decode_slo_us is not None):
-            cost_model = WaveCostModel()
+        # Engine-created models are keyed by (backend, n, d_out) so their
+        # persisted observations never mis-price a different machine or
+        # model size; a caller-supplied model keeps whatever key it has.
+        if cost_model is None and (autotune or decode_slo_us is not None
+                                   or self.store is not None):
+            cost_model = WaveCostModel(key=cost_key(
+                jax.default_backend(), self.cfg.n, self.cfg.d_out))
         self.cost_model = cost_model
         self.scheduler = WaveScheduler(bucket_min=bucket_min,
                                        chunk_max=chunk_max,
@@ -248,6 +305,8 @@ class ReservoirEngine:
                        "decode_waves": 0, "decode_rows": 0,
                        "decode_interleave_waves": 0,
                        "decode_us_sum": 0.0, "decode_timed_steps": 0,
+                       "page_waves": 0, "page_rows": 0, "page_us_sum": 0.0,
+                       "promote_waves": 0, "demote_waves": 0,
                        "by_bucket": {}}
         self._wave_log: collections.deque = collections.deque(maxlen=256)
         # Decode latency bookkeeping: the planning clock (predicted/measured
@@ -298,7 +357,9 @@ class ReservoirEngine:
                          autotune: bool = False,
                          cost_model: Optional[WaveCostModel] = None,
                          decode_slo_us: Optional[float] = None,
-                         decode_wave_tokens: int = 1
+                         decode_wave_tokens: int = 1,
+                         park_host_rows: Optional[int] = None,
+                         cold_dir: Optional[str] = None
                          ) -> "ReservoirEngine":
         """Engine over a *batch* of independently-seeded reservoirs.
 
@@ -321,6 +382,7 @@ class ReservoirEngine:
                    autotune=autotune, cost_model=cost_model,
                    decode_slo_us=decode_slo_us,
                    decode_wave_tokens=decode_wave_tokens,
+                   park_host_rows=park_host_rows, cold_dir=cold_dir,
                    _param_batch=True)
 
     # -------------------------------------------------------------- compat
@@ -355,6 +417,140 @@ class ReservoirEngine:
         """The scheduler's queue (len/iter-able) — sessions awaiting a slot."""
         return self.scheduler
 
+    # ---------------------------------------------------------------- paging
+    def _tick(self) -> int:
+        """Advance the engine's LRU clock (every session touch gets a fresh
+        monotone stamp — wall time would make snapshot restores non-
+        deterministic)."""
+        self._use_clock += 1
+        return self._use_clock
+
+    def _demotable(self, protect=frozenset()) -> List[Hashable]:
+        """Hot sessions eligible to park, least-recently-used first: ready
+        (no chunk waves in flight — a mid-prompt slot's carry is owed to the
+        scheduler's queued chunks) and not protected (a flush's decode set,
+        a promote wave's own targets)."""
+        cands = [(st.last_use, sid) for sid, st in self.sessions.items()
+                 if not st.prefill_pending and sid not in protect]
+        cands.sort(key=lambda c: c[0])
+        return [sid for _, sid in cands]
+
+    def _capacity(self, protect=frozenset()) -> int:
+        """Admission capacity for the scheduler: free slots, plus — on a
+        paged engine — every demotable hot session (admitting over the free
+        slots parks the LRU idle sessions instead of rejecting; this is the
+        tentpole semantic change: capacity is sessions, not slots)."""
+        cap = self.free_slots
+        if self.store is not None:
+            cap += len(self._demotable(protect))
+        return cap
+
+    def _note_page(self, rows: int, us: float, *, promote: bool) -> None:
+        """Page-wave accounting: counters, the cost model's page surface
+        (autotune only — mirrors decode: in pipelined serving the blocking
+        transfer also drains queued waves, and that drain time would poison
+        the fit), and the decode planning clock (a page wave spends real
+        latency the decode budget must see)."""
+        s = self._stats
+        s["page_waves"] += 1
+        s["page_rows"] += rows
+        s["page_us_sum"] += us
+        s["promote_waves" if promote else "demote_waves"] += 1
+        if self._autotune and self.cost_model is not None:
+            self.cost_model.observe_page(rows, us)
+        self._decode_clock_us += us
+
+    def _demote_wave(self, sids: List[Hashable]) -> None:
+        """Park ``sids``: gather their slot rows in ONE device->host
+        transfer, free the slots in ONE scatter, and hand the rows (plus
+        each session's accounting struct, verbatim) to the store.  The
+        ``device_get`` is inherently blocking, so the wave is always timed.
+        """
+        if not sids:
+            return
+        slots = [self.sessions[s].slot for s in sids]
+        idx = jnp.asarray(slots)
+        t0 = time.perf_counter()
+        states, ys = jax.device_get((self.arena.states[idx],
+                                     self.arena.y_prev[idx]))
+        us = (time.perf_counter() - t0) * 1e6
+        stats = []
+        for sid in sids:
+            st = self.sessions.pop(sid)
+            self._slots[st.slot] = None
+            st.slot = -1
+            stats.append(st)
+        self.arena = arena_mod.release_many(self.arena, idx)
+        self.store.park_many(sids, np.asarray(states), np.asarray(ys),
+                             stats)
+        self._note_page(len(sids), us, promote=False)
+
+    def _promote_wave(self, sids: List[Hashable]) -> None:
+        """Un-park ``sids`` into free slots: one store fetch (host rows or
+        cold records), ONE ``place_many`` scatter.  The wave blocks until
+        the states are resident — a promote is always on someone's decode
+        critical path, and an unmaterialized state is still latency; the
+        measured restore latency feeds ``promote_us_p95`` in :meth:`stats`.
+        """
+        if not sids:
+            return
+        t0 = time.perf_counter()
+        states, ys, stats = self.store.fetch_many(sids)
+        slots = []
+        for sid, st in zip(sids, stats):
+            slot = self._slots.index(None)
+            self._slots[slot] = sid
+            st.slot = slot
+            self.sessions[sid] = st
+            slots.append(slot)
+        self.arena = arena_mod.place_many(self.arena, jnp.asarray(slots),
+                                          jnp.asarray(states),
+                                          jnp.asarray(ys))
+        jax.block_until_ready(self.arena.states)
+        us = (time.perf_counter() - t0) * 1e6
+        self._promote_us.append(us)
+        self._note_page(len(sids), us, promote=True)
+
+    def _ensure_hot(self, sids, protect=frozenset()) -> None:
+        """Transparently promote any parked sessions in ``sids`` — called at
+        the top of every decode/observe path, so decoding a parked session
+        just works: the LRU idle hot sessions page out to make room.  No-op
+        on an unpaged engine or when everything is already hot."""
+        if self.store is None:
+            return
+        parked = [s for s in sids if s in self.store]
+        if not parked:
+            return
+        need = len(parked) - self.free_slots
+        if need > 0:
+            victims = self._demotable(set(sids) | set(protect))[:need]
+            if len(victims) < need:
+                raise RuntimeError(
+                    f"cannot promote {len(parked)} parked session(s): "
+                    f"{self.free_slots} free slot(s), "
+                    f"{len(victims)} demotable — decode at most "
+                    f"max_slots={self.max_slots} sessions per wave")
+            self._demote_wave(victims)
+        self._promote_wave(parked)
+
+    def _make_room(self, wave: List[WaveItem], protect=frozenset()) -> None:
+        """Demote enough LRU idle sessions that the popped wave's fresh rows
+        all find free slots (the scheduler's ``capacity`` already counted
+        them, so the victims exist by construction)."""
+        if self.store is None:
+            return
+        need = sum(it.first for it in wave) - self.free_slots
+        if need > 0:
+            self._demote_wave(self._demotable(protect)[:need])
+
+    @property
+    def parked_sessions(self) -> List[Hashable]:
+        """Sessions parked in the store tiers (host pool or cold records) —
+        decodable via transparent promotion, invisible to
+        :attr:`active_sessions` / :attr:`ready_sessions` (those are the hot
+        set)."""
+        return [] if self.store is None else self.store.sids
+
     # ------------------------------------------------------------- lifecycle
     def add_session(self, sid: Hashable, h0=None, y0=None, *,
                     slot: Optional[int] = None) -> Optional[int]:
@@ -383,7 +579,8 @@ class ReservoirEngine:
             "submit(sid, u, h0=, y0=) + flush() — eager admission serves "
             "one session at a time where a flush wave batches them",
             DeprecationWarning, stacklevel=2)
-        if sid in self.sessions or self.scheduler.has(sid):
+        if (sid in self.sessions or self.scheduler.has(sid)
+                or (self.store is not None and sid in self.store)):
             raise KeyError(f"session {sid!r} already admitted")
         if slot is not None:
             if not 0 <= slot < self.max_slots:
@@ -429,7 +626,8 @@ class ReservoirEngine:
         is the asynchronous replacement for the eager ``add_session`` +
         ``prefill`` flow (admission is no longer synchronous with arrival).
         """
-        if sid in self.sessions or self.scheduler.has(sid):
+        if (sid in self.sessions or self.scheduler.has(sid)
+                or (self.store is not None and sid in self.store)):
             raise KeyError(f"session {sid!r} already admitted")
         if self._batched and h0 is not None:
             raise ValueError(
@@ -489,6 +687,15 @@ class ReservoirEngine:
         decode-blind schedule.  An SLO below even a single-row wave's
         predicted cost degrades to strict prefill/decode alternation
         (progress is never traded for an unsatisfiable budget).
+
+        **Paged engine** (``park_host_rows=``): a full arena no longer
+        queues fresh admissions — the flush demotes the least-recently-used
+        idle hot sessions to the session store in one page wave and admits
+        into the freed slots, so every queued session lands as long as the
+        *store* has room.  Demoted sessions keep their accounting and
+        buffered decode tokens; decoding them later promotes them back
+        transparently.  Paging moves state bit-exactly, so outputs match an
+        unpaged engine with enough slots (pinned by test).
         """
         if not decode_interleave:
             decode_sids = []
@@ -502,26 +709,39 @@ class ReservoirEngine:
                 raise ValueError(
                     "interleaved decode waves free-run (closed loop): the "
                     "engine needs a trained readout and d_in == d_out")
+            if decode_sids is not None:
+                decode_sids = list(dict.fromkeys(decode_sids))
+                # Paged engine: a parked decoder is still a valid protected
+                # decoder — promote it now so the ready check below sees it.
+                self._ensure_hot(decode_sids)
             ready = self.ready_sessions
             if decode_sids is None:
                 decode_sids = list(ready)
             else:
-                decode_sids = list(dict.fromkeys(decode_sids))
                 missing = [s for s in decode_sids if s not in set(ready)]
                 if missing:
                     raise KeyError(
                         f"decode_sids must be ready sessions; not ready: "
                         f"{missing!r}")
         results: Dict[Hashable, object] = {}
+        protect = frozenset(decode_sids)
         waves_run = 0
         just_decoded = False
         while max_waves is None or waves_run < max_waves:
-            capacity = self.free_slots
+            # Paged engine: capacity counts demotable hot sessions too — a
+            # full arena admits by parking its LRU idle sessions, so the
+            # queue drains as long as *sessions* fit, not slots.  The true
+            # free-slot count still goes to the scheduler so the budget fit
+            # can price the forced demote page wave (c_page of the
+            # overflow) against the same decode SLO.
+            capacity = self._capacity(protect)
+            free = self.free_slots if self.store is not None else None
             if not self.scheduler.has_runnable(capacity):
                 break
             budget = (self._decode_budget(len(decode_sids))
                       if decode_sids else None)
-            wave = self.scheduler.next_wave(capacity, budget_us=budget)
+            wave = self.scheduler.next_wave(capacity, budget_us=budget,
+                                            free_slots=free)
             if not wave:
                 if not just_decoded:
                     # Runnable prefill exists but is over the decode budget:
@@ -538,15 +758,18 @@ class ReservoirEngine:
                 # on the full one.
                 wave = self.scheduler.next_wave(
                     capacity, budget_us=self._decode_budget(
-                        len(decode_sids)), shrink_floor=0.0)
+                        len(decode_sids)), shrink_floor=0.0,
+                    free_slots=free)
                 if not wave:
                     # Truly unsatisfiable: not even one row fits the SLO;
                     # run unbudgeted rather than spin decode-only forever.
-                    wave = self.scheduler.next_wave(capacity)
+                    wave = self.scheduler.next_wave(capacity,
+                                                    free_slots=free)
                     if not wave:
                         break
             just_decoded = False
             waves_run += 1
+            self._make_room(wave, protect)
             self._run_wave(wave, capacity, results, method=method,
                            chunk=chunk, want_outputs=want_outputs)
         return results
@@ -612,6 +835,7 @@ class ReservoirEngine:
             st = self.sessions[sid]
             mask[st.slot] = True
             st.tokens_decoded += self.decode_wave_tokens
+            st.last_use = self._tick()
         self._stats["decode_tokens"] += self.decode_wave_tokens * len(sids)
 
         def launch():
@@ -716,7 +940,8 @@ class ReservoirEngine:
                 slot = self._slots.index(None)
                 self._slots[slot] = it.sid
                 self.sessions[it.sid] = SessionStats(
-                    slot=slot, prefill_pending=not it.last)
+                    slot=slot, prefill_pending=not it.last,
+                    last_use=self._tick())
                 if it.req.h0 is not None:
                     h0s[i] = np.asarray(it.req.h0)
                 if it.req.y0 is not None:
@@ -773,6 +998,7 @@ class ReservoirEngine:
         for i, it in enumerate(prompts):
             st = self.sessions[it.sid]
             st.tokens_prefilled += int(lengths[i])
+            st.last_use = self._tick()
             if want_outputs:
                 self._chunk_outs.setdefault(it.sid, []).append(
                     out[i, :int(lengths[i])])
@@ -832,7 +1058,15 @@ class ReservoirEngine:
         ``decode_us_per_step`` the mean timed dispatch cost per token, and
         ``decode_gap_p50_us`` / ``decode_gap_p95_us`` the measured
         wall-clock inter-token gap percentiles over the last 4096 gaps —
-        the serving-latency numbers ``--decode-slo`` bounds."""
+        the serving-latency numbers ``--decode-slo`` bounds.
+
+        Page counters (paged engines): ``page_waves_total`` /
+        ``page_rows_total`` split into ``promote_waves`` / ``demote_waves``,
+        ``promote_us_p95`` the measured parked->decodable restore latency
+        over the last 4096 promote waves (every promote blocks until the
+        states are resident — an unmaterialized state is still latency),
+        and ``store`` the tier breakdown (host/cold rows, pool occupancy,
+        epoch)."""
         s = self._stats
         waves = s["waves"]
         gaps = (np.asarray(self._decode_gaps_us, float)
@@ -844,10 +1078,21 @@ class ReservoirEngine:
                            "us": w["us"]}
                           for w in self._wave_log
                           if w["us"] is not None and w["rows"] > 0]
+        promote = (np.asarray(self._promote_us, float)
+                   if self._promote_us else None)
         return {
             "sessions_active": len(self.sessions),
             "sessions_ready": len(self.ready_sessions),
             "sessions_queued": len(self.scheduler),
+            "sessions_parked": 0 if self.store is None else len(self.store),
+            "store": None if self.store is None else self.store.stats(),
+            "page_waves_total": s["page_waves"],
+            "page_rows_total": s["page_rows"],
+            "promote_waves": s["promote_waves"],
+            "demote_waves": s["demote_waves"],
+            "page_us_sum": s["page_us_sum"],
+            "promote_us_p95": (None if promote is None
+                               else float(np.percentile(promote, 95))),
             "chunks_in_flight": sum(st.prefill_pending
                                     for st in self.sessions.values()),
             "waves_total": waves,
@@ -887,31 +1132,53 @@ class ReservoirEngine:
         return slot
 
     def evict(self, sid: Hashable):
-        """Release ``sid``'s slot; returns ``(state, y_prev)`` so the caller
-        can park the session and re-admit it later via ``h0=``/``y0=``.
+        """Hand ``sid``'s state back to the caller and forget the session.
+        Returns an :class:`EvictResult` — unpacks as the historical
+        ``(state, y_prev)`` 2-tuple for re-admission via ``h0=``/``y0=``,
+        and carries ``.decoded``: the :class:`DecodeResult` of any buffered
+        tokens the caller had not yet collected (they used to be dropped
+        silently — token loss; now they leave with the session).
+
+        On a **paged engine** this is the demotion shim: sessions no longer
+        *need* evicting to free capacity (a full arena parks its LRU idle
+        sessions automatically), so ``evict`` is for callers that want the
+        state *out* of the engine — a parked sid is fetched straight from
+        the store tier it lives in, a hot sid from its slot.
+
         The oldest queued *admission-only* request (legacy ``add_session``
         overflow) is admitted into the freed slot; queued *prompt* requests
         stay put until the next :meth:`flush` so their prefill runs
         wave-batched, not one-by-one on each eviction.
 
-        Evicting a sid that is still *queued* cancels it instead (returns its
-        queued ``(h0, y0)``) — clients that disconnect before admission must
-        not leak into slots.  Evicting a **chunk-in-flight** session (slot
-        held, chunk waves still queued) cancels the queued remainder and
-        returns the *partial carry* — the slot state after the chunks that
-        already ran; without the cancel the orphaned chunks would later run
-        on a freed (possibly reassigned) slot.
+        Evicting a sid that is still *queued* cancels it instead (returns
+        its queued ``(h0, y0)``) — clients that disconnect before admission
+        must not leak into slots.  Evicting a **chunk-in-flight** session
+        (slot held, chunk waves still queued) cancels the queued remainder
+        and returns the *partial carry* — the slot state after the chunks
+        that already ran; without the cancel the orphaned chunks would
+        later run on a freed (possibly reassigned) slot.
 
-        The returned arrays are lazy device slices (no host sync): callers
-        that evict only to free the slot pay nothing; callers that park the
-        session convert to host storage on their own schedule."""
+        For a hot session the returned arrays are lazy device slices (no
+        host sync): callers that evict only to free the slot pay nothing;
+        callers that park the session convert to host storage on their own
+        schedule.  Parked sessions return host arrays (they already live
+        there)."""
+        if self.store is not None and sid in self.store:
+            decoded = self.collect_decoded(sid)
+            self._last_decode_wall.pop(sid, None)
+            states, ys, _ = self.store.fetch_many([sid])
+            return EvictResult(states[0], ys[0], decoded)
         if sid not in self.sessions:
             try:
                 req = self.scheduler.cancel(sid)
             except KeyError:
                 raise KeyError(
                     f"session {sid!r} is neither active nor queued") from None
-            return req.h0, req.y0
+            return EvictResult(req.h0, req.y0, self.collect_decoded(sid))
+        # Drain the un-collected tokens BEFORE the session bookkeeping goes
+        # away: collect_decoded also settles the per-dispatch metadata this
+        # sid is still pending in.
+        decoded = self.collect_decoded(sid)
         st = self.sessions.pop(sid)
         if st.prefill_pending:
             # prefill_pending <=> the chunk remainder is still queued; the
@@ -919,11 +1186,6 @@ class ReservoirEngine:
             # WaveScheduler.cancel) and the arena slot holds the carry.
             self.scheduler.cancel(sid)
         self._chunk_outs.pop(sid, None)
-        self._decode_buf.pop(sid, None)
-        for meta in list(self._decode_meta):
-            meta["_pending"].discard(sid)
-            if not meta["_pending"]:
-                self._decode_meta.remove(meta)
         self._last_decode_wall.pop(sid, None)
         state = self.arena.states[st.slot]
         y = self.arena.y_prev[st.slot]
@@ -934,7 +1196,7 @@ class ReservoirEngine:
                 self.scheduler.cancel(req.sid)
                 self._place(req.sid, st.slot, req.h0, req.y0)
                 break
-        return state, y
+        return EvictResult(state, y, decoded)
 
     def reset(self):
         """Drop all sessions (active + queued) and zero the state arena.
@@ -943,6 +1205,10 @@ class ReservoirEngine:
         self.arena = self._fresh_arena()
         self._slots = [None] * self.max_slots
         self.sessions.clear()
+        if self.store is not None:
+            self.store.clear()
+        self._use_clock = 0
+        self._promote_us.clear()
         self._chunk_outs.clear()
         self._decode_buf.clear()
         self._decode_meta.clear()
@@ -953,6 +1219,29 @@ class ReservoirEngine:
                                        max_wave=self.scheduler.max_wave,
                                        chunk_max=self.scheduler.chunk_max,
                                        cost_model=self.scheduler.cost_model)
+
+    # ----------------------------------------------------- snapshot/restore
+    def snapshot(self, path: str) -> str:
+        """Serialize the whole serving process to ``path`` (a directory):
+        params + readout, arena, hot/parked/queued session tables (chunk
+        cursors included), un-collected decode buffers, and the cost-model
+        artifact — everything :meth:`restore` needs to resume mid-workload
+        bit-exactly.  Atomic (tmp-rename + ``_COMPLETE`` marker, the
+        ``train/checkpoint.py`` contract); cold-tier records are referenced,
+        not copied.  The enabler for drain -> upgrade -> resume rolling
+        restarts.  See ``serve.store.snapshot_engine``."""
+        return store_mod.snapshot_engine(self, path)
+
+    @classmethod
+    def restore(cls, path: str, *, mesh=None) -> "ReservoirEngine":
+        """Rebuild an engine from :meth:`snapshot` output and resume
+        serving: the next :meth:`flush` / decode produces exactly what the
+        snapshotted process would have (pinned by test; assumes the same
+        ``jax_enable_x64`` setting).  ``mesh`` re-places the arena on a new
+        device mesh — elastic restore.  Cumulative :meth:`stats` counters
+        start fresh; the session store opens a new cold epoch so new
+        records never collide with ones the snapshot references."""
+        return store_mod.restore_engine(cls, path, mesh=mesh)
 
     @property
     def active_sessions(self):
@@ -990,6 +1279,10 @@ class ReservoirEngine:
         return st
 
     def state_of(self, sid: Hashable):
+        if self.store is not None and sid in self.store:
+            # Read-only peek: inspecting a parked session must not thrash
+            # the arena (no promotion).
+            return self.store.peek(sid)[0]
         return np.asarray(self.arena.states[self._active(sid).slot])
 
     # --------------------------------------------------------------- prefill
@@ -1079,6 +1372,9 @@ class ReservoirEngine:
         Under ``autotune`` the dispatch is timed (host sync — the price of a
         measurement) and feeds the cost model's decode surface.
         """
+        # Parked sessions promote transparently (paged engine) before the
+        # resolve: decode on a parked sid is the promotion trigger.
+        self._ensure_hot(list(inputs))
         # Resolve every sid and validate every vector before mutating
         # anything: a bad input must not leave other sessions' stats
         # half-updated.
@@ -1092,6 +1388,7 @@ class ReservoirEngine:
             u[st.slot] = vec
             mask[st.slot] = True
             st.tokens_decoded += 1
+            st.last_use = self._tick()
         self._stats["decode_tokens"] += len(vecs)
 
         def launch():
@@ -1132,7 +1429,9 @@ class ReservoirEngine:
         teacher-forced chunk state, which the fused mean never touched).
         Resolves the session first, so observing a queued / chunk-in-flight
         sid raises instead of silently dropping the correction."""
+        self._ensure_hot([sid])        # a parked sid promotes transparently
         st = self._active(sid)
+        st.last_use = self._tick()
         y = jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out)
         if self.ensemble == "mean":
             slots = jnp.asarray([self.sessions[s].slot
@@ -1161,11 +1460,13 @@ class ReservoirEngine:
         # hold slots but must not free-run mid-prompt.
         targets = list(dict.fromkeys(
             self.ready_sessions if sids is None else sids))
+        self._ensure_hot(targets)      # parked targets promote transparently
         stats = {sid: self._active(sid) for sid in targets}  # validate first
         mask = np.zeros((self.max_slots,), bool)
         for sid in targets:
             mask[stats[sid].slot] = True
             stats[sid].tokens_decoded += n_steps
+            stats[sid].last_use = self._tick()
         self._stats["decode_tokens"] += n_steps * len(targets)
 
         def launch():

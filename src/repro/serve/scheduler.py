@@ -41,6 +41,14 @@ Two orthogonal extensions ride on the same queue:
   engine interleaves a decode wave before retrying.  The budget only ever
   removes or delays rows — arrival order within a bucket is untouched, so
   the fairness bounds survive with the decode waves inserted between.
+* **Page-cost pricing** (``next_wave(free_slots=...)``): with a paged
+  session store (``serve.store``) the engine's ``capacity`` counts
+  demotable hot sessions, so a wave may admit more fresh rows than there
+  are free slots — the overflow is a demote page wave the engine runs
+  first.  Passing the *true* free-slot count lets the budget fit charge
+  each candidate wave ``c_page(fresh - free_slots)`` on top of its prefill
+  cost, so promote/demote waves compete with prefill and decode under the
+  same latency budget instead of being a blind spot.
 
 Scheduling invariants, all pinned by test:
 
@@ -245,7 +253,8 @@ class WaveScheduler:
 
     def next_wave(self, capacity: int, *,
                   budget_us: Optional[float] = None,
-                  shrink_floor: float = _SHRINK_EFFICIENCY
+                  shrink_floor: float = _SHRINK_EFFICIENCY,
+                  free_slots: Optional[int] = None
                   ) -> List[WaveItem]:
         """Pop the next wave.  Returns [] when nothing is runnable.
 
@@ -267,6 +276,15 @@ class WaveScheduler:
         decode wave, then retry — passing ``shrink_floor=0.0`` on the
         fresh-budget retry accepts *any* SLO-compliant wave rather than
         blowing the budget on the full one).
+
+        ``free_slots`` (paged engines): the true free-slot count when
+        ``capacity`` also counts demotable hot sessions.  The budget fit
+        then adds the cost model's ``c_page(fresh_rows - free_slots)`` to
+        each candidate wave — admitting beyond the free slots means the
+        engine pages the overflow out first, and that page wave spends the
+        same latency budget.  The lookahead deferral ignores page cost (it
+        compares same-capacity plans, where the page term is near-equal);
+        the budget fit is where an unpriced page wave would break an SLO.
         """
         capacity = max(0, int(capacity))
         anchor = self._anchor(capacity)
@@ -282,7 +300,8 @@ class WaveScheduler:
             if alt is not None:
                 wave, deferring = alt, True
         if budget_us is not None and self.cost_model is not None:
-            wave = self._fit_budget(wave, budget_us, shrink_floor)
+            wave = self._fit_budget(wave, budget_us, shrink_floor,
+                                    free_slots=free_slots)
             if not wave:
                 # Deferred for decode: nothing pops and commitments are
                 # untouched — the engine retries after its decode wave with
@@ -294,8 +313,21 @@ class WaveScheduler:
         self._deferred = anchor.sid if deferring else None
         return self._pop(wave)
 
+    def _wave_cost(self, wave: List[WaveItem], bucket: int,
+                   free_slots: Optional[int]) -> float:
+        """Predicted cost of popping ``wave`` now: the prefill wave itself
+        plus — on a paged engine — the demote page wave its over-free-slot
+        fresh rows force (``c_page`` of the overflow; 0 when everything
+        fits the free slots)."""
+        cost = self.cost_model.predict_us(len(wave), bucket)
+        if free_slots is not None:
+            overflow = sum(it.first for it in wave) - max(0, int(free_slots))
+            cost += self.cost_model.predict_page_us(overflow)
+        return cost
+
     def _fit_budget(self, wave: List[WaveItem], budget_us: float,
-                    shrink_floor: float) -> List[WaveItem]:
+                    shrink_floor: float,
+                    free_slots: Optional[int] = None) -> List[WaveItem]:
         """Shrink ``wave`` until its predicted cost fits ``budget_us``, or
         defer it entirely.  Rows drop youngest-first (the list is
         queue-ordered, so the oldest — the anchor, when this is the anchor's
@@ -304,22 +336,24 @@ class WaveScheduler:
         ``shrink_floor`` of the full wave's predicted tok/s (the
         alpha-dominated regime, where a part-wave pays almost the whole
         dispatch cost — the caller decodes now and retries on a fresh
-        budget, waiving the floor there if SLO compliance is at stake)."""
+        budget, waiving the floor there if SLO compliance is at stake).
+        Cost includes the forced page wave when ``free_slots`` is given —
+        shrinking sheds fresh rows, so it shrinks the page wave too."""
         if not wave:
             return wave
         bucket = bucket_length(wave[0].length, bucket_min=self.bucket_min)
         full_tokens = sum(it.length for it in wave)
-        full_cost = self.cost_model.predict_us(len(wave), bucket)
+        full_cost = self._wave_cost(wave, bucket, free_slots)
         if full_cost <= budget_us:
             return wave
         shrunk = wave
-        while shrunk and self.cost_model.predict_us(len(shrunk),
-                                                    bucket) > budget_us:
+        while shrunk and self._wave_cost(shrunk, bucket,
+                                         free_slots) > budget_us:
             shrunk = shrunk[:-1]
         if not shrunk:
             return []
         tokens = sum(it.length for it in shrunk)
-        cost = self.cost_model.predict_us(len(shrunk), bucket)
+        cost = self._wave_cost(shrunk, bucket, free_slots)
         if tokens * full_cost < shrink_floor * full_tokens * cost:
             return []
         return shrunk
