@@ -54,6 +54,9 @@ _SERVE_METRICS = {
     "serve.decode.sharded": ("decode_sharded", "us", None),
     "serve.park.restore": ("park_restore", "us", "tokens"),
     "serve.park.restore_p95": ("park_restore", "restore_p95_us", "_unit"),
+    "serve.pipeline.overlap": ("pipeline_overlap", "pipelined_us", "tokens"),
+    "serve.pipeline.overlap_eff": ("pipeline_overlap", "overlap_efficiency",
+                                   "_value"),
 }
 
 

@@ -121,7 +121,8 @@ def serve_reservoir(args) -> None:
                      cost_model=cost_model, decode_slo_us=args.decode_slo,
                      decode_wave_tokens=args.decode_wave_tokens,
                      park_host_rows=args.park_host_rows,
-                     cold_dir=args.cold_dir)
+                     cold_dir=args.cold_dir,
+                     pipeline_depth=args.pipeline_depth)
     if args.cold_dir and args.park_host_rows is None:
         raise SystemExit("--cold-dir needs --park-host-rows (the cold tier "
                          "sits behind the host pool)")
@@ -375,6 +376,14 @@ def serve_lm(args) -> None:
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+def _wave_tokens(v: str):
+    """argparse type for --decode-wave-tokens: an int K, or 'auto' for
+    per-flush K-adaptive sizing off the fitted c_dec(B, K) surface."""
+    if v == "auto":
+        return "auto"
+    return int(v)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="recurrentgemma-2b")
@@ -417,12 +426,23 @@ def main():
                     help="split prompts longer than this into sequential "
                          "chunk waves (same slot, bit-exact) so one huge "
                          "prompt cannot monopolize the arena")
-    ap.add_argument("--decode-wave-tokens", type=int, default=1, metavar="K",
+    ap.add_argument("--decode-wave-tokens", type=_wave_tokens, default=1,
+                    metavar="K",
                     help="tokens per interleaved decode wave — each wave is "
                          "ONE fused K-token kernel dispatch (diag step + "
                          "readout + feedback write on-device), so K amortizes "
                          "dispatch overhead and weight traffic at the price "
-                         "of K-token reaction latency to new prefill work")
+                         "of K-token reaction latency to new prefill work; "
+                         "'auto' re-picks K each flush from the fitted "
+                         "c_dec(B, K) surface — largest K whose marginal "
+                         "cost/token still improves, capped by --decode-slo")
+    ap.add_argument("--pipeline-depth", type=int, default=2, metavar="D",
+                    help="in-flight wave window of the pipelined executor: "
+                         "up to D dispatched-but-unmaterialized waves may be "
+                         "outstanding while the host plans/pages ahead "
+                         "(bounded further by --decode-slo via predicted "
+                         "wave cost); 0 = strict synchronous flush — block "
+                         "after every wave (the bit-exact reference mode)")
     ap.add_argument("--decode-slo", type=float, default=None, metavar="US",
                     help="decode-aware planning: bound the predicted prefill "
                          "cost (microseconds) that may accumulate between a "

@@ -404,6 +404,33 @@ class WaveCostModel:
             return max(alpha + beta * b, 1.0)
         return max(self.page_base_us + self.page_per_row_us * b, 1.0)
 
+    def best_decode_k(self, b: int, *, slo_us: Optional[float] = None,
+                      k_max: int = 64) -> int:
+        """K-adaptive decode wave sizing: the largest K (power of two, up to
+        ``k_max``) whose **marginal cost per token still improves** on the
+        fitted ``c_dec(B, K)`` surface, capped so the whole wave's predicted
+        cost stays within ``slo_us`` when given.  On the affine surface
+        cost/token = alpha/K + const is strictly improving in K, so the SLO
+        (or ``k_max``) is what binds — but the scan still walks the fitted
+        surface, because a refit from real measurements need not be affine-
+        monotone after the physical clamps.  Always >= 1: an unsatisfiable
+        SLO degrades to single-token waves, never to no decode at all."""
+        best_k = 1
+        best_cpt = self.predict_decode_us(b, 1)
+        if slo_us is not None and best_cpt > slo_us:
+            return 1
+        k = 2
+        while k <= max(1, int(k_max)):
+            c = self.predict_decode_us(b, k)
+            if slo_us is not None and c > slo_us:
+                break
+            cpt = c / k
+            if cpt >= best_cpt:
+                break                    # marginal improvement stopped
+            best_k, best_cpt = k, cpt
+            k *= 2
+        return best_k
+
     def throughput(self, b: int, t_bucket: int, true_tokens: int) -> float:
         """Predicted true-tokens-per-second of a candidate wave (``b`` rows of
         bucket ``t_bucket`` carrying ``true_tokens`` unpadded tokens)."""

@@ -200,7 +200,8 @@ class ReservoirEngine:
                  chunk_max: Optional[int] = None, autotune: bool = False,
                  cost_model: Optional[WaveCostModel] = None,
                  decode_slo_us: Optional[float] = None,
-                 decode_wave_tokens: int = 1,
+                 decode_wave_tokens=1,
+                 pipeline_depth: int = 2,
                  park_host_rows: Optional[int] = None,
                  cold_dir: Optional[str] = None,
                  _param_batch: bool = False):
@@ -252,12 +253,31 @@ class ReservoirEngine:
             raise ValueError(
                 f"decode_slo_us must be positive (got {decode_slo_us}); "
                 f"use None to disable decode-aware planning")
+        # K-adaptive decode wave sizing: "auto" resolves K per interleaved
+        # flush from the fitted c_dec(B, K) surface (largest K whose
+        # marginal cost/token still improves, capped by the decode SLO)
+        # instead of a static constructor constant.
+        self._decode_k_auto = decode_wave_tokens == "auto"
+        if self._decode_k_auto:
+            decode_wave_tokens = 1      # resolved per flush; 1 until fitted
+        if not isinstance(decode_wave_tokens, (int, np.integer)):
+            raise ValueError(
+                f"decode_wave_tokens must be an int >= 1 or 'auto', "
+                f"got {decode_wave_tokens!r}")
         if decode_wave_tokens < 1:
             raise ValueError(f"decode_wave_tokens must be >= 1, "
                              f"got {decode_wave_tokens}")
         self.decode_slo_us = (None if decode_slo_us is None
                               else float(decode_slo_us))
         self.decode_wave_tokens = int(decode_wave_tokens)
+        # Pipelined wave executor: flush() keeps up to pipeline_depth waves
+        # in flight on the device while the host plans/places the next ones;
+        # 0 = fully synchronous (block after every wave — the bit-exact
+        # baseline the pipeline is tested and benchmarked against).
+        if int(pipeline_depth) < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, "
+                             f"got {pipeline_depth}")
+        self.pipeline_depth = int(pipeline_depth)
         # Paged session store: capacity becomes sessions, not slots.  The
         # arena turns into a cache of hot sessions over a pinned host pool
         # (park_host_rows rows) and an optional disk/fsspec cold tier.
@@ -276,9 +296,13 @@ class ReservoirEngine:
         self._cold_dir = cold_dir
         self.store = None
         if self._park_host_rows is not None:
+            # A synchronous engine (pipeline_depth=0) gets a synchronous
+            # store: no async spill/prefetch lane, so the baseline really is
+            # the old serialized flush end to end.
             self.store = store_mod.SessionStore(
                 self.cfg.n, self.cfg.d_out, self._dtype,
-                host_rows=self._park_host_rows, cold_dir=cold_dir)
+                host_rows=self._park_host_rows, cold_dir=cold_dir,
+                io_workers=2 if self.pipeline_depth > 0 else 0)
         self._use_clock = 0
         self._promote_us: collections.deque = collections.deque(maxlen=4096)
         # Decode-aware planning needs a cost surface to price the candidate
@@ -288,6 +312,7 @@ class ReservoirEngine:
         # persisted observations never mis-price a different machine or
         # model size; a caller-supplied model keeps whatever key it has.
         if cost_model is None and (autotune or decode_slo_us is not None
+                                   or self._decode_k_auto
                                    or self.store is not None):
             cost_model = WaveCostModel(key=cost_key(
                 jax.default_backend(), self.cfg.n, self.cfg.d_out))
@@ -307,7 +332,22 @@ class ReservoirEngine:
                        "decode_us_sum": 0.0, "decode_timed_steps": 0,
                        "page_waves": 0, "page_rows": 0, "page_us_sum": 0.0,
                        "promote_waves": 0, "demote_waves": 0,
+                       "inflight_peak": 0, "host_block_us": 0.0,
+                       "overlap_demotes": 0,
                        "by_bucket": {}}
+        # Pipelined-executor window: dispatched-but-unretired waves, oldest
+        # first.  Each entry carries the lazy output to block on (marker),
+        # the cost model's predicted wave cost (the window bound), the slot
+        # set the wave writes, and the arena value right after its dispatch.
+        # ``_arena_base`` is the arena as of the oldest in-flight wave's
+        # *inputs* — a donation-free backend may gather untouched rows from
+        # it without waiting for the in-flight scans (see _demote_wave);
+        # ``_base_valid`` drops to False whenever an untracked path mutates
+        # the arena while waves are in flight.
+        self._inflight: collections.deque = collections.deque()
+        self._arena_base = None
+        self._base_valid = False
+        self._base_dirty: set = set()
         self._wave_log: collections.deque = collections.deque(maxlen=256)
         # Decode latency bookkeeping: the planning clock (predicted/measured
         # prefill cost charged since the last decode wave), the wall stamp
@@ -330,6 +370,12 @@ class ReservoirEngine:
         # updates in place — never copies per wave (donation elsewhere is a
         # no-op that XLA warns about, so it is gated).
         donate = (2,) if jax.default_backend() == "tpu" else ()
+        # Donation-safety flag for the pipelined executor: with the arena
+        # donated (TPU), a superseded arena's buffer may already be reused
+        # in place, so gathering from a pre-wave arena value while the wave
+        # is in flight would read freed memory — the overlap-demote fast
+        # path is gated off and demotes fall back to the ordered gather.
+        self._donate = bool(donate)
         self._closed_jit = jax.jit(
             functools.partial(arena_mod.closed_loop_fused,
                               batched=self._batched,
@@ -338,6 +384,15 @@ class ReservoirEngine:
         self._wave_jit = jax.jit(
             functools.partial(arena_mod.prefill_wave, batched=self._batched),
             static_argnames=("method", "chunk", "want_outputs"))
+        # Paging bundles as ONE executable each: eagerly, place_many /
+        # release_many / gather_rows cost several device dispatches per
+        # wave, and under the pipelined executor every dispatch also draws
+        # down the backend's bounded in-flight-computation budget — eager
+        # paging ops exhaust it mid-round and the "overlapped" host work
+        # stalls on dispatch backpressure behind the in-flight scan.
+        self._place_jit = jax.jit(arena_mod.place_many)
+        self._release_jit = jax.jit(arena_mod.release_many)
+        self._gather_jit = jax.jit(arena_mod.gather_rows)
 
     def _fresh_arena(self) -> arena_mod.SlotArena:
         ar = arena_mod.make_arena(self.cfg.n, self.cfg.d_out, self.max_slots,
@@ -357,7 +412,8 @@ class ReservoirEngine:
                          autotune: bool = False,
                          cost_model: Optional[WaveCostModel] = None,
                          decode_slo_us: Optional[float] = None,
-                         decode_wave_tokens: int = 1,
+                         decode_wave_tokens=1,
+                         pipeline_depth: int = 2,
                          park_host_rows: Optional[int] = None,
                          cold_dir: Optional[str] = None
                          ) -> "ReservoirEngine":
@@ -382,6 +438,7 @@ class ReservoirEngine:
                    autotune=autotune, cost_model=cost_model,
                    decode_slo_us=decode_slo_us,
                    decode_wave_tokens=decode_wave_tokens,
+                   pipeline_depth=pipeline_depth,
                    park_host_rows=park_host_rows, cold_dir=cold_dir,
                    _param_batch=True)
 
@@ -460,19 +517,123 @@ class ReservoirEngine:
             self.cost_model.observe_page(rows, us)
         self._decode_clock_us += us
 
+    # ---------------------------------------------------- pipelined executor
+    def _inflight_admit(self, marker, pred_us: float, slots,
+                        arena_before) -> None:
+        """Admit a freshly dispatched wave into the in-flight window, then
+        retire from the front until the window is legal again: at most
+        ``pipeline_depth`` waves deep, AND — when a decode SLO is set — the
+        summed *predicted* cost of the in-flight waves stays under it (an
+        unbounded dispatch queue is exactly how async dispatch blows a
+        latency SLO: every queued wave is latency someone's next token must
+        wait behind)."""
+        if not self._inflight:
+            # Window was empty: the pre-dispatch lineage is fully retired,
+            # so the arena value the wave read from is a safe gather source
+            # for rows no in-flight wave touches.  The base is captured
+            # fresh, past every earlier out-of-band mutation — the taint
+            # set starts clean.
+            self._arena_base = arena_before
+            self._base_valid = True
+            self._base_dirty = set()
+        self._inflight.append({"marker": marker, "pred_us": float(pred_us),
+                               "slots": frozenset(slots),
+                               "arena_after": self.arena})
+        while len(self._inflight) > self.pipeline_depth or (
+                self.decode_slo_us is not None and len(self._inflight) > 1
+                and sum(e["pred_us"] for e in self._inflight)
+                > self.decode_slo_us):
+            self._inflight_retire()
+        s = self._stats
+        s["inflight_peak"] = max(s["inflight_peak"], len(self._inflight))
+
+    def _inflight_retire(self) -> None:
+        """Block on the oldest in-flight wave and advance the safe gather
+        base past it.  The blocked time is the host's pipeline-idle time —
+        accounted so the overlap-efficiency benchmark can report
+        1 - host_idle/wall."""
+        e = self._inflight.popleft()
+        t0 = time.perf_counter()
+        jax.block_until_ready(e["marker"])
+        self._stats["host_block_us"] += (time.perf_counter() - t0) * 1e6
+        if self._base_valid:
+            self._arena_base = e["arena_after"]
+        if not self._inflight:
+            self._arena_base = None
+
+    def _drain_inflight(self) -> None:
+        while self._inflight:
+            self._inflight_retire()
+
+    def _window_settled(self) -> None:
+        """The caller just blocked on a value downstream of every in-flight
+        wave (a decode wave's tokens, a promote's scatter): the whole window
+        is materialized — forget it without further blocking."""
+        self._inflight.clear()
+        self._pipeline_invalidate()
+
+    def _pipeline_invalidate(self) -> None:
+        """An arena mutation outside the tracked wave path whose touched
+        rows are unknown (an unmasked decode, a wholesale arena swap): the
+        pre-wave gather base can no longer vouch for any row — fall back to
+        ordered gathers until the window turns over."""
+        self._arena_base = None
+        self._base_valid = False
+        self._base_dirty = set()
+
+    def _pipeline_taint(self, slots) -> None:
+        """A *known-slot* arena mutation outside the tracked wave path
+        (evict release, single-session place, teacher-forcing): the gather
+        base stays valid for every OTHER row — only the touched slots fall
+        back to ordered gathers.  Slot-granular where
+        :meth:`_pipeline_invalidate` is wholesale, so steady churn (evicts
+        every round) doesn't permanently kill the overlap-demote fast path.
+        """
+        if self._base_valid:
+            self._base_dirty.update(slots)
+
+    def _inflight_dirty_slots(self) -> set:
+        dirty: set = set()
+        for e in self._inflight:
+            dirty |= e["slots"]
+        return dirty
+
     def _demote_wave(self, sids: List[Hashable]) -> None:
         """Park ``sids``: gather their slot rows in ONE device->host
         transfer, free the slots in ONE scatter, and hand the rows (plus
         each session's accounting struct, verbatim) to the store.  The
-        ``device_get`` is inherently blocking, so the wave is always timed.
-        """
+        ``device_get`` is inherently blocking — but on a donation-free
+        backend, a pipelined engine gathers from the **pre-wave arena
+        value** when no in-flight wave touches the victim slots: those rows
+        are bit-identical in both values (waves scatter only their own
+        slots), and the older value does not depend on the in-flight scans,
+        so the page-out overlaps them instead of draining the window.  With
+        the arena donated (TPU) the superseded buffer may already be reused
+        in place, so the fast path is gated off (donation safety)."""
         if not sids:
             return
         slots = [self.sessions[s].slot for s in sids]
         idx = jnp.asarray(slots)
-        t0 = time.perf_counter()
-        states, ys = jax.device_get((self.arena.states[idx],
-                                     self.arena.y_prev[idx]))
+        if (self._inflight and self._base_valid and not self._donate
+                and self._arena_base is not None
+                and not (set(slots) & (self._inflight_dirty_slots()
+                                       | self._base_dirty))):
+            # Overlap fast path: the base value was materialized by the
+            # last retire, so device_get here waits only on its own ready
+            # event and copies — no gather computation is enqueued.  An
+            # enqueued gather would serialize behind the in-flight scan on
+            # backends that execute in dispatch order (CPU), turning the
+            # "overlap" into a hidden drain.  The row select runs on host.
+            base = self._arena_base
+            self._stats["overlap_demotes"] += 1
+            t0 = time.perf_counter()
+            all_states, all_ys = jax.device_get((base.states, base.y_prev))
+            sel = np.asarray(slots)
+            states, ys = all_states[sel], all_ys[sel]
+        else:
+            t0 = time.perf_counter()
+            states, ys = jax.device_get(
+                self._gather_jit(self.arena, idx))
         us = (time.perf_counter() - t0) * 1e6
         stats = []
         for sid in sids:
@@ -480,7 +641,7 @@ class ReservoirEngine:
             self._slots[st.slot] = None
             st.slot = -1
             stats.append(st)
-        self.arena = arena_mod.release_many(self.arena, idx)
+        self.arena = self._release_jit(self.arena, idx)
         self.store.park_many(sids, np.asarray(states), np.asarray(ys),
                              stats)
         self._note_page(len(sids), us, promote=False)
@@ -503,10 +664,15 @@ class ReservoirEngine:
             st.slot = slot
             self.sessions[sid] = st
             slots.append(slot)
-        self.arena = arena_mod.place_many(self.arena, jnp.asarray(slots),
-                                          jnp.asarray(states),
-                                          jnp.asarray(ys))
+        self.arena = self._place_jit(self.arena, jnp.asarray(slots),
+                                     jnp.asarray(states), jnp.asarray(ys))
+        # A promote stays blocking even in the pipelined executor: it is on
+        # someone's decode critical path, and an unmaterialized state is
+        # still latency — the measured restore latency must be real.  The
+        # block also materializes every in-flight wave (the scatter depends
+        # on them), so the window settles for free.
         jax.block_until_ready(self.arena.states)
+        self._window_settled()
         us = (time.perf_counter() - t0) * 1e6
         self._promote_us.append(us)
         self._note_page(len(sids), us, promote=True)
@@ -521,6 +687,11 @@ class ReservoirEngine:
         parked = [s for s in sids if s in self.store]
         if not parked:
             return
+        # Kick the cold->host reads onto the store's async lane now: they
+        # overlap the demote wave below (and any in-flight prefill), and
+        # _promote_wave's fetch consumes the per-session futures — blocking
+        # only if a read is genuinely still in flight when needed.
+        self.store.prefetch_many(parked)
         need = len(parked) - self.free_slots
         if need > 0:
             victims = self._demotable(set(sids) | set(protect))[:need]
@@ -723,6 +894,13 @@ class ReservoirEngine:
                     raise KeyError(
                         f"decode_sids must be ready sessions; not ready: "
                         f"{missing!r}")
+            if self._decode_k_auto and self.cost_model is not None:
+                # K-adaptive wave sizing: resolve decode_wave_tokens for
+                # this flush from the fitted c_dec(B, K) surface — largest
+                # K whose marginal cost/token still improves, capped so the
+                # whole wave fits the decode SLO.
+                self.decode_wave_tokens = self.cost_model.best_decode_k(
+                    max(1, len(decode_sids)), slo_us=self.decode_slo_us)
         results: Dict[Hashable, object] = {}
         protect = frozenset(decode_sids)
         waves_run = 0
@@ -772,6 +950,20 @@ class ReservoirEngine:
             self._make_room(wave, protect)
             self._run_wave(wave, capacity, results, method=method,
                            chunk=chunk, want_outputs=want_outputs)
+            if (self.pipeline_depth > 0 and not self._autotune
+                    and self.store is not None):
+                # Plan one wave ahead against *predicted* post-wave
+                # occupancy (pure host bookkeeping — the slot table is
+                # already updated at dispatch time, no device ground truth
+                # needed) and run the planned wave's page-out NOW: the
+                # demote gather reads untouched rows from the pre-wave
+                # arena value, so it overlaps the in-flight scan instead of
+                # draining the pipeline.  The next iteration's next_wave
+                # pops exactly this wave (peek is exact), and _make_room
+                # then finds the slots already free.
+                planned = self.scheduler.peek_wave(self._capacity(protect))
+                if planned:
+                    self._make_room(planned, protect)
         return results
 
     def _decode_budget(self, n_decoders: int) -> float:
@@ -793,7 +985,7 @@ class ReservoirEngine:
 
     def _dispatch_decode(self, launch, sids, *, tokens: int,
                          block: bool, interleave: bool = False,
-                         kind: str = "closed_loop"):
+                         kind: str = "closed_loop", slots=None):
         """Shared wrapper around every decode dispatch: optional wall timing
         (always when ``block``, else only under autotune), decode-surface
         observation (autotune only — there every prefill wave was itself
@@ -801,19 +993,38 @@ class ReservoirEngine:
         block also drains queued prefill waves, and that drain time would
         poison the fit), and the gap/counter/clock accounting.  ``launch``
         performs the jitted call, stores the new arena, and returns the
-        output array to block on."""
+        output array to block on.  ``slots`` (pipelined, unblocked path):
+        the slot set the dispatch writes — known exactly (it is the decode
+        mask), so the dispatch is admitted into the in-flight window as a
+        tracked writer instead of invalidating the demote fast path's base
+        arena."""
         timed = (block or self._autotune) and sids and tokens
+        arena_before = self.arena
         t0 = time.perf_counter() if timed else None
         out = launch()
         us = None
         if t0 is not None:
             jax.block_until_ready(out)
+            # ``out`` is downstream of every queued prefill wave (they share
+            # the arena), so the whole in-flight window just materialized —
+            # retire it without paying another block per entry.
+            self._window_settled()
             us = (time.perf_counter() - t0) * 1e6
             if self._autotune:
                 # The whole K-token wave is ONE observation on the
                 # c_dec(B, K) surface — dividing by K would erase the very
                 # dispatch amortization the fused kernel buys.
                 self.cost_model.observe_decode(len(sids), us, k=tokens)
+        elif self.pipeline_depth > 0 and slots is not None:
+            pred = (self.cost_model.predict_decode_us(len(sids), tokens)
+                    if self.cost_model is not None and sids and tokens
+                    else 1.0)
+            self._inflight_admit(out, pred, set(slots), arena_before)
+        else:
+            # Unblocked decode dispatch mutating arena rows the in-flight
+            # bookkeeping didn't record — the demote fast path's base arena
+            # is no longer trustworthy.
+            self._pipeline_invalidate()
         if sids and tokens:
             self._note_decode(sids, us=us, tokens=tokens,
                               interleave=interleave, kind=kind)
@@ -931,6 +1142,8 @@ class ReservoirEngine:
         # One batched placement for the whole wave's admissions (per-slot
         # .at[] sets are device dispatches; at wave sizes they'd dwarf the
         # scan).  Continuation rows already own their slot.
+        arena_before = self.arena
+        touched: set = set()
         fresh = [it for it in wave if it.first]
         if fresh:
             h0s = np.zeros((len(fresh), self.cfg.n), self._dtype)
@@ -947,15 +1160,22 @@ class ReservoirEngine:
                 if it.req.y0 is not None:
                     y0s[i] = np.asarray(it.req.y0)
                 slots.append(slot)
-            self.arena = arena_mod.place_many(self.arena, jnp.asarray(slots),
-                                              jnp.asarray(h0s),
-                                              jnp.asarray(y0s))
+            touched.update(slots)
+            self.arena = self._place_jit(self.arena, jnp.asarray(slots),
+                                         jnp.asarray(h0s), jnp.asarray(y0s))
         prompts = [it for it in wave if it.req.u is not None]
         if not prompts:
             self._record_wave(0, len(wave), len(fresh), capacity, 0, None)
+            if fresh and self.pipeline_depth > 0 and not self._autotune:
+                self._inflight_admit(self.arena.states, 1.0, touched,
+                                     arena_before)
             return                  # admission-only wave (bucket 0)
-        t_bucket = bucket_length(prompts[0].length,
-                                 bucket_min=self.scheduler.bucket_min)
+        # Max over the rows, not prompts[0]: a padded-up remainder chunk
+        # (scheduler mixed-kind waves) rides a wave whose bucket is set by
+        # its longest row; its own padded tail steps are inert.
+        t_bucket = max(bucket_length(it.length,
+                                     bucket_min=self.scheduler.bucket_min)
+                       for it in prompts)
         bw = len(prompts)
         u_pad = np.zeros((bw, t_bucket, self.cfg.d_in), self._dtype)
         lengths = np.zeros((bw,), np.int32)
@@ -967,11 +1187,20 @@ class ReservoirEngine:
             lengths[i] = t
             if yt_pad is not None:
                 yt_pad[i, :t] = it.req.y_teacher[it.start:it.stop]
-        slots = jnp.asarray([self.sessions[it.sid].slot for it in prompts])
+        slot_list = [self.sessions[it.sid].slot for it in prompts]
+        touched.update(slot_list)
+        slots = jnp.asarray(slot_list)
         wave_method = method
         if wave_method == "auto" and self.params.mode == "diag":
             wave_method = dispatch.resolve_method(t_bucket, chunk=chunk)
-        t0 = time.perf_counter() if self._autotune else None
+        t0 = None
+        if self._autotune:
+            # Settle predecessors BEFORE starting the clock: with a non-empty
+            # in-flight window, block_until_ready on this wave would also pay
+            # for every queued predecessor and the timed c(B,T) record would
+            # be inflated by work that isn't this wave's.
+            self._drain_inflight()
+            t0 = time.perf_counter()
         self.arena, out = self._wave_jit(
             self.params, self.w_out, self.arena, slots,
             jnp.asarray(u_pad), jnp.asarray(lengths),
@@ -984,6 +1213,18 @@ class ReservoirEngine:
             jax.block_until_ready(self.arena.states)
             us = (time.perf_counter() - t0) * 1e6
             self.cost_model.observe(bw, t_bucket, us)
+        elif self.pipeline_depth == 0:
+            # Strict synchronous baseline: materialize every wave before the
+            # host plans the next one.  This is the reference the pipelined
+            # path must stay bit-exact against.
+            tb0 = time.perf_counter()
+            jax.block_until_ready(self.arena.states)
+            self._stats["host_block_us"] += (time.perf_counter() - tb0) * 1e6
+        else:
+            pred = (self.cost_model.predict_us(bw, t_bucket)
+                    if self.cost_model is not None else 1.0)
+            self._inflight_admit(self.arena.states, pred, touched,
+                                 arena_before)
         tokens = int(lengths.sum())
         self._record_wave(t_bucket, len(wave), len(fresh), capacity,
                           tokens, us)
@@ -1066,7 +1307,15 @@ class ReservoirEngine:
         over the last 4096 promote waves (every promote blocks until the
         states are resident — an unmaterialized state is still latency),
         and ``store`` the tier breakdown (host/cold rows, pool occupancy,
-        epoch)."""
+        epoch).
+
+        Pipeline counters: ``pipeline_inflight`` / ``pipeline_inflight_peak``
+        the current / high-water in-flight wave window,
+        ``host_block_us`` the cumulative wall time the host spent inside
+        ``block_until_ready`` (the overlap-efficiency numerator:
+        1 − host_block/wall), and ``overlap_demotes`` how many demote waves
+        gathered from the pre-wave base arena instead of waiting for the
+        in-flight window."""
         s = self._stats
         waves = s["waves"]
         gaps = (np.asarray(self._decode_gaps_us, float)
@@ -1114,6 +1363,11 @@ class ReservoirEngine:
                                   else float(np.percentile(gaps, 50))),
             "decode_gap_p95_us": (None if gaps is None
                                   else float(np.percentile(gaps, 95))),
+            "pipeline_depth": self.pipeline_depth,
+            "pipeline_inflight": len(self._inflight),
+            "pipeline_inflight_peak": s["inflight_peak"],
+            "host_block_us": s["host_block_us"],
+            "overlap_demotes": s["overlap_demotes"],
             "by_bucket": {t: dict(v) for t, v in s["by_bucket"].items()},
             "wave_log": list(self._wave_log),
             "wave_costs": wave_costs,
@@ -1127,6 +1381,7 @@ class ReservoirEngine:
         self.arena = arena_mod.place(self.arena, slot,
                                      h0.astype(self._dtype),
                                      y0.astype(self._dtype))
+        self._pipeline_taint([slot])
         self._slots[slot] = sid
         self.sessions[sid] = SessionStats(slot=slot)
         return slot
@@ -1191,6 +1446,10 @@ class ReservoirEngine:
         y = self.arena.y_prev[st.slot]
         self._slots[st.slot] = None
         self.arena = arena_mod.release(self.arena, st.slot)
+        # The freed slot may be re-placed outside wave bookkeeping — its
+        # base row can no longer vouch for it, but every other row is
+        # untouched: taint the one slot instead of dropping the base.
+        self._pipeline_taint([st.slot])
         for req in self.scheduler:
             if req.u is None:
                 self.scheduler.cancel(req.sid)
@@ -1202,6 +1461,8 @@ class ReservoirEngine:
         """Drop all sessions (active + queued) and zero the state arena.
         Keeps the compiled step functions, the learned cost model, and the
         cumulative :meth:`stats` counters — cheap way to reuse an engine."""
+        self._drain_inflight()
+        self._pipeline_invalidate()
         self.arena = self._fresh_arena()
         self._slots = [None] * self.max_slots
         self.sessions.clear()
@@ -1353,6 +1614,8 @@ class ReservoirEngine:
             jnp.asarray([t], jnp.int32),
             None if y_teacher is None else y_teacher[None],
             method=method, chunk=chunk, want_outputs=want_outputs)
+        # Arena write outside wave bookkeeping, but to a known slot.
+        self._pipeline_taint([st.slot])
         st.tokens_prefilled += t
         return None if out is None else out[0]
 
@@ -1398,7 +1661,8 @@ class ReservoirEngine:
             return y
 
         y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False,
-                                  kind="step")
+                                  kind="step",
+                                  slots=[stats[sid].slot for sid in vecs])
         if self.readout is None:
             return {}
         y = np.asarray(y)
@@ -1433,6 +1697,13 @@ class ReservoirEngine:
         st = self._active(sid)
         st.last_use = self._tick()
         y = jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out)
+        # Teacher-forcing writes arena rows outside wave bookkeeping; the
+        # mean-ensemble branch rewrites every ready session's feedback row.
+        if self.ensemble == "mean":
+            self._pipeline_taint(self.sessions[s].slot
+                                 for s in self.ready_sessions)
+        else:
+            self._pipeline_taint([st.slot])
         if self.ensemble == "mean":
             slots = jnp.asarray([self.sessions[s].slot
                                  for s in self.ready_sessions])
@@ -1479,7 +1750,8 @@ class ReservoirEngine:
         # measurement) — the per-token cost feeds the decode surface the
         # decode-aware planner budgets against.
         ys = self._dispatch_decode(launch, targets, tokens=n_steps,
-                                   block=False)
+                                   block=False,
+                                   slots=[stats[s].slot for s in targets])
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
         # callers (pipelined serving loops) stay async; convert to host
         # memory on their own schedule (autotune forces the sync above).

@@ -49,6 +49,13 @@ Two orthogonal extensions ride on the same queue:
   each candidate wave ``c_page(fresh - free_slots)`` on top of its prefill
   cost, so promote/demote waves compete with prefill and decode under the
   same latency budget instead of being a blind spot.
+* **Pipelined planning** (``peek_wave``): the exact wave ``next_wave``
+  would pop, computed without popping — the pipelined engine plans wave
+  k+1 against predicted post-wave occupancy while wave k is still in
+  flight.  **Mixed-kind waves** ride on :meth:`bucket_of`: a chunked
+  prompt's remainder chunk pads up into the full chunk bucket when the
+  cost model prices the extra inert scan steps below the extra wave
+  dispatch a separate small wave would cost.
 
 Scheduling invariants, all pinned by test:
 
@@ -204,10 +211,39 @@ class WaveScheduler:
             return self.chunk_max
         return rem
 
+    def _base_bucket(self, req: PrefillRequest) -> int:
+        """The unpadded bucket of the request's next chunk."""
+        return bucket_length(self._next_len(req), bucket_min=self.bucket_min)
+
     def bucket_of(self, req: PrefillRequest) -> int:
         """Bucket the request's *next chunk* rides (== the whole prompt's
-        bucket when chunking is off)."""
-        return bucket_length(self._next_len(req), bucket_min=self.bucket_min)
+        bucket when chunking is off).
+
+        **Mixed-kind waves**: a chunked prompt's *remainder* chunk (shorter
+        than ``chunk_max``) pads **up** into the full chunk bucket when the
+        cost model says the extra inert scan steps are cheaper than the
+        extra wave dispatch a separate small-bucket wave would cost — i.e.
+        when other requests are riding the chunk bucket right now, so the
+        remainder can join their wave as one more row (marginal cost ~
+        ``beta_T``) instead of paying its own ``alpha_T``.  Padded rows are
+        bit-exact by construction: the engine pads every row to the wave
+        bucket and gathers the final state at the true length, so the extra
+        steps are inert."""
+        b = self._base_bucket(req)
+        if (self.cost_model is None or self.chunk_max is None
+                or req.done == 0):
+            return b
+        b_chunk = bucket_length(self.chunk_max, bucket_min=self.bucket_min)
+        if b >= b_chunk:
+            return b
+        others = sum(1 for r in self._queue
+                     if r.sid != req.sid and self._base_bucket(r) == b_chunk)
+        if not others:
+            return b                     # no wave to join — padding is waste
+        sep = self.cost_model.predict_us(1, b)
+        joined = (self.cost_model.predict_us(others + 1, b_chunk)
+                  - self.cost_model.predict_us(others, b_chunk))
+        return b_chunk if joined < sep else b
 
     def _item(self, req: PrefillRequest) -> WaveItem:
         ln = self._next_len(req)
@@ -286,10 +322,47 @@ class WaveScheduler:
         compares same-capacity plans, where the page term is near-equal);
         the budget fit is where an unpriced page wave would break an SLO.
         """
+        wave, deferring, anchor = self._plan_wave(capacity,
+                                                  budget_us=budget_us,
+                                                  shrink_floor=shrink_floor,
+                                                  free_slots=free_slots)
+        if not wave:
+            # Deferred for decode (or nothing runnable): nothing pops and
+            # commitments are untouched — the engine retries after its
+            # decode wave with a fresh budget, so the lookahead re-plans
+            # the same queue.
+            return []
+        # Only a *popped* wave consumes or creates a commitment: a pending
+        # deferral is honored by this wave (the anchor leads it), and a new
+        # one is recorded only when the lookahead's alternative actually ran.
+        self._deferred = anchor.sid if deferring else None
+        return self._pop(wave)
+
+    def peek_wave(self, capacity: int, *,
+                  budget_us: Optional[float] = None,
+                  shrink_floor: float = _SHRINK_EFFICIENCY,
+                  free_slots: Optional[int] = None) -> List[WaveItem]:
+        """The wave :meth:`next_wave` would pop right now, **without popping
+        it** — no queue mutation, no deferral commitment, no chunk cursor
+        advance.  The pipelined engine plans wave *k+1* against *predicted*
+        post-wave occupancy while wave *k* is still in flight on the device:
+        planning is pure host bookkeeping, so the pipeline never drains
+        waiting for ground truth it can compute.  The peek is exact: called
+        with the same arguments on the same queue state, ``next_wave``
+        returns precisely this wave (pinned by test)."""
+        wave, _, _ = self._plan_wave(capacity, budget_us=budget_us,
+                                     shrink_floor=shrink_floor,
+                                     free_slots=free_slots)
+        return wave
+
+    def _plan_wave(self, capacity: int, *, budget_us, shrink_floor,
+                   free_slots):
+        """Shared planning core of :meth:`next_wave` / :meth:`peek_wave`:
+        returns ``(wave, deferring, anchor)`` without mutating anything."""
         capacity = max(0, int(capacity))
         anchor = self._anchor(capacity)
         if anchor is None:
-            return []
+            return [], False, None
         abucket = self.bucket_of(anchor)
         wave = self._gather(abucket, capacity)
         defer_allowed = (self.cost_model is not None
@@ -302,16 +375,7 @@ class WaveScheduler:
         if budget_us is not None and self.cost_model is not None:
             wave = self._fit_budget(wave, budget_us, shrink_floor,
                                     free_slots=free_slots)
-            if not wave:
-                # Deferred for decode: nothing pops and commitments are
-                # untouched — the engine retries after its decode wave with
-                # a fresh budget, so the lookahead re-plans the same queue.
-                return []
-        # Only a *popped* wave consumes or creates a commitment: a pending
-        # deferral is honored by this wave (the anchor leads it), and a new
-        # one is recorded only when the lookahead's alternative actually ran.
-        self._deferred = anchor.sid if deferring else None
-        return self._pop(wave)
+        return wave, deferring, anchor
 
     def _wave_cost(self, wave: List[WaveItem], bucket: int,
                    free_slots: Optional[int]) -> float:
@@ -341,7 +405,10 @@ class WaveScheduler:
         shrinking sheds fresh rows, so it shrinks the page wave too."""
         if not wave:
             return wave
-        bucket = bucket_length(wave[0].length, bucket_min=self.bucket_min)
+        # Max over the rows, not wave[0]: a padded-up remainder chunk rides
+        # a wave whose bucket is set by its longest row.
+        bucket = max(bucket_length(it.length, bucket_min=self.bucket_min)
+                     for it in wave)
         full_tokens = sum(it.length for it in wave)
         full_cost = self._wave_cost(wave, bucket, free_slots)
         if full_cost <= budget_us:

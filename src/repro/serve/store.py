@@ -27,6 +27,20 @@ table; movement between the tiers is always whole waves:
 ``park_many`` (demote) and ``fetch_many`` (promote/evict) move K sessions
 with one pool copy or one batch of record reads.
 
+**Async I/O lane** (``io_workers``): host->cold spills and cold->host
+prefetches run on a small thread pool with **per-session futures** — the
+table metadata (tier, path) updates synchronously, only the file bytes move
+in the background.  A caller blocks on a session's future *only when its
+data is actually needed* (``fetch_many`` / ``peek`` / ``drain_io``), so a
+demote wave's spill overlaps the next wave's device scan instead of
+serializing behind ``np.savez``.  Every prefetch future is tagged with the
+store **epoch at submit time**: a completion that lands after the epoch has
+moved on (an engine restore) is discarded and the record re-read from the
+current table's path, so async completion order can never resurrect a stale
+epoch's data (pinned by hypothesis property).  ``io_workers=0`` restores
+fully synchronous I/O — the bit-exact baseline the pipelined engine is
+tested against.
+
 Paging is exact by construction: rows move through ``jax.device_get`` /
 host->device ``place_many`` with no dtype change, so a
 park -> spill -> restore round trip is bit-identical to never parking
@@ -46,6 +60,7 @@ import dataclasses
 import json
 import os
 import shutil
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
@@ -146,7 +161,8 @@ class SessionStore:
     """
 
     def __init__(self, n: int, d_out: int, dtype, *, host_rows: int,
-                 cold_dir: Optional[str] = None, epoch: int = 0):
+                 cold_dir: Optional[str] = None, epoch: int = 0,
+                 io_workers: int = 2, _executor=None):
         self.n = int(n)
         self.d_out = int(d_out)
         self.dtype = np.dtype(dtype)
@@ -155,6 +171,82 @@ class SessionStore:
         self.epoch = int(epoch)
         self._seq = 0                    # per-epoch cold record counter
         self.table: Dict[Hashable, ParkedSession] = {}
+        # Async I/O lane: spill writes and prefetch reads run here; the
+        # executor is created lazily (most stores never spill).  io_workers=0
+        # keeps every file touch synchronous.  ``_executor`` is a test seam:
+        # injecting a manually-stepped executor lets the epoch-guard property
+        # drive completions in adversarial orders deterministically.
+        self.io_workers = int(io_workers)
+        self._io = _executor
+        #: sid -> Future of an in-flight host->cold record write.
+        self._spills: Dict[Hashable, Future] = {}
+        #: sid -> (submit-time epoch, Future of a cold->host record read).
+        self._prefetch: Dict[Hashable, Tuple[int, Future]] = {}
+
+    # ------------------------------------------------------------ async I/O
+    def _executor_or_none(self):
+        if self._io is None and self.io_workers > 0:
+            self._io = ThreadPoolExecutor(
+                max_workers=self.io_workers,
+                thread_name_prefix="session-store-io")
+        return self._io
+
+    def _write_record(self, path: str, state, y_prev) -> None:
+        with _open(path, "wb") as f:
+            np.savez(f, state=state, y_prev=y_prev)
+
+    def _read_record(self, path: str) -> Tuple[np.ndarray, np.ndarray]:
+        with _open(path, "rb") as f:
+            with np.load(f) as rec:
+                return rec["state"].copy(), rec["y_prev"].copy()
+
+    def _wait_spill(self, sid: Hashable) -> None:
+        """Resolve ``sid``'s in-flight spill write, if any — the one point a
+        cold read may block on a pending write (write errors surface here,
+        at the first use of the data, not silently in a worker thread)."""
+        fut = self._spills.pop(sid, None)
+        if fut is not None:
+            fut.result()
+
+    def prefetch_many(self, sids) -> int:
+        """Start cold->host reads for the cold-tier sessions in ``sids``;
+        returns how many reads were submitted.  Purely advisory: the data
+        lands in per-session futures that :meth:`fetch_many` consumes — a
+        prefetch never mutates the table, and a prefetch whose epoch goes
+        stale before consumption is discarded unread (the epoch guard).
+        No-op with ``io_workers=0``."""
+        ex = self._executor_or_none()
+        if ex is None:
+            return 0
+        n = 0
+        for sid in sids:
+            entry = self.table.get(sid)
+            if (entry is None or entry.tier != "cold"
+                    or sid in self._prefetch):
+                continue
+            spill = self._spills.get(sid)
+            path = entry.path
+
+            def task(path=path, spill=spill):
+                if spill is not None:   # record may still be being written
+                    spill.result()
+                return self._read_record(path)
+
+            self._prefetch[sid] = (self.epoch, ex.submit(task))
+            n += 1
+        return n
+
+    def drain_io(self) -> None:
+        """Block until every in-flight spill and prefetch has completed.
+        Spill errors propagate; prefetch results stay buffered (fresh) or
+        are dropped (stale epoch).  Snapshotting calls this so every cold
+        record the manifest references is durable on disk."""
+        for sid in list(self._spills):
+            self._wait_spill(sid)
+        for sid, (epoch, fut) in list(self._prefetch.items()):
+            fut.result()
+            if epoch != self.epoch:
+                self._prefetch.pop(sid, None)
 
     # ------------------------------------------------------------- queries
     def __contains__(self, sid: Hashable) -> bool:
@@ -176,7 +268,9 @@ class SessionStore:
                 "cold": len(self.table) - host,
                 "host_rows": self.pool.rows,
                 "host_rows_free": self.pool.free,
-                "epoch": self.epoch}
+                "epoch": self.epoch,
+                "io_spills_inflight": len(self._spills),
+                "io_prefetch_inflight": len(self._prefetch)}
 
     # ------------------------------------------------------------- parking
     def park_many(self, sids, states, y_prevs, stats_list) -> None:
@@ -221,12 +315,22 @@ class SessionStore:
                 f"host pool full ({self.pool.rows} rows) and no cold_dir "
                 f"configured — pass cold_dir= to spill LRU sessions to disk")
         host.sort()
+        ex = self._executor_or_none()
         for _, sid in host[:k]:
             entry = self.table[sid]
             path = self._cold_path()
-            with _open(path, "wb") as f:
-                np.savez(f, state=self.pool.states[entry.row],
-                         y_prev=self.pool.y_prev[entry.row])
+            if ex is not None:
+                # Async lane: snapshot the row (the pool slot is reused the
+                # moment it is released) and let the write land in the
+                # background — the table flips to cold *now*, only the bytes
+                # are in flight.  Readers resolve the future via _wait_spill.
+                state = self.pool.states[entry.row].copy()
+                y_prev = self.pool.y_prev[entry.row].copy()
+                self._spills[sid] = ex.submit(self._write_record, path,
+                                              state, y_prev)
+            else:
+                self._write_record(path, self.pool.states[entry.row],
+                                   self.pool.y_prev[entry.row])
             self.pool.release(entry.row)
             entry.tier, entry.row, entry.path = "cold", None, path
 
@@ -256,12 +360,25 @@ class SessionStore:
                 y_prevs[i] = self.pool.y_prev[entry.row]
                 self.pool.release(entry.row)
             else:
-                with _open(entry.path, "rb") as f:
-                    with np.load(f) as rec:
-                        states[i] = rec["state"]
-                        y_prevs[i] = rec["y_prev"]
+                states[i], y_prevs[i] = self._read_cold(sid, entry)
             stats_list.append(entry.stats)
         return states, y_prevs, stats_list
+
+    def _read_cold(self, sid: Hashable,
+                   entry: ParkedSession) -> Tuple[np.ndarray, np.ndarray]:
+        """One cold record, preferring a completed prefetch.  This is the
+        epoch guard: a prefetch submitted under an older epoch is discarded
+        unread — whatever its completion order relative to the epoch bump —
+        and the record re-read from the entry's (current-table) path."""
+        pre = self._prefetch.pop(sid, None)
+        if pre is not None:
+            epoch, fut = pre
+            if epoch == self.epoch:
+                return fut.result()    # blocks only if still in flight
+            # Stale epoch: drop the buffered read on the floor.  The future
+            # may still be running; its result is never observed.
+        self._wait_spill(sid)
+        return self._read_record(entry.path)
 
     def peek(self, sid: Hashable) -> Tuple[np.ndarray, np.ndarray]:
         """Read a parked session's ``(state, y_prev)`` without promoting it
@@ -270,18 +387,21 @@ class SessionStore:
         if entry.tier == "host":
             return (self.pool.states[entry.row].copy(),
                     self.pool.y_prev[entry.row].copy())
-        with _open(entry.path, "rb") as f:
-            with np.load(f) as rec:
-                return rec["state"].copy(), rec["y_prev"].copy()
+        self._wait_spill(sid)
+        return self._read_record(entry.path)
 
     def clear(self) -> None:
         """Drop every parked session (engine ``reset``).  Cold files are left
         on disk — epochs are reclaimed by deleting their directories, never
-        by the store guessing which records are dead."""
+        by the store guessing which records are dead.  In-flight spill
+        writes are left to finish in the background (their files are as dead
+        as the synchronous ones); buffered prefetches are dropped."""
         for entry in self.table.values():
             if entry.tier == "host":
                 self.pool.release(entry.row)
         self.table.clear()
+        self._spills.clear()
+        self._prefetch.clear()
 
 
 # ====================================================================== #
@@ -354,7 +474,11 @@ def snapshot_engine(engine, path: str) -> str:
         "ensemble": engine.ensemble,
         "autotune": engine._autotune,
         "decode_slo_us": engine.decode_slo_us,
-        "decode_wave_tokens": engine.decode_wave_tokens,
+        # "auto" survives the round trip: the restored engine re-resolves K
+        # per flush rather than freezing the last resolved value.
+        "decode_wave_tokens": ("auto" if engine._decode_k_auto
+                               else engine.decode_wave_tokens),
+        "pipeline_depth": engine.pipeline_depth,
         "param_batch": engine._batched,
         "park_host_rows": engine._park_host_rows,
         "cold_dir": engine._cold_dir,
@@ -369,6 +493,9 @@ def snapshot_engine(engine, path: str) -> str:
 
     store = engine.store
     if store is not None:
+        # The manifest references cold records by path: every in-flight
+        # spill write must be durable before the snapshot claims them.
+        store.drain_io()
         parked, host_states, host_ys = [], [], []
         for sid, entry in store.table.items():
             rec = {"sid": sid, "tier": entry.tier,
@@ -507,6 +634,7 @@ def restore_engine(cls, path: str, *, mesh=None):
               cost_model=cost_model, decode_slo_us=ek["decode_slo_us"],
               decode_wave_tokens=ek["decode_wave_tokens"],
               park_host_rows=ek["park_host_rows"], cold_dir=ek["cold_dir"],
+              pipeline_depth=ek.get("pipeline_depth", 2),
               _param_batch=ek["param_batch"])
     eng.scheduler.max_wave = ek["max_wave"]
     eng._use_clock = m["use_clock"]
