@@ -50,7 +50,18 @@ Measures the serving phases the three-layer stack separates:
   executor, because host work and the XLA CPU computations timeshare the
   one core (dispatching is async, execution is not parallel).
 
-Plus the full session lifecycle (submit -> flush -> decode -> evict with
+* **refit.online** — learn-while-serving: the full-arena open-loop teacher
+  stream (``decode_step`` + ``observe``) with periodic ``flush(refit=True)``
+  readout-refit waves vs the identical load on a frozen-readout engine.
+  Mid-stream the teacher signal shifts regime (a sinusoid mix on
+  frequencies disjoint from the trained MSO set), so the
+  frozen readout stays degraded while the learning engine's decayed
+  ``(G, C)`` window recovers.  Reported: tok/s with refits on (trajectory-
+  gated), refit overhead vs frozen (acceptance bar: <= 10%), and the
+  post-shift RMSE recovery ratio frozen/refit-on (trajectory-gated,
+  higher is better).
+
+Plus the full session lifecycle (submit -> flush -> decode -> release with
 queued admission) as sessions/sec.
 """
 from __future__ import annotations
@@ -157,7 +168,7 @@ def main(quick: bool = False):
         while eng.sessions or len(eng.pending):
             eng.flush()
             for s in list(eng.ready_sessions):
-                eng.evict(s)
+                eng.release(s)
         return eng.states
 
     static_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
@@ -231,7 +242,7 @@ def main(quick: bool = False):
                 eng.decode_closed_loop(1, sids=dec_sids)[dec_sids[0]])
             for s in list(eng.ready_sessions):
                 if s[0] == "flood":
-                    eng.evict(s)
+                    eng.release(s)
             if not (len(eng.pending)
                     or any(s[0] == "flood" for s in eng.active_sessions)):
                 return eng.states
@@ -278,7 +289,7 @@ def main(quick: bool = False):
                 eng.submit(("w", b, i), long_mix[:chunk_len, None])
             eng.flush()
             for i in range(b):
-                eng.evict(("w", b, i))
+                eng.release(("w", b, i))
         jax.block_until_ready(eng.states)
 
     def measure_mixed(eng, interleave):
@@ -290,10 +301,10 @@ def main(quick: bool = False):
         st = eng.stats()
         nan = float("nan")
         return (us,
-                nan if st["decode_gap_p50_us"] is None
-                else st["decode_gap_p50_us"],
-                nan if st["decode_gap_p95_us"] is None
-                else st["decode_gap_p95_us"])
+                nan if st.decode_gap_p50_us is None
+                else st.decode_gap_p50_us,
+                nan if st.decode_gap_p95_us is None
+                else st.decode_gap_p95_us)
 
     aware_eng = ReservoirEngine(params, max_slots=mslots, readout=readout,
                                 cost_model=mcost,
@@ -312,7 +323,7 @@ def main(quick: bool = False):
         "aware_gap_p50_us": aware_p50, "aware_gap_p95_us": aware_p95,
         "blind_gap_p50_us": blind_p50, "blind_gap_p95_us": blind_p95,
         "interleave_waves":
-            aware_eng.stats()["decode_interleave_waves"]}
+            aware_eng.stats().decode_interleave_waves}
     rows.append(_util.csv_row(
         "serve.mixed.decode_aware", aware_us,
         f"tok_s={flood_tokens / (aware_us * 1e-6):.0f};"
@@ -470,13 +481,13 @@ def main(quick: bool = False):
     park_tok = park_sessions * park_gen
     pst = park_eng.stats()
     nan = float("nan")
-    park_p95 = pst["promote_us_p95"]
+    park_p95 = pst.promote_us_p95
     res["park_restore"] = {
         "us": park_us, "tokens": park_tok, "sessions": park_sessions,
         "slots": slots, "host_rows": 2 * slots, "gen": park_gen,
-        "promote_waves": pst["promote_waves"],
-        "demote_waves": pst["demote_waves"],
-        "page_rows": pst["page_rows_total"],
+        "promote_waves": pst.promote_waves,
+        "demote_waves": pst.demote_waves,
+        "page_rows": pst.page_rows_total,
         "restore_p95_us": nan if park_p95 is None else park_p95}
     rows.append(_util.csv_row(
         "serve.park.restore", park_us,
@@ -524,11 +535,11 @@ def main(quick: bool = False):
         eng.store.drain_io()                # ...and the async spill lane
 
     def ov_time(eng):
-        blocked0 = eng.stats()["host_block_us"]
+        blocked0 = eng.stats().host_block_us
         t0 = time.perf_counter()
         ov_workload(eng)
         wall = (time.perf_counter() - t0) * 1e6
-        return wall, eng.stats()["host_block_us"] - blocked0
+        return wall, eng.stats().host_block_us - blocked0
 
     # Interleaved min-of-reps: pipelined and sync reps alternate so machine
     # -state drift between the two measurement blocks cancels instead of
@@ -551,13 +562,130 @@ def main(quick: bool = False):
         "overlap_efficiency": ov_eff,
         "rounds": ov_rounds, "group": ov_grp, "slots": ov_slots,
         "host_cores": os.cpu_count(),
-        "inflight_peak": ov_pipe.stats()["pipeline_inflight_peak"],
-        "overlap_demotes": ov_pipe.stats()["overlap_demotes"]}
+        "inflight_peak": ov_pipe.stats().pipeline_inflight_peak,
+        "overlap_demotes": ov_pipe.stats().overlap_demotes}
     rows.append(_util.csv_row(
         "serve.pipeline.overlap", pipe_us,
         f"tok_s={ov_tok / (pipe_us * 1e-6):.0f};"
         f"vs_sync=x{res['pipeline_overlap']['speedup']:.2f};"
         f"overlap_eff={ov_eff:.2f}"))
+
+    # -------- learn-while-serving: streaming refit overhead + drift recovery
+    # Mixed open-loop serve load (decode_step + observe teacher stream over
+    # a full arena) with periodic flush(refit=True) waves vs the same load
+    # on a frozen-readout engine — the refit overhead bar is <= 10% tok/s.
+    # Mid-stream the teacher signal switches MSO component count (a regime
+    # shift the trained readout has never seen): the frozen engine's RMSE
+    # stays degraded, the learning engine's decayed (G, C) window fades the
+    # old regime and the next refit waves recover — reported as the
+    # post-shift RMSE ratio (frozen / refit-on, higher is better).
+    re_tokens = 512 if quick else 1024
+    re_every = 64
+    re_prompt = 128
+    shift = re_tokens // 2
+    # Section-local model: the RMSE story needs *finite values*, which the
+    # shared ``_build`` params cannot deliver in float32 — ``noisy_golden``
+    # at sigma=0.1 pushes |lambda|max past 1 for n >= 256 (divergent scan),
+    # and alpha=1e-8 is far below float32 Cholesky conditioning.  Timing
+    # sections never noticed (they only measure), this one reports values.
+    re_cfg = ESNConfig(n=n, spectral_radius=0.95, leak=0.9,
+                       input_scaling=0.5, ridge_alpha=1.0, seed=0)
+    re_params = esn_fn.dpg_params(re_cfg, "noisy_golden", sigma=0.01)
+    re_readout = esn_fn.fit(re_params, sig[:-1, None], sig[1:, None],
+                            washout=100)
+    # Post-shift regime: frequencies DISJOINT from the trained MSO set —
+    # mso_series(k-1) would be a spectral subset the linear readout predicts
+    # perfectly, i.e. no drift at all.
+    ts_b = np.arange(len(sig))
+    sig_b = np.sin(0.57 * ts_b) + np.sin(1.13 * ts_b) + np.sin(0.31 * ts_b)
+    re_stream = np.concatenate([sig[re_prompt:re_prompt + shift],
+                                sig_b[:re_tokens - shift + 1]])
+    re_sids = list(range(slots))
+
+    def refit_load(eng, refit):
+        eng.reset()
+        for s in re_sids:
+            eng.submit(s, sig[:re_prompt, None])
+        eng.flush()
+        errs = []
+        for t in range(re_tokens):
+            out = eng.decode_step({s: re_stream[t, None] for s in re_sids})
+            errs.append(float(out[re_sids[0]][0]) - float(re_stream[t + 1]))
+            for s in re_sids:
+                eng.observe(s, re_stream[t + 1, None])
+            if refit and (t + 1) % re_every == 0:
+                eng.flush(refit=True)
+        eng.collect_decoded()
+        jax.block_until_ready(eng.states)
+        return errs
+
+    re_learn = ReservoirEngine(re_params, max_slots=slots,
+                               readout=re_readout,
+                               learn=True, refit_decay=0.98)
+    re_frozen = ReservoirEngine(re_params, max_slots=slots,
+                                readout=re_readout)
+    refit_load(re_learn, True)               # compile passes
+    refit_load(re_frozen, False)
+    learn_us, frozen_us = float("inf"), float("inf")
+    learn_errs = frozen_errs = None
+    warm_wave_us = float("inf")
+    ratios = []
+    # The refit share is small and pass wall time is preemption-noisy on a
+    # shared box, so the overhead estimator must reject spikes: pair each
+    # learn pass with the frozen pass run RIGHT AFTER it (adjacent passes
+    # share the noise regime) and take the MEDIAN of the per-pair ratios —
+    # min-of-reps still reports the noise-floor times for tok/s.
+    for _ in range(3):
+        rs0 = re_learn.stats()
+        t0 = time.perf_counter()
+        errs = refit_load(re_learn, True)
+        us = (time.perf_counter() - t0) * 1e6
+        rs1 = re_learn.stats()
+        if us < learn_us:
+            learn_us, learn_errs = us, errs
+        # warm per-wave refit cost straight off the engine's own counters
+        # (the all-time mean would be polluted by the compile pass)
+        dw = rs1.refit_waves_total - rs0.refit_waves_total
+        if dw:
+            warm_wave_us = min(warm_wave_us,
+                               (rs1.refit_us_sum - rs0.refit_us_sum) / dw)
+        t0 = time.perf_counter()
+        f_errs = refit_load(re_frozen, False)
+        f_us = (time.perf_counter() - t0) * 1e6
+        if f_us < frozen_us:
+            frozen_us, frozen_errs = f_us, f_errs
+        ratios.append(us / f_us)
+
+    def _rmse(e):
+        a = np.asarray(e, float)
+        return float(np.sqrt(np.mean(a * a))) if a.size else nan
+
+    nan = float("nan")
+    re_tok = re_tokens * slots
+    tail = re_tokens - re_tokens // 4        # settled post-shift window
+    learn_post = _rmse(learn_errs[tail:])
+    frozen_post = _rmse(frozen_errs[tail:])
+    recovery = (frozen_post / learn_post
+                if learn_post and np.isfinite(learn_post)
+                and np.isfinite(frozen_post) else nan)
+    overhead = float(np.median(ratios)) - 1.0
+    lst = re_learn.stats()
+    res["refit_online"] = {
+        "refit_us": learn_us, "frozen_us": frozen_us, "tokens": re_tok,
+        "sessions": slots, "refit_every": re_every,
+        "overhead": overhead,
+        "refit_waves": lst.refit_waves_total,
+        "refit_rows": lst.refit_rows_total,
+        "refit_wave_us_warm": (None if warm_wave_us == float("inf")
+                               else warm_wave_us),
+        "rmse_post_shift_refit": learn_post,
+        "rmse_post_shift_frozen": frozen_post,
+        "recovery": recovery}
+    rows.append(_util.csv_row(
+        "serve.refit.online", learn_us,
+        f"tok_s={re_tok / (learn_us * 1e-6):.0f};"
+        f"overhead={overhead * 100:.1f}%;"
+        f"recovery=x{recovery:.1f}"))
 
     # ---------------- full lifecycle with queued admission
     life_eng = ReservoirEngine(params, max_slots=slots, readout=readout)
@@ -572,7 +700,7 @@ def main(quick: bool = False):
             wave = list(e.active_sessions)
             e.decode_closed_loop(gen_t, sids=wave)
             for s in wave:
-                e.evict(s)
+                e.release(s)
         return e.states
 
     life_us = _util.timeit(lifecycle, reps=2, warmup=1)

@@ -57,6 +57,8 @@ _SERVE_METRICS = {
     "serve.pipeline.overlap": ("pipeline_overlap", "pipelined_us", "tokens"),
     "serve.pipeline.overlap_eff": ("pipeline_overlap", "overlap_efficiency",
                                    "_value"),
+    "serve.refit.online": ("refit_online", "refit_us", "tokens"),
+    "serve.refit.recovery": ("refit_online", "recovery", "_value"),
 }
 
 

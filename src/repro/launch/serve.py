@@ -140,27 +140,50 @@ def serve_reservoir(args) -> None:
         raise SystemExit("--park-host-rows is incompatible with --ensemble: "
                          "a param-batched engine binds slot i to reservoir "
                          "i, so parked state cannot move slots")
+    if args.learn and args.ensemble:
+        raise SystemExit("--learn needs the non-ensemble engine (streaming "
+                         "refit owns the readout pool; DPG growth builds "
+                         "per-session ensembles on drift instead)")
     if args.ensemble:
         batch = [esn_fn.dpg_params(dataclasses.replace(cfg, seed=args.seed + i),
                                    "noisy_golden", sigma=0.1)
                  for i in range(args.slots)]
         params = stack_params(batch)
-        readout = Readout(jnp.stack([
-            esn_fn.fit(p, u_train, y_train, washout=100).w_out
-            for p in batch]))
+        readouts = [esn_fn.fit(p, u_train, y_train, washout=100).w_out
+                    for p in batch]
+        readout = Readout(jnp.stack(readouts))
         engine = ReservoirEngine.from_param_batch(
             params, readout=readout,
-            ensemble="mean" if args.ensemble == "mean" else "off",
+            ensemble=args.ensemble if args.ensemble != "independent"
+            else "off",
             **engine_kw)
         print(f"ensemble mode ({args.ensemble}): {args.slots} independently-"
               f"seeded reservoirs, one vmap-ed decode trace")
+        if args.ensemble == "weighted":
+            # Validation-RMSE-weighted voting: score each member on a
+            # held-out teacher-forced window, weight 1/(rmse^2 + eps).
+            v0 = train_t - 400
+            rmses = []
+            for p, w in zip(batch, readouts):
+                pred = np.asarray(esn_fn.predict(
+                    p, Readout(w), u_train[v0:]))
+                rmses.append(float(np.sqrt(np.mean(
+                    (pred - np.asarray(y_train[v0:])) ** 2))))
+            weights = [1.0 / (r * r + 1e-9) for r in rmses]
+            engine.set_ensemble_weights(weights)
+            print("  member val-RMSE: "
+                  + ", ".join(f"{r:.3e}" for r in rmses))
     else:
         params = esn_fn.dpg_params(cfg, "noisy_golden", sigma=0.1)
         readout = esn_fn.fit(params, u_train, y_train, washout=100)
+        if args.learn:
+            engine_kw.update(learn=True,
+                             refit_decay=args.refit_decay,
+                             drift_threshold=args.drift_threshold)
         engine = ReservoirEngine(params, max_slots=args.slots,
                                  readout=readout, **engine_kw)
 
-    if args.ensemble == "mean":
+    if args.ensemble in ("mean", "weighted"):
         # One logical stream, B reservoirs voting: same prompt everywhere,
         # fused closed-loop continuation scored against the true signal.
         for i in range(args.slots):
@@ -172,9 +195,38 @@ def serve_reservoir(args) -> None:
         # closed-loop outputs align to sig[P+1 : P+1+G].
         truth = sig[args.prompt_len + 1:args.prompt_len + 1 + args.gen]
         rmse = float(np.sqrt(np.mean((fused - truth) ** 2)))
-        print(f"ensemble-mean continuation: {args.gen} tok closed loop, "
-              f"rmse vs signal {rmse:.3e} "
+        print(f"ensemble-{args.ensemble} continuation: {args.gen} tok "
+              f"closed loop, rmse vs signal {rmse:.3e} "
               f"(B={args.slots} reservoirs fused into one output)")
+        return
+
+    if args.learn:
+        # Learn-while-serving demo: one live session streams teacher tokens
+        # open-loop (decode_step + observe accumulates streaming (G, C)),
+        # and every --refit-every tokens a flush(refit=True) wave re-solves
+        # its readout from the eigenbasis Gram stats.
+        p_len = args.prompt_len
+        tokens = min(args.gen * 16, train_t - p_len - 1)
+        engine.submit("live", sig[:p_len, None], tenant="live")
+        engine.flush()
+        errs = []
+        for t in range(p_len, p_len + tokens):
+            out = engine.decode_step({"live": sig[t, None]})
+            errs.append(float(out["live"][0]) - float(sig[t + 1]))
+            engine.observe("live", sig[t + 1, None])
+            if (t - p_len + 1) % args.refit_every == 0:
+                engine.flush(refit=True)
+        half = len(errs) // 2
+        rm = lambda e: float(np.sqrt(np.mean(np.square(e))))  # noqa: E731
+        st = engine.stats()
+        print(f"learn-while-serving: {tokens} teacher tok, refit every "
+              f"{args.refit_every} — stream RMSE first half "
+              f"{rm(errs[:half]):.3e} -> second half {rm(errs[half:]):.3e}")
+        print(f"  {st.refit_waves_total} refit waves / "
+              f"{st.refit_rows_total} rows in "
+              f"{st.refit_us_sum / 1e3:.1f} ms total; drift RMSE "
+              f"{engine.drift_rmse('live')}; "
+              f"{st.growth_events} DPG growth events")
         return
 
     rng = np.random.default_rng(args.seed)
@@ -272,7 +324,7 @@ def serve_reservoir(args) -> None:
             assert np.isfinite(ys[sid]).all()
             if sid == persistent and len(engine.pending):
                 continue        # resident until the prefill flood drains
-            engine.evict(sid)   # queued prompts wait for the next flush wave
+            engine.release(sid)  # queued prompts wait for the next flush wave
             done += 1
     wall = time.time() - t0
     print(f"reservoir n={cfg.n} slots={args.slots}: served {done} sessions "
@@ -284,35 +336,35 @@ def serve_reservoir(args) -> None:
           f"({decode_tokens / max(t_decode, 1e-9):.0f} tok/s, closed loop)")
     if args.autotune:
         st = engine.stats()
-        occ = st["occupancy_mean"]
-        lat = st["wave_us_mean"]
-        print(f"  autotune: {st['waves_total']} waves, mean occupancy "
+        occ = st.occupancy_mean
+        lat = st.wave_us_mean
+        print(f"  autotune: {st.waves_total} waves, mean occupancy "
               f"{occ:.2f}, mean wave latency "
               f"{lat / 1e3 if lat else float('nan'):.1f} ms, "
               f"{engine.cost_model.n_observations} cost observations")
-        for t_bucket, row in sorted(st["by_bucket"].items()):
+        for t_bucket, row in sorted(st.by_bucket.items()):
             us = row["us_sum"] / max(row["timed_waves"], 1)
             print(f"    bucket {t_bucket:>6}: {row['waves']} waves, "
                   f"{row['rows']} rows, {row['tokens']} tok, "
                   f"~{us / 1e3:.1f} ms/wave")
     if args.decode_slo is not None:
         st = engine.stats()
-        p50, p95 = st["decode_gap_p50_us"], st["decode_gap_p95_us"]
+        p50, p95 = st.decode_gap_p50_us, st.decode_gap_p95_us
         fmt = lambda v: "n/a" if v is None else f"{v / 1e3:.1f} ms"  # noqa: E731
-        print(f"  decode-aware: {st['decode_interleave_waves']} interleaved "
-              f"decode waves / {st['decode_waves_total']} decode dispatches, "
+        print(f"  decode-aware: {st.decode_interleave_waves} interleaved "
+              f"decode waves / {st.decode_waves_total} decode dispatches, "
               f"{interleaved_tokens} tok generated mid-flush; "
               f"inter-token gap p50 {fmt(p50)}, p95 {fmt(p95)} "
               f"(SLO {args.decode_slo / 1e3:.1f} ms of planned prefill)")
     if args.park_host_rows is not None:
         st = engine.stats()
-        p95 = st["promote_us_p95"]
-        print(f"  paging: {st['demote_waves']} demote / "
-              f"{st['promote_waves']} promote waves, "
-              f"{st['page_rows_total']} rows moved, restore p95 "
+        p95 = st.promote_us_p95
+        print(f"  paging: {st.demote_waves} demote / "
+              f"{st.promote_waves} promote waves, "
+              f"{st.page_rows_total} rows moved, restore p95 "
               f"{'n/a' if p95 is None else f'{p95 / 1e3:.1f} ms'}; "
-              f"store now holds {st['sessions_parked']} parked sessions "
-              f"({st['store']})")
+              f"store now holds {st.sessions_parked} parked sessions "
+              f"({st.store})")
     if args.cost_save and engine.cost_model is not None:
         engine.cost_model.to_artifact(args.cost_save)
         print(f"cost model saved: {engine.cost_model.n_observations} "
@@ -402,11 +454,33 @@ def main():
     ap.add_argument("--n", type=int, default=512,
                     help="reservoir size for --reservoir")
     ap.add_argument("--ensemble", nargs="?", const="independent",
-                    choices=["independent", "mean"], default=None,
+                    choices=["independent", "mean", "weighted"], default=None,
                     help="one independently-seeded reservoir per slot, "
                          "served by a single vmap-over-params decode trace; "
                          "'mean' additionally fuses the per-reservoir "
-                         "predictions into one ensemble output")
+                         "predictions into one ensemble output, 'weighted' "
+                         "fuses with validation-RMSE weights "
+                         "(1/(rmse^2+eps) per member)")
+    ap.add_argument("--learn", action="store_true",
+                    help="learn-while-serving: sessions accumulate streaming "
+                         "eigenbasis (G, C) readout stats from the observe() "
+                         "teacher path; flush(refit=True) re-solves their "
+                         "per-tenant readouts in batched device waves")
+    ap.add_argument("--refit-every", type=int, default=64, metavar="T",
+                    help="with --learn: teacher tokens between "
+                         "flush(refit=True) refit waves")
+    ap.add_argument("--refit-decay", type=float, default=1.0,
+                    metavar="LAMBDA",
+                    help="with --learn: per-token decay of the streaming "
+                         "(G, C) window (1.0 = grow forever; <1 lets old "
+                         "regimes fade so refits track drift)")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    metavar="RMSE",
+                    help="with --learn: when a session's held-out streaming "
+                         "RMSE (prequential EWMA) drifts past this, sample a "
+                         "fresh DPG reservoir member on-demand and fold it "
+                         "into the session's ensemble "
+                         "(validation-RMSE-weighted voting)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="place the slot arena on a (data, model) device "
                          "mesh, e.g. 2x1 (slots data-parallel, N TP-sharded)")

@@ -13,10 +13,13 @@ measured timings (seeded offline by ``benchmarks/serve_engine.py``, refined
 online from engine-recorded wave timings) — what the lookahead plans against,
 plus the c_dec(B, K) fused-decode surface.
 ``engine``    — ``ReservoirEngine``: the thin orchestrator (session <-> slot
-mapping, submit/flush/decode/evict lifecycle, ensemble-mean readout fusion,
-wave occupancy/latency ``stats()``, legacy eager API preserved as deprecation
-shims).  Decode tokens drain through ``collect_decoded()`` as one typed
-``DecodeResult`` whatever path produced them.
+mapping, submit/flush/decode/release lifecycle, ensemble readout fusion,
+typed ``EngineStats`` telemetry, and — with ``learn=True`` — learn-while-
+serving: streaming eigenbasis ``(G, C)`` accumulation off the ``observe()``
+teacher path, batched ``refit()`` / ``flush(refit=True)`` waves into
+per-tenant readout pools, and drift-triggered DPG ensemble growth).  Decode
+tokens drain through ``collect_decoded()`` as one typed ``DecodeResult``
+whatever path produced them.
 ``store``     — ``SessionStore``: tiered session capacity.  The arena is a
 *cache of hot sessions* over a pinned host-memory pool and an fsspec/disk
 cold tier; a full arena parks its LRU
@@ -35,7 +38,7 @@ from . import arena, cost, engine, scheduler, store
 from ..core.dispatch import resolve_method, run_scan_q
 from .arena import SlotArena
 from .cost import WaveCostModel, cost_key
-from .engine import (DecodeResult, EvictResult, ReservoirEngine,
+from .engine import (DecodeResult, EngineStats, EvictResult, ReservoirEngine,
                      SessionStats)
 from .scheduler import PrefillRequest, WaveItem, WaveScheduler, bucket_length
 from .store import HostPool, SessionStore
@@ -43,6 +46,7 @@ from .store import HostPool, SessionStore
 __all__ = ["arena", "cost", "engine", "scheduler", "store",
            "SlotArena", "WaveCostModel", "cost_key",
            "resolve_method", "run_scan_q",
-           "DecodeResult", "EvictResult", "ReservoirEngine", "SessionStats",
+           "DecodeResult", "EngineStats", "EvictResult", "ReservoirEngine",
+           "SessionStats",
            "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length",
            "HostPool", "SessionStore"]

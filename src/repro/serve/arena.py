@@ -174,19 +174,30 @@ def arena_step(params, states, u, y_prev, *, batched: bool = False):
 
 
 def apply_readout(w_out, x, *, batched: bool = False):
-    if batched:
+    """Per-slot readouts are inferred from shape: a (B, F, D) ``w_out`` pairs
+    row ``b`` of ``x`` with readout ``b`` even when the reservoir params are
+    shared (per-tenant readout pools over one arena) — a plain ``x @ w_out``
+    there would contract the wrong axes."""
+    if batched or w_out.ndim == 3:
         return jnp.einsum("bf,bfd->bd", x, w_out)
     return x @ w_out
 
 
-def _ensemble_reduce(y, mask):
-    """Mean over the stepped slots, broadcast back to every row."""
-    denom = jnp.maximum(jnp.sum(mask), 1)
-    y_mean = jnp.sum(y * mask[:, None], axis=0) / denom
+def _ensemble_reduce(y, mask, weights=None):
+    """(Weighted) mean over the stepped slots, broadcast back to every row.
+    ``weights=None`` is the plain mean; otherwise per-slot voting weights
+    (validation-RMSE-derived), renormalized over the masked slots."""
+    if weights is None:
+        w = mask
+        denom = jnp.maximum(jnp.sum(mask), 1)
+    else:
+        w = jnp.asarray(weights, y.dtype) * mask
+        denom = jnp.maximum(jnp.sum(w), jnp.asarray(1e-9, y.dtype))
+    y_mean = jnp.sum(y * w[:, None], axis=0) / denom
     return jnp.broadcast_to(y_mean, y.shape)
 
 
-def decode_step(params, w_out, arena: SlotArena, u, mask, *,
+def decode_step(params, w_out, arena: SlotArena, u, mask, ens_weights=None, *,
                 batched: bool = False, ensemble: str = "off"):
     """Advance the masked slots one token.  Returns ``(arena', y)`` where
     unmasked rows of ``y`` hold their previous output."""
@@ -198,51 +209,57 @@ def decode_step(params, w_out, arena: SlotArena, u, mask, *,
     y = apply_readout(w_out, x, batched=batched)
     if ensemble == "mean":
         y = _ensemble_reduce(y, mask)
+    elif ensemble == "weighted":
+        y = _ensemble_reduce(y, mask, ens_weights)
     y_out = jnp.where(mask[:, None], y, arena.y_prev)
     return dataclasses.replace(arena, states=states, y_prev=y_out), y_out
 
 
-def closed_loop(params, w_out, arena: SlotArena, mask, n_steps: int, *,
-                batched: bool = False, ensemble: str = "off"):
+def closed_loop(params, w_out, arena: SlotArena, mask, n_steps: int,
+                ens_weights=None, *, batched: bool = False,
+                ensemble: str = "off"):
     """Free-running generation over the masked slots: each step feeds the
     prediction (or the ensemble mean of the predictions) back as the next
     input.  Returns ``(arena', ys)`` with ``ys`` of shape (n_steps, B, D_out).
     """
+    w_ens = ens_weights if ensemble == "weighted" else None
+
     def step(carry, _):
         states, y = carry
         new = arena_step(params, states, y, y, batched=batched)
         states = jnp.where(mask[:, None], new, states)
         x = esn_fn.assemble_features(params, states, y)
         y_new = apply_readout(w_out, x, batched=batched)
-        if ensemble == "mean":
-            y_new = _ensemble_reduce(y_new, mask)
+        if ensemble in ("mean", "weighted"):
+            y_new = _ensemble_reduce(y_new, mask, w_ens)
         y_new = jnp.where(mask[:, None], y_new, y)
         return (states, y_new), y_new
 
     y0 = arena.y_prev
-    if ensemble == "mean":
+    if ensemble in ("mean", "weighted"):
         # The free-run starts from the fused seed too: every masked
-        # reservoir's first closed-loop input is the ensemble mean of the
+        # reservoir's first closed-loop input is the ensemble reduce of the
         # stepped slots' seeds (unmasked slots keep their own y_prev).
-        y0 = jnp.where(mask[:, None], _ensemble_reduce(y0, mask), y0)
+        y0 = jnp.where(mask[:, None], _ensemble_reduce(y0, mask, w_ens), y0)
     (states, y_prev), ys = jax.lax.scan(
         step, (arena.states, y0), None, length=n_steps)
     return dataclasses.replace(arena, states=states, y_prev=y_prev), ys
 
 
-def closed_loop_fused(params, w_out, arena: SlotArena, mask, n_steps: int, *,
-                      batched: bool = False, ensemble: str = "off",
-                      method: str = "auto"):
+def closed_loop_fused(params, w_out, arena: SlotArena, mask, n_steps: int,
+                      ens_weights=None, *, batched: bool = False,
+                      ensemble: str = "off", method: str = "auto"):
     """:func:`closed_loop` through the fused K-token decode kernel: one
     dispatch runs all ``n_steps`` (diag step + readout + ensemble reduce +
     feedback write) with the carry resident on-device
     (``core.dispatch.run_decode_fused`` — Pallas on TPU, the jnp reference
     elsewhere).  Same signature, same ``(arena', ys)`` contract; dense-mode
-    params or a missing readout fall back to the scan path (where ``batched``
+    params, a missing readout, or weighted-ensemble voting (the kernel only
+    reduces by plain mean) fall back to the scan path (where ``batched``
     still applies — the fused path infers it from ``lam_q.ndim``).
     """
-    if w_out is None or params.mode != "diag":
-        return closed_loop(params, w_out, arena, mask, n_steps,
+    if w_out is None or params.mode != "diag" or ensemble == "weighted":
+        return closed_loop(params, w_out, arena, mask, n_steps, ens_weights,
                            batched=batched, ensemble=ensemble)
     cfg = params.cfg
     w_drive = (params.win_q + params.wfb_q if cfg.use_feedback
@@ -347,9 +364,14 @@ def prefill_wave(params, w_out, arena: SlotArena, slots, u, lengths,
             return _row_prefill(p, wo, cfg, h0_r, y0_r, u_r, yt_r, length,
                                 **kw)
     else:
+        pooled = w_out is not None and w_out.ndim == 3
+
         def one(slot, h0_r, y0_r, u_r, yt_r, length):
-            del slot
-            return _row_prefill(params, w_out, cfg, h0_r, y0_r, u_r, yt_r,
+            # Shared reservoir, per-slot readout pool: row `slot` prefills
+            # against its own (F, D) readout sliced out of the (B, F, D) pool.
+            wo = (jax.lax.dynamic_index_in_dim(w_out, slot, keepdims=False)
+                  if pooled else w_out)
+            return _row_prefill(params, wo, cfg, h0_r, y0_r, u_r, yt_r,
                                 length, **kw)
 
     if y_teacher is None:

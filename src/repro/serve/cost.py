@@ -57,6 +57,16 @@ and the scheduler charges it against the same latency budget as prefill and
 decode — a promote wave that would blow the decode SLO defers a prefill wave
 exactly like an expensive prefill would (``kind: "page"`` records).
 
+Learn-while-serving adds a fourth surface: a refit wave re-solves the
+ridge readout of B sessions from their streamed Gram statistics in ONE
+batched (vmapped) Cholesky solve, so its cost is affine in the sessions
+refit,
+
+    c_refit(B)  ~=  alpha + beta * B         (one fit, group medians)
+
+and ``flush(refit=True)`` charges it against the same latency budget as
+prefill / decode / page waves (``kind: "refit"`` records).
+
 **Keying** — timings are machine- and shape-specific: a CPU-learned model
 must never price a TPU pod, and a model fitted at ``n=512`` must never price
 ``n=4096``.  A model constructed with ``key=cost_key(backend, n, d_out)``
@@ -111,6 +121,8 @@ class WaveCostModel:
                  decode_per_row_us: float = 1.0,
                  page_base_us: float = 200.0,
                  page_per_row_us: float = 2.0,
+                 refit_base_us: float = 400.0,
+                 refit_per_row_us: float = 50.0,
                  key: Optional[Tuple[str, int, int]] = None):
         self.base_us = float(base_us)
         self.per_token_us = float(per_token_us)
@@ -118,6 +130,8 @@ class WaveCostModel:
         self.decode_per_row_us = float(decode_per_row_us)
         self.page_base_us = float(page_base_us)
         self.page_per_row_us = float(page_per_row_us)
+        self.refit_base_us = float(refit_base_us)
+        self.refit_per_row_us = float(refit_per_row_us)
         #: Observation key (``cost_key(backend, n, d_out)``) or None for the
         #: legacy fit-everything behavior.
         self.key: Optional[Tuple[str, int, int]] = (
@@ -135,6 +149,10 @@ class WaveCostModel:
             maxlen=_OBS_CAP)
         self._page_fit: Optional[Tuple[float, float]] = None
         self._page_dirty = False
+        self._refit_obs: Deque[Tuple[int, float]] = collections.deque(
+            maxlen=_OBS_CAP)
+        self._refit_fit: Optional[Tuple[float, float]] = None
+        self._refit_dirty = False
         #: Records seen by :meth:`seed` but not fitted (other key / legacy
         #: un-keyed): kept verbatim so :meth:`to_artifact` round-trips them.
         self._shelved: List[dict] = []
@@ -171,6 +189,15 @@ class WaveCostModel:
         self._page_obs.append((int(b), float(us)))
         self._page_dirty = True
 
+    def observe_refit(self, b: int, us: float) -> None:
+        """Record one timed refit wave: ``b`` session readouts re-solved from
+        their streamed Gram statistics in one batched device dispatch, ``us``
+        wall microseconds."""
+        if b <= 0 or us <= 0:
+            return
+        self._refit_obs.append((int(b), float(us)))
+        self._refit_dirty = True
+
     def seed(self, records: Iterable[dict]) -> int:
         """Bulk-observe ``{"b":, "t_bucket":, "us":}`` prefill records,
         ``{"kind": "decode", "b":, "us":}`` decode records and
@@ -203,6 +230,8 @@ class WaveCostModel:
                                         k=int(r.get("k", 1)))
                 elif kind == "page":
                     self.observe_page(int(r["b"]), float(r["us"]))
+                elif kind == "refit":
+                    self.observe_refit(int(r["b"]), float(r["us"]))
                 else:
                     self.observe(int(r["b"]), int(r["t_bucket"]),
                                  float(r["us"]))
@@ -236,7 +265,8 @@ class WaveCostModel:
     @property
     def n_observations(self) -> int:
         return (sum(len(d) for d in self._obs.values())
-                + len(self._dec_obs) + len(self._page_obs))
+                + len(self._dec_obs) + len(self._page_obs)
+                + len(self._refit_obs))
 
     def clear(self) -> None:
         """Drop every observation and fit (cold-start constants remain).
@@ -254,6 +284,9 @@ class WaveCostModel:
         self._page_obs.clear()
         self._page_fit = None
         self._page_dirty = False
+        self._refit_obs.clear()
+        self._refit_fit = None
+        self._refit_dirty = False
         self._shelved.clear()
 
     def records(self) -> list:
@@ -272,7 +305,9 @@ class WaveCostModel:
                   {"kind": "decode", "b": b, "k": k, "us": us}
                   for b, k, us in self._dec_obs]
                + [{"kind": "page", "b": b, "us": us}
-                  for b, us in self._page_obs])
+                  for b, us in self._page_obs]
+               + [{"kind": "refit", "b": b, "us": us}
+                  for b, us in self._refit_obs])
         if self.key is not None:
             own = [{**r, "key": list(self.key)} for r in own]
         return own + list(self._shelved)
@@ -403,6 +438,36 @@ class WaveCostModel:
             alpha, beta = self._page_fit
             return max(alpha + beta * b, 1.0)
         return max(self.page_base_us + self.page_per_row_us * b, 1.0)
+
+    def predict_refit_us(self, b: int) -> float:
+        """Predicted wall microseconds for one refit wave re-solving ``b``
+        session readouts (vmapped Cholesky over stacked Gram stats):
+        c_refit(B) ~= alpha + beta * B.  Fitted through per-B group medians
+        when trained (>= 2 distinct B — refit waves are a few hundred
+        microseconds, so the same hiccup-outlier argument as
+        :meth:`predict_decode_us` applies), cold-start constants before;
+        always >= 1.  ``b <= 0`` is free: no dirty sessions, no wave."""
+        if b <= 0:
+            return 0.0
+        if self._refit_dirty:
+            groups: Dict[int, list] = {}
+            for bb, u in self._refit_obs:
+                groups.setdefault(bb, []).append(u)
+            if len(groups) >= 2:
+                bs = np.asarray(sorted(groups), float)
+                us = np.asarray([float(np.median(groups[int(bb)]))
+                                 for bb in bs])
+                a = np.stack([np.ones_like(bs), bs], axis=1)
+                (alpha, beta), *_ = np.linalg.lstsq(a, us, rcond=None)
+                self._refit_fit = (max(float(alpha), 0.0),
+                                   max(float(beta), 0.0))
+            else:
+                self._refit_fit = None
+            self._refit_dirty = False
+        if self._refit_fit is not None:
+            alpha, beta = self._refit_fit
+            return max(alpha + beta * b, 1.0)
+        return max(self.refit_base_us + self.refit_per_row_us * b, 1.0)
 
     def best_decode_k(self, b: int, *, slo_us: Optional[float] = None,
                       k_max: int = 64) -> int:

@@ -15,14 +15,31 @@ serving primitive there is.  The serving stack splits that into three layers:
 * this module         — the thin orchestrator: it owns the session <-> slot
   mapping and per-session accounting, and calls down into both layers.  It
   holds **no raw state arrays** (the arena does) and **no prefill compute**
-  (``arena.prefill_wave`` does — the eager :meth:`prefill` shim is a
-  one-row wave).
+  (``arena.prefill_wave`` does).
 
-Session lifecycle: ``submit`` (queue with prompt) -> ``flush`` (wave-batched
-admission + prefill) -> ``decode_step`` / ``decode_closed_loop`` -> ``evict``
-(returns the exact slot state for parking; re-admitting via ``h0=`` continues
-bit-for-bit).  The legacy eager flow (``add_session`` then ``prefill``) keeps
-working as a deprecation shim with identical numerics.
+Session lifecycle: ``submit`` (queue with prompt; ``slot=`` pins an
+admission-only placement, ``tenant=`` keys the readout pool) -> ``flush``
+(wave-batched admission + prefill) -> ``decode_step`` /
+``decode_closed_loop`` -> ``release`` (returns the exact slot state for
+parking; re-admitting via ``h0=`` continues bit-for-bit).  ``submit/flush``
+is the ONE admission surface — the PR-6 eager shims (``add_session`` /
+``prefill``) are gone.
+
+**Learn-while-serving** (``learn=True``): the engine is a training system
+too.  Every ``observe()`` teacher token both corrects the feedback column
+AND accumulates the session's eigenbasis Gram sufficient statistics
+``(G, C)`` (``core.ridge.gram_streaming`` rows, λ-decayed so old regimes
+fade); :meth:`refit` / ``flush(refit=True)`` solves
+``ridge_solve_general(G, C, eet_metric, α)`` for every dirty session as ONE
+batched device wave, priced by the cost model's ``c_refit(B)`` surface
+under the same decode budget.  Refit results land in a **per-tenant
+readout pool**: one shared reservoir arena serves thousands of per-session
+/ per-tenant ``(F, D_out)`` readouts (the wave functions take the
+``(max_slots, F, D_out)`` pool wherever any tenant readout has diverged
+from the base).  When a session's held-out streaming RMSE drifts past
+``drift_threshold``, a fresh ``dpg_params`` reservoir member is sampled
+on-demand (DPG: O(N), no diagonalization) and folded into that session's
+ensemble with validation-RMSE-weighted voting.
 
 Decode-aware planning (``decode_slo_us`` + ``flush(decode_interleave=True)``)
 prices prefill *and* decode on the same cost model so an oversubscribed
@@ -51,6 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dispatch
+from ..core import esn as esn_fn
+from ..core import ridge as ridge_mod
 from ..core.params import DiagParams, Readout, StandardParams
 from . import arena as arena_mod
 from . import store as store_mod
@@ -58,7 +77,8 @@ from .cost import WaveCostModel, cost_key
 from .scheduler import (PrefillRequest, WaveItem, WaveScheduler,
                         bucket_length)
 
-__all__ = ["SessionStats", "DecodeResult", "EvictResult", "ReservoirEngine"]
+__all__ = ["SessionStats", "DecodeResult", "EvictResult", "EngineStats",
+           "ReservoirEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +144,152 @@ class EvictResult(tuple):
         return self[1]
 
 
+def _warn_stats_mapping() -> None:
+    warnings.warn(
+        "dict-key access to EngineStats is deprecated: stats() now returns "
+        "a typed frozen dataclass — read the field directly "
+        "(stats().waves_total) or convert once via stats().to_dict()",
+        DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Typed :meth:`ReservoirEngine.stats` result — every serving counter as
+    a named field (waves / rows / occupancy / latency / by-bucket / decode /
+    page / pipeline / refit), frozen so a report can never mutate the
+    engine's accounting.  ``to_dict()`` is the sanctioned dict conversion;
+    mapping-style access (``stats()["waves_total"]``) keeps working for one
+    release behind a ``DeprecationWarning``."""
+    sessions_active: int
+    sessions_ready: int
+    sessions_queued: int
+    sessions_parked: int
+    store: Optional[dict]
+    page_waves_total: int
+    page_rows_total: int
+    promote_waves: int
+    demote_waves: int
+    page_us_sum: float
+    promote_us_p95: Optional[float]
+    chunks_in_flight: int
+    waves_total: int
+    rows_total: int
+    fresh_rows_total: int
+    prefill_tokens: int
+    decode_tokens: int
+    occupancy_mean: Optional[float]
+    wave_us_mean: Optional[float]
+    decode_waves_total: int
+    decode_rows_total: int
+    decode_interleave_waves: int
+    decode_us_per_step: Optional[float]
+    decode_gaps: int
+    decode_gap_p50_us: Optional[float]
+    decode_gap_p95_us: Optional[float]
+    pipeline_depth: int
+    pipeline_inflight: int
+    pipeline_inflight_peak: int
+    host_block_us: float
+    overlap_demotes: int
+    refit_waves_total: int
+    refit_rows_total: int
+    refit_us_sum: float
+    sessions_dirty: int
+    growth_events: int
+    by_bucket: dict
+    wave_log: list
+    wave_costs: list
+
+    def to_dict(self) -> dict:
+        """Shallow dict of every field (the old ``stats()`` return shape)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    # One release of dict-shaped compat (the DecodeResult pattern): every
+    # mapping accessor warns once per call site and then behaves exactly
+    # like the old raw dict did.
+    def __getitem__(self, key):
+        _warn_stats_mapping()
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def get(self, key, default=None):
+        _warn_stats_mapping()
+        return getattr(self, key, default)
+
+    def keys(self):
+        _warn_stats_mapping()
+        return [f.name for f in dataclasses.fields(self)]
+
+    def items(self):
+        _warn_stats_mapping()
+        return [(f.name, getattr(self, f.name))
+                for f in dataclasses.fields(self)]
+
+    def __iter__(self):
+        _warn_stats_mapping()
+        return iter([f.name for f in dataclasses.fields(self)])
+
+    def __contains__(self, key) -> bool:
+        return any(f.name == key for f in dataclasses.fields(self))
+
+
+@dataclasses.dataclass
+class _GramAcc:
+    """Streaming sufficient statistics for one readout: the folded
+    eigenbasis Gram pair ``(G, C)`` plus the not-yet-folded row buffers
+    (lazy device slices — folding pays the stack/matmul in one chunk at
+    refit time, never per token) and the held-out drift EWMA buffers
+    (pre-observe prediction vs truth — prequential, so the 'validation'
+    set is every teacher token *before* it trains)."""
+    gram: Optional[object] = None           # folded (F, F) device array
+    cg: Optional[object] = None             # folded (F, D_out) device array
+    pairs: int = 0                          # rows folded so far
+    skip_left: int = 0                      # washout rows still to discard
+    drift: Optional[float] = None           # EWMA of held-out squared error
+    buf_h: List = dataclasses.field(default_factory=list)
+    buf_fb: List = dataclasses.field(default_factory=list)
+    buf_y: List = dataclasses.field(default_factory=list)
+    buf_pred: List = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Member:
+    """A DPG-grown ensemble member: its own freshly sampled reservoir
+    (``core.esn.dpg_params`` — O(N), no diagonalization) advancing in
+    lock-step with the session's teacher stream from ``h=0`` (the echo
+    state property synchronizes it), plus its own :class:`_GramAcc`.  Its
+    readout ``w`` stays None (no vote) until the first refit wave solves
+    it from enough accumulated pairs."""
+    params: object
+    h: object                               # (N,) member state
+    y_fb: object                            # member's own feedback column
+    w: Optional[object] = None              # (F, D_out) once refit-trained
+    steps_since_fb: int = 0
+    pred_last: Optional[object] = None
+    acc: _GramAcc = dataclasses.field(default_factory=_GramAcc)
+    metric: Optional[object] = None         # cached EET metric (params-const)
+
+
+@dataclasses.dataclass
+class _LearnState:
+    """Per-session learn-while-serving state (host-side, engine-owned — it
+    does NOT travel through the session store: a parked session keeps its
+    accumulated ``(G, C)`` exactly like it keeps its un-collected decode
+    buffer).  ``steps_since_fb`` gates accumulation: a feature row is only
+    a valid training pair when exactly ONE decode step ran since the last
+    teacher token (free-running tokens in between would pair a state with
+    a truth it never saw)."""
+    tenant: Optional[Hashable] = None
+    last_fb: Optional[np.ndarray] = None    # teacher value forced last
+    steps_since_fb: int = 0
+    dirty: bool = False
+    acc: _GramAcc = dataclasses.field(default_factory=_GramAcc)
+    members: List = dataclasses.field(default_factory=list)
+
+
 @dataclasses.dataclass(slots=True)
 class SessionStats:
     """Per-session accounting (host-side; never enters jit).
@@ -137,6 +303,41 @@ class SessionStats:
     tokens_decoded: int = 0
     prefill_pending: bool = False
     last_use: int = 0
+
+
+def _fold_rows_core(params, h, fb, y, g0, c0, lam):
+    """One-dispatch refit fold: assemble the feature rows, apply the
+    λ-decay row weights, accumulate the (G, C) Gram pair, and (when prior
+    stats exist) decay-combine them — fused so a warm refit wave pays one
+    kernel instead of a chain of eager ops.  ``fb``/``g0`` being None
+    selects a second trace (None is a static pytree), and the window
+    length m recompiles by shape — constant at serve cadence."""
+    x = esn_fn.assemble_features(params, h, fb)
+    m = x.shape[0]
+    if lam < 1.0:
+        w = lam ** (jnp.arange(m - 1, -1, -1, dtype=x.dtype) / 2.0)
+        x = x * w[:, None]
+        y = y * w[:, None]
+    g, c = ridge_mod.gram_streaming(x, y)
+    if g0 is not None:
+        decay = lam ** m
+        g = decay * g0 + g
+        c = decay * c0 + c
+    return g, c
+
+
+_fold_rows = functools.partial(jax.jit, static_argnames=("lam",))(
+    _fold_rows_core)
+
+
+@functools.partial(jax.jit, static_argnames=("lam",))
+def _fold_rows_batch(params, h, fb, y, g0, c0, lam):
+    """The same fold vmapped over sessions (shared params): a refit wave
+    whose dirty sessions share one window length — the steady serve
+    cadence — folds them all in ONE dispatch instead of one per session."""
+    return jax.vmap(lambda hh, ff, yy, gg, cc:
+                    _fold_rows_core(params, hh, ff, yy, gg, cc, lam)
+                    )(h, fb, y, g0, c0)
 
 
 def _coerce_model(model, readout):
@@ -204,6 +405,15 @@ class ReservoirEngine:
                  pipeline_depth: int = 2,
                  park_host_rows: Optional[int] = None,
                  cold_dir: Optional[str] = None,
+                 learn: bool = False,
+                 refit_alpha: Optional[float] = None,
+                 refit_decay: float = 1.0,
+                 refit_washout: int = 0,
+                 drift_threshold: Optional[float] = None,
+                 drift_beta: float = 0.9,
+                 growth_max_members: int = 3,
+                 growth_sigma: float = 0.1,
+                 growth_washout: int = 64,
                  _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
@@ -219,15 +429,65 @@ class ReservoirEngine:
                 raise ValueError(
                     f"param batch of {b} reservoirs needs max_slots == {b}, "
                     f"got {self.max_slots} (slot i runs reservoir i)")
-        if ensemble not in ("off", "mean"):
-            raise ValueError(f"ensemble must be 'off' or 'mean', "
+        if ensemble not in ("off", "mean", "weighted"):
+            raise ValueError(f"ensemble must be 'off', 'mean' or 'weighted', "
                              f"got {ensemble!r}")
-        if ensemble == "mean" and not (self._batched and
-                                       self.readout is not None):
+        if ensemble != "off" and not (self._batched and
+                                      self.readout is not None):
             raise ValueError(
-                "ensemble='mean' fuses the per-reservoir predictions of a "
-                "param-batched engine — use from_param_batch with a readout")
+                f"ensemble={ensemble!r} fuses the per-reservoir predictions "
+                f"of a param-batched engine — use from_param_batch with a "
+                f"readout")
         self.ensemble = ensemble
+        # ensemble="weighted": validation-RMSE-derived per-reservoir voting
+        # weights (None = uniform, i.e. the plain mean) — set via
+        # set_ensemble_weights(); passed to the wave fns as a traced arg so
+        # weight updates never retrace.
+        self._ens_weights = None
+        # ---- learn-while-serving knobs -----------------------------------
+        self._learn = bool(learn)
+        if self._learn and self.readout is None:
+            raise ValueError(
+                "learn=True needs a base readout — streaming refit solves "
+                "per-session readouts into a pool seeded from it")
+        if self._learn and ensemble != "off":
+            raise ValueError(
+                "learn=True is per-session teacher attribution; a fused "
+                "ensemble engine serves ONE logical stream — refit the "
+                "members offline and set_ensemble_weights() instead")
+        if not 0.0 < float(refit_decay) <= 1.0:
+            raise ValueError(f"refit_decay must be in (0, 1], "
+                             f"got {refit_decay}")
+        if int(refit_washout) < 0:
+            raise ValueError(f"refit_washout must be >= 0, "
+                             f"got {refit_washout}")
+        if drift_threshold is not None and drift_threshold <= 0:
+            raise ValueError(f"drift_threshold must be positive (got "
+                             f"{drift_threshold}); use None to disable "
+                             f"DPG ensemble growth")
+        if not 0.0 <= float(drift_beta) < 1.0:
+            raise ValueError(f"drift_beta must be in [0, 1), "
+                             f"got {drift_beta}")
+        self._refit_alpha = float(self.cfg.ridge_alpha if refit_alpha is None
+                                  else refit_alpha)
+        self._refit_decay = float(refit_decay)
+        self._refit_washout = int(refit_washout)
+        self._drift_threshold = (None if drift_threshold is None
+                                 else float(drift_threshold))
+        self._drift_beta = float(drift_beta)
+        self._growth_max = int(growth_max_members)
+        self._growth_sigma = float(growth_sigma)
+        self._growth_washout = int(growth_washout)
+        self._growth_seed = int(getattr(self.cfg, "seed", 0) or 0) + 7001
+        self._learn_state: Dict[Hashable, _LearnState] = {}
+        # Per-tenant readout pool: key -> (F, D_out) readout.  _slot_w is
+        # the device-side (max_slots, F, D_out) gather of the pool — None
+        # (zero overhead, engine-wide w_out serves every slot) until the
+        # first tenant readout diverges from the base.
+        self._readouts: Dict[Hashable, object] = {}
+        self._slot_w = None
+        self._metric_cache: Dict[Hashable, object] = {}
+        self._acc_cache = None          # (states_ref, states_np, y_prev_np)
         self._dtype = self.params.dtype
         self.mesh = mesh
         self._plan = None
@@ -289,8 +549,8 @@ class ReservoirEngine:
             raise ValueError(
                 "param-batched engine: slot i IS reservoir i, so a parked "
                 "session cannot be promoted into whichever slot is free — "
-                "paging is unsupported (park/re-admit via evict + "
-                "add_session(slot=...) instead)")
+                "paging is unsupported (park/re-admit via release + "
+                "submit(sid, h0=..., slot=...) instead)")
         self._park_host_rows = (None if park_host_rows is None
                                 else int(park_host_rows))
         self._cold_dir = cold_dir
@@ -312,7 +572,7 @@ class ReservoirEngine:
         # persisted observations never mis-price a different machine or
         # model size; a caller-supplied model keeps whatever key it has.
         if cost_model is None and (autotune or decode_slo_us is not None
-                                   or self._decode_k_auto
+                                   or self._decode_k_auto or self._learn
                                    or self.store is not None):
             cost_model = WaveCostModel(key=cost_key(
                 jax.default_backend(), self.cfg.n, self.cfg.d_out))
@@ -334,6 +594,8 @@ class ReservoirEngine:
                        "promote_waves": 0, "demote_waves": 0,
                        "inflight_peak": 0, "host_block_us": 0.0,
                        "overlap_demotes": 0,
+                       "refit_waves": 0, "refit_rows": 0,
+                       "refit_us_sum": 0.0, "growth_events": 0,
                        "by_bucket": {}}
         # Pipelined-executor window: dispatched-but-unretired waves, oldest
         # first.  Each entry carries the lazy output to block on (marker),
@@ -393,6 +655,13 @@ class ReservoirEngine:
         self._place_jit = jax.jit(arena_mod.place_many)
         self._release_jit = jax.jit(arena_mod.release_many)
         self._gather_jit = jax.jit(arena_mod.gather_rows)
+        # Batched refit: ONE vmapped generalized ridge solve covers every
+        # dirty session (and grown member) in a wave — (R, F, F) Grams,
+        # (R, F, D) cross terms, (R, F, F) per-row metrics (EET
+        # blockdiag(I, QᵀQ) for diag rows, identity for standard), shared
+        # traced alpha.
+        self._refit_jit = jax.jit(jax.vmap(ridge_mod.ridge_solve_general,
+                                           in_axes=(0, 0, 0, None)))
 
     def _fresh_arena(self) -> arena_mod.SlotArena:
         ar = arena_mod.make_arena(self.cfg.n, self.cfg.d_out, self.max_slots,
@@ -666,6 +935,9 @@ class ReservoirEngine:
             slots.append(slot)
         self.arena = self._place_jit(self.arena, jnp.asarray(slots),
                                      jnp.asarray(states), jnp.asarray(ys))
+        # Promoted sessions re-enter on fresh slots: re-scatter their tenant
+        # pool readouts so the next decode wave serves the right weights.
+        self._sync_slot_readouts(list(zip(sids, slots)))
         # A promote stays blocking even in the pipelined executor: it is on
         # someone's decode critical path, and an unmaterialized state is
         # still latency — the measured restore latency must be real.  The
@@ -722,63 +994,101 @@ class ReservoirEngine:
         set)."""
         return [] if self.store is None else self.store.sids
 
-    # ------------------------------------------------------------- lifecycle
-    def add_session(self, sid: Hashable, h0=None, y0=None, *,
-                    slot: Optional[int] = None) -> Optional[int]:
-        """Admit ``sid`` into a free slot; queue (admission-only, bucket 0)
-        when the arena is full.
+    # -------------------------------------------------- per-tenant readouts
+    def _wave_w(self):
+        """The readout the wave functions serve: the (max_slots, F, D_out)
+        per-slot pool once any tenant readout has diverged from the base,
+        else the engine-wide ``w_out`` (zero pool overhead until then)."""
+        return self.w_out if self._slot_w is None else self._slot_w
 
-        ``h0``: optional initial state in the engine's native layout (Q basis
-        for diag models) — e.g. a state returned by :meth:`evict`.  Returns
-        the slot index, or None when queued.
+    def _activate_pool(self) -> None:
+        """Materialize the per-slot readout pool (one-time retrace of the
+        wave fns: 2D -> 3D ``w_out``).  Seeded by broadcasting the base
+        readout to every slot; a param-batched engine's stacked readout
+        already IS the pool."""
+        if self._slot_w is not None:
+            return
+        if self.readout is None:
+            raise ValueError("per-tenant readout pools need a base readout")
+        w = self.w_out
+        if not self._batched:
+            w = jnp.broadcast_to(w, (self.max_slots,) + w.shape)
+        self._slot_w = jnp.asarray(w)
 
-        ``slot``: pin the session to a specific slot (never queues — raises
-        if that slot is taken).  In a param-batched engine slot ``i`` IS
-        reservoir ``i``, so a parked state is only meaningful in the slot it
-        was evicted from: re-admission with ``h0`` there *requires* ``slot=``
-        — otherwise the state would silently continue under a different
-        reservoir's weights.
+    def _readout_key(self, sid) -> Hashable:
+        """The readout-pool key serving ``sid``: its tenant when one was
+        given at submit, else the sid itself (private per-session pool)."""
+        ls = self._learn_state.get(sid)
+        return sid if ls is None or ls.tenant is None else ls.tenant
 
-        .. deprecated:: :meth:`submit` + :meth:`flush` are the serving
-           surface — ``submit(sid, u, h0=..., y0=...)`` queues prompt and
-           parked state together and ``flush()`` admits wave-batched.  This
-           shim stays one release for slot-pinned re-admission (the one flow
-           waves cannot express) and emits a ``DeprecationWarning``.
-        """
-        warnings.warn(
-            "ReservoirEngine.add_session is deprecated: use "
-            "submit(sid, u, h0=, y0=) + flush() — eager admission serves "
-            "one session at a time where a flush wave batches them",
-            DeprecationWarning, stacklevel=2)
-        if (sid in self.sessions or self.scheduler.has(sid)
-                or (self.store is not None and sid in self.store)):
-            raise KeyError(f"session {sid!r} already admitted")
-        if slot is not None:
-            if not 0 <= slot < self.max_slots:
-                raise ValueError(f"slot {slot} out of range "
-                                 f"[0, {self.max_slots})")
-            if self._slots[slot] is not None:
-                raise ValueError(
-                    f"slot {slot} is occupied by {self._slots[slot]!r} "
-                    f"(pinned admission never queues)")
-            return self._place(sid, slot, h0, y0)
-        if self._batched and h0 is not None:
+    def _base_readout(self, slot: int):
+        return (None if self.readout is None
+                else self.w_out[slot] if self._batched else self.w_out)
+
+    def _pool_readout(self, sid, slot: int):
+        w = self._readouts.get(self._readout_key(sid))
+        return self._base_readout(slot) if w is None else w
+
+    def _sync_slot_readouts(self, pairs) -> None:
+        """Scatter each (sid, slot) pair's effective readout into the device
+        pool — called at every placement/promotion.  No-op while the pool is
+        dormant (every slot serves the base readout by construction)."""
+        if self._slot_w is None:
+            return
+        pairs = list(pairs)
+        if not pairs:
+            return
+        idx = jnp.asarray([slot for _, slot in pairs])
+        ws = jnp.stack([self._pool_readout(sid, slot)
+                        for sid, slot in pairs])
+        self._slot_w = self._slot_w.at[idx].set(ws)
+
+    def _sync_key(self, key) -> None:
+        """Re-scatter every hot session serving ``key`` (tenant refit: all
+        of the tenant's hot sessions pick up the new readout at once)."""
+        self._sync_slot_readouts(
+            [(sid, st.slot) for sid, st in self.sessions.items()
+             if self._readout_key(sid) == key])
+
+    def set_readout(self, key: Hashable, w_out) -> None:
+        """Install/replace the pool readout for ``key`` (a tenant, or a sid
+        for a private per-session readout).  Hot sessions serving that key
+        switch on their next wave; sessions admitted later gather it at
+        placement.  Accepts a ``Readout`` or a bare (F, D_out) array."""
+        w = jnp.asarray(getattr(w_out, "w_out", w_out), self._dtype)
+        want = (self.cfg.n_features, self.cfg.d_out)
+        if w.shape != want:
+            raise ValueError(f"pool readout for {key!r} must be {want}, "
+                             f"got {tuple(w.shape)}")
+        self._activate_pool()
+        self._readouts[key] = w
+        self._sync_key(key)
+
+    def readout_for(self, sid):
+        """The effective (F, D_out) readout currently serving ``sid`` —
+        its tenant/session pool entry when one exists, else the base."""
+        w = self._readouts.get(self._readout_key(sid))
+        if w is not None:
+            return w
+        if not self._batched:
+            return self.w_out
+        return self._base_readout(self.sessions[sid].slot)
+
+    def set_ensemble_weights(self, weights) -> None:
+        """Per-reservoir voting weights for ``ensemble='weighted'`` —
+        typically ``1 / (rmse_i**2 + eps)`` from each member's held-out
+        RMSE.  ``None`` restores uniform voting (= the plain mean)."""
+        if self.ensemble != "weighted":
             raise ValueError(
-                "param-batched engine: a parked state belongs to the "
-                "reservoir (= slot) it was evicted from — re-admit with "
-                "slot=<original slot> so it cannot land under different "
-                "weights")
-        try:
-            slot = self._slots.index(None)
-        except ValueError:
-            # Same validate-before-enqueue invariant as submit(): a queued
-            # mis-shaped parked state would otherwise detonate later inside
-            # evict()'s auto-admission, after bookkeeping already ran.
-            h0, y0 = self._coerce_state(h0, y0)
-            self.scheduler.submit(PrefillRequest(sid=sid, h0=h0, y0=y0))
-            return None
-        return self._place(sid, slot, h0, y0)
+                f"set_ensemble_weights needs ensemble='weighted' "
+                f"(engine has ensemble={self.ensemble!r})")
+        if weights is None:
+            self._ens_weights = None
+            return
+        w = jnp.asarray(weights, self._dtype).reshape(self.max_slots)
+        self._ens_weights = w
 
+    # ------------------------------------------------------------- lifecycle
     def _coerce_state(self, h0, y0):
         """Validate/coerce a parked (state, feedback) pair at the call site —
         nothing mis-shaped may enter the admission queue."""
@@ -788,39 +1098,77 @@ class ReservoirEngine:
             y0 = np.asarray(y0, self._dtype).reshape(self.cfg.d_out)
         return h0, y0
 
-    def submit(self, sid: Hashable, u, y_teacher=None, *, h0=None,
-               y0=None) -> None:
-        """Queue ``sid`` with its prompt for wave-batched admission.
+    def submit(self, sid: Hashable, u=None, y_teacher=None, *, h0=None,
+               y0=None, slot: Optional[int] = None,
+               tenant: Optional[Hashable] = None) -> Optional[int]:
+        """Queue ``sid`` for wave-batched admission — the ONE admission
+        surface (the PR-6 ``add_session``/``prefill`` shims are gone).
 
         The request accumulates in the scheduler; :meth:`flush` drains the
-        queue in same-bucket waves, each running ONE batched prefill.  This
-        is the asynchronous replacement for the eager ``add_session`` +
-        ``prefill`` flow (admission is no longer synchronous with arrival).
-        """
+        queue in same-bucket waves, each running ONE batched prefill.
+
+        ``u=None`` queues an *admission-only* request (bucket 0): the
+        session lands with its parked ``h0``/``y0`` (zeros when omitted) on
+        the next flush, or back-fills the slot a :meth:`release` frees.
+
+        ``slot=``: pin an admission-only placement to a specific slot,
+        immediately (never queues; raises if the slot is taken or ``u`` is
+        given — a pinned prompt would bypass wave batching).  Returns the
+        slot index.  A param-batched engine *requires* the pin when
+        re-admitting a parked state: slot ``i`` IS reservoir ``i``, so the
+        state must land under the weights that produced it.
+
+        ``tenant=``: readout-pool key — sessions sharing a tenant serve
+        (and, with ``learn=True``, refit) ONE pooled readout; without it a
+        learning session refits a private per-sid readout."""
         if (sid in self.sessions or self.scheduler.has(sid)
                 or (self.store is not None and sid in self.store)):
             raise KeyError(f"session {sid!r} already admitted")
+        if slot is not None:
+            if u is not None:
+                raise ValueError(
+                    "slot-pinned submit is admission-only: submit the "
+                    "prompt without slot= (wave admission assigns slots) "
+                    "or decode the pinned session open-loop")
+            if not 0 <= slot < self.max_slots:
+                raise ValueError(f"slot {slot} out of range "
+                                 f"[0, {self.max_slots})")
+            if self._slots[slot] is not None:
+                raise ValueError(
+                    f"slot {slot} is occupied by {self._slots[slot]!r} "
+                    f"(pinned admission never queues)")
+            h0, y0 = self._coerce_state(h0, y0)
+            out = self._place(sid, slot, h0, y0)
+            self._note_admission(sid, tenant)
+            return out
         if self._batched and h0 is not None:
             raise ValueError(
-                "param-batched engine: re-admit parked states via "
-                "add_session(slot=<original slot>) — wave admission cannot "
-                "guarantee the slot")
+                "param-batched engine: a parked state belongs to the "
+                "reservoir (= slot) it was released from — re-admit with "
+                "submit(sid, h0=..., slot=<original slot>) so it cannot "
+                "land under different weights")
         # Everything is validated/coerced HERE, before the request enters the
         # queue: flush() commits host bookkeeping (slot table, sessions) as
         # it builds each wave, so a mis-shaped array surfacing there would
         # leave the engine permanently corrupted (admitted sessions with
         # empty states and a lost prompt).
-        u, y_teacher = self._validate_prompt(u, y_teacher)
+        if u is not None:
+            u, y_teacher = self._validate_prompt(u, y_teacher)
+        elif y_teacher is not None:
+            raise ValueError("y_teacher without a prompt — admission-only "
+                             "submits carry state, not teacher tokens")
         h0, y0 = self._coerce_state(h0, y0)
         self.scheduler.submit(PrefillRequest(sid=sid, u=u,
                                              y_teacher=y_teacher,
-                                             h0=h0, y0=y0))
+                                             h0=h0, y0=y0, tenant=tenant))
+        return None
 
     def flush(self, *, method: str = "auto", chunk: int = 128,
               want_outputs: bool = False,
               max_waves: Optional[int] = None,
               decode_interleave: bool = False,
-              decode_sids=None) -> Dict[Hashable, object]:
+              decode_sids=None, refit: bool = False
+              ) -> Dict[Hashable, object]:
         """Drain the admission queue, one batched prefill per same-bucket
         wave.  Returns sid -> per-step outputs for the prompt sessions that
         *completed* their prefill this flush (None entries unless
@@ -867,7 +1215,17 @@ class ReservoirEngine:
         buffered decode tokens; decoding them later promotes them back
         transparently.  Paging moves state bit-exactly, so outputs match an
         unpaged engine with enough slots (pinned by test).
+
+        ``refit=True`` (needs ``learn=True``): after the queue drains, every
+        *dirty* learning session (new teacher pairs since its last solve)
+        refits in ONE batched device wave (:meth:`refit`).  With decode
+        interleaving active the wave is priced first on the cost model's
+        ``c_refit(B)`` surface — a refit predicted to blow the decode
+        budget yields to a decode wave before running.
         """
+        if refit and not self._learn:
+            raise ValueError("flush(refit=True) needs learn=True on the "
+                             "engine — nothing accumulates (G, C) otherwise")
         if not decode_interleave:
             decode_sids = []
         else:
@@ -964,6 +1322,15 @@ class ReservoirEngine:
                 planned = self.scheduler.peek_wave(self._capacity(protect))
                 if planned:
                     self._make_room(planned, protect)
+        if refit:
+            dirty = [s for s, ls in self._learn_state.items() if ls.dirty]
+            if dirty and decode_sids and self.cost_model is not None and (
+                    self.cost_model.predict_refit_us(len(dirty))
+                    > self._decode_budget(len(decode_sids))):
+                # The refit wave would blow the decode budget: decode first
+                # (fresh budget), then solve.
+                self._decode_wave(decode_sids)
+            self._refit_wave(dirty)
         return results
 
     def _decode_budget(self, n_decoders: int) -> float:
@@ -1051,14 +1418,15 @@ class ReservoirEngine:
 
         def launch():
             self.arena, ys = self._closed_jit(
-                self.params, self.w_out, self.arena, jnp.asarray(mask),
-                int(self.decode_wave_tokens))
+                self.params, self._wave_w(), self.arena, jnp.asarray(mask),
+                int(self.decode_wave_tokens), self._ens_weights)
             return ys
 
         ys = self._dispatch_decode(launch, sids,
                                    tokens=self.decode_wave_tokens,
                                    block=True, interleave=True,
                                    kind="interleave")
+        self._note_freerun(sids, self.decode_wave_tokens)
         for sid in sids:
             self._decode_buf.setdefault(sid, []).append(
                 ys[:, self.sessions[sid].slot])
@@ -1136,6 +1504,315 @@ class ReservoirEngine:
         self._decode_clock_us = 0.0
         self._last_decode_t = wall
 
+    # ----------------------------------------------------- learn-while-serve
+    def _note_admission(self, sid, tenant) -> None:
+        """Create the session's learn state at admission (lazy: an engine
+        with ``learn=False`` and no tenant key never allocates one)."""
+        if tenant is None and not self._learn:
+            return
+        ls = self._learn_state.setdefault(sid, _LearnState())
+        if tenant is not None:
+            ls.tenant = tenant
+        if ls.acc.pairs == 0 and not ls.acc.buf_h:
+            ls.acc.skip_left = self._refit_washout
+
+    def _note_freerun(self, sids, n: int) -> None:
+        """Free-running tokens break the teacher pairing: the next observe
+        of these sessions must not form a training pair (``steps_since_fb``
+        overshoots 1), and grown members — which do NOT free-run — fall out
+        of state sync and re-washout before accumulating again."""
+        if not self._learn_state:
+            return
+        for sid in sids:
+            ls = self._learn_state.get(sid)
+            if ls is None:
+                continue
+            ls.steps_since_fb += n
+            for mb in ls.members:
+                mb.steps_since_fb += n
+                mb.acc.skip_left = max(mb.acc.skip_left,
+                                       self._growth_washout)
+
+    def _acc_pair(self, acc: _GramAcc, h, fb, y_np, pred) -> bool:
+        """Buffer one (state, feedback, truth) training row — host copies,
+        taken HERE because the decode wave that produced them has already
+        materialized (``decode_step`` blocks on its output), so the copy is
+        a cheap D2H of one row; buffering the lazy device slices instead
+        turns the later fold into hundreds of tiny dispatches (measured
+        ~40ms/wave vs ~1ms).  Also keeps the pre-observe prediction for the
+        held-out drift EWMA.  Returns whether a training row was kept
+        (washout rows only feed drift)."""
+        if pred is not None:
+            acc.buf_pred.append((np.asarray(pred, self._dtype), y_np))
+        if acc.skip_left > 0:
+            acc.skip_left -= 1
+            return False
+        acc.buf_h.append(np.asarray(h, self._dtype))
+        acc.buf_fb.append(None if fb is None
+                          else np.asarray(fb, self._dtype))
+        acc.buf_y.append(y_np)
+        return True
+
+    def _fold_grouped(self, sids) -> None:
+        """Batch the session folds of one refit wave: sessions sharing the
+        engine params, one window length, and one prior-stats shape fold in
+        ONE vmapped :func:`_fold_rows_batch` dispatch — at the steady serve
+        cadence (every session observes every token, refits on one clock)
+        that is ALL of them, and the per-wave fold cost stops scaling with
+        the session count.  Stragglers (odd window lengths, first-ever
+        folds mixed with decayed ones) fall through to the per-session
+        :meth:`_fold_acc` untouched."""
+        lam = self._refit_decay
+        use_fb = self.cfg.use_feedback
+        groups: Dict[tuple, list] = {}
+        for sid in sids:
+            acc = self._learn_state[sid].acc
+            m = len(acc.buf_h)
+            if not m or (use_fb and any(f is None for f in acc.buf_fb)):
+                continue
+            groups.setdefault((m, acc.gram is None), []).append(acc)
+        for (m, fresh), accs in groups.items():
+            if len(accs) < 2:
+                continue              # a lone fold gains nothing from vmap
+            h = jnp.asarray(np.stack([np.stack(a.buf_h) for a in accs]),
+                            self._dtype)
+            y = jnp.asarray(np.stack([np.stack(a.buf_y) for a in accs]),
+                            self._dtype)
+            fb = (jnp.asarray(np.stack([np.stack(a.buf_fb) for a in accs]),
+                              self._dtype) if use_fb else None)
+            g0 = c0 = None
+            if not fresh:
+                g0 = jnp.stack([a.gram for a in accs])
+                c0 = jnp.stack([a.cg for a in accs])
+            g, c = _fold_rows_batch(self.params, h, fb, y, g0, c0, lam)
+            for i, acc in enumerate(accs):
+                acc.gram, acc.cg = g[i], c[i]
+                acc.pairs += m
+                acc.buf_h.clear()
+                acc.buf_fb.clear()
+                acc.buf_y.clear()
+
+    def _fold_acc(self, acc: _GramAcc, params) -> None:
+        """Fold the buffered rows into the running ``(G, C)`` — λ-decayed:
+        row i of an m-row window scales by λ^((m-1-i)/2) before
+        ``gram_streaming`` so BOTH G and C carry λ^(m-1-i), and the
+        previously folded stats decay by λ^m (exactly the weights one
+        decayed offline fit over the whole stream would use).  Also folds
+        the buffered predictions into the drift EWMA.  Buffers are host
+        rows (see :meth:`_acc_pair`), so the fold is ONE H2D upload plus
+        the fused :func:`_fold_rows` kernel."""
+        m = len(acc.buf_h)
+        lam = self._refit_decay
+        if m:
+            h = jnp.asarray(np.stack(acc.buf_h), self._dtype)
+            y = jnp.asarray(np.stack(acc.buf_y), self._dtype)
+            fb = None
+            if self.cfg.use_feedback:
+                fb = jnp.asarray(np.stack(acc.buf_fb), self._dtype)
+            acc.gram, acc.cg = _fold_rows(params, h, fb, y,
+                                          acc.gram, acc.cg, lam)
+            acc.pairs += m
+            acc.buf_h.clear()
+            acc.buf_fb.clear()
+            acc.buf_y.clear()
+        if acc.buf_pred:
+            preds = np.stack([p for p, _ in acc.buf_pred])
+            ys = np.stack([t for _, t in acc.buf_pred])
+            errs = np.mean((preds - ys) ** 2, axis=1)
+            acc.buf_pred.clear()
+            b = self._drift_beta
+            d = acc.drift
+            for e in errs:
+                d = float(e) if d is None else b * d + (1.0 - b) * float(e)
+            acc.drift = d
+
+    def _session_params(self, sid):
+        """The param struct whose features/metric govern ``sid``'s refit —
+        the slot's slice on a param-batched engine (slot i IS reservoir i,
+        and batched engines never park, so the slot is always live)."""
+        if not self._batched:
+            return self.params
+        slot = self.sessions[sid].slot
+        return jax.tree_util.tree_map(lambda leaf: leaf[slot], self.params)
+
+    def _metric_of(self, params, cache_key: Hashable = None):
+        """Per-row refit metric: EET blockdiag(I, QᵀQ) for diag params
+        (paper Eq. 29 — refit trains directly in the eigenbasis), identity
+        for standard mode (plain ridge).  The metric is a constant of the
+        (frozen) params, so it caches under ``cache_key`` (slot index on a
+        param-batched engine, None otherwise) — rebuilding it cost more
+        than the refit solve itself."""
+        m = self._metric_cache.get(cache_key)
+        if m is None:
+            if params.mode == "diag":
+                m = esn_fn.eet_metric(params)
+            else:
+                m = jnp.eye(self.cfg.n_features, dtype=self._dtype)
+            self._metric_cache[cache_key] = m
+        return m
+
+    def _maybe_grow(self, sid, ls: _LearnState) -> None:
+        """DPG ensemble growth: when the session's held-out streaming RMSE
+        drifts past the threshold, sample a fresh reservoir member
+        on-demand (``dpg_params`` — O(N), no diagonalization ever runs) and
+        fold it into the session's ensemble.  The member starts at h=0 and
+        synchronizes off the shared teacher stream (echo state property);
+        it votes only after its first refit.  The drift EWMA resets so one
+        excursion cannot cascade straight to ``growth_max_members``."""
+        if (self._drift_threshold is None or self._batched
+                or ls.acc.drift is None
+                or len(ls.members) >= self._growth_max
+                or ls.acc.drift ** 0.5 <= self._drift_threshold):
+            return
+        self._growth_seed += 1
+        p = esn_fn.dpg_params(
+            dataclasses.replace(self.cfg, seed=self._growth_seed),
+            "noisy_golden", sigma=self._growth_sigma)
+        fb0 = (jnp.zeros((self.cfg.d_out,), self._dtype)
+               if ls.last_fb is None
+               else jnp.asarray(ls.last_fb, self._dtype))
+        mb = _Member(params=p, h=jnp.zeros((self.cfg.n,), self._dtype),
+                     y_fb=fb0)
+        mb.acc.skip_left = self._growth_washout
+        ls.members.append(mb)
+        ls.acc.drift = None
+        self._stats["growth_events"] += 1
+
+    def _step_members(self, ls: _LearnState, u_vec, y_primary):
+        """Advance the session's grown members one teacher-driven step and
+        return the validation-RMSE-weighted vote over primary + members
+        (weight 1/(mse+eps); members without a refit-trained readout or a
+        drift estimate yet abstain)."""
+        u = jnp.asarray(np.asarray(u_vec, self._dtype))[None]
+        w0 = (1.0 if ls.acc.drift is None
+              else 1.0 / (ls.acc.drift + 1e-6))
+        votes = [(np.asarray(y_primary, np.float64), w0)]
+        for mb in ls.members:
+            fb_col = None
+            if self.cfg.use_feedback:
+                fb_col = jnp.asarray(mb.y_fb, self._dtype)[None]
+            h = esn_fn.step_states(mb.params, mb.h[None],
+                                   esn_fn.drive(mb.params, u, fb_col))[0]
+            mb.h = h
+            mb.steps_since_fb += 1
+            if mb.w is None:
+                continue
+            x = esn_fn.assemble_features(mb.params, h[None], fb_col)
+            pred = arena_mod.apply_readout(mb.w, x)[0]
+            mb.pred_last = pred
+            mb.y_fb = pred
+            if mb.acc.drift is not None:
+                votes.append((np.asarray(pred, np.float64),
+                              1.0 / (mb.acc.drift + 1e-6)))
+        if len(votes) == 1:
+            return y_primary
+        total = sum(w for _, w in votes)
+        fused = sum(p * w for p, w in votes) / total
+        return fused.astype(np.asarray(y_primary).dtype)
+
+    def drift_rmse(self, sid) -> Optional[float]:
+        """The session's held-out streaming RMSE estimate (sqrt of the
+        prequential squared-error EWMA), folding any buffered predictions
+        first.  None until at least one post-washout teacher pair landed."""
+        ls = self._learn_state.get(sid)
+        if ls is None:
+            return None
+        self._fold_acc(ls.acc, self._session_params(sid))
+        return None if ls.acc.drift is None else ls.acc.drift ** 0.5
+
+    def refit(self, sid: Optional[Hashable] = None, *,
+              alpha: Optional[float] = None) -> Dict[Hashable, object]:
+        """Solve fresh readouts from the streaming ``(G, C)`` — one batched
+        device wave over every dirty session (or just ``sid``), vmapped
+        ``ridge_solve_general`` with the per-row EET metric.  The solved
+        readout lands in the session's tenant pool entry (hot slots
+        re-scatter immediately) and is returned per sid.  With λ=1 and a
+        washout equal to the prompt length, the solution matches offline
+        ``core.esn.fit`` on the concatenated teacher stream ≤1e-5 (pinned
+        by test — "the prompt is the washout").  Grown members refit in the
+        same wave; drift past ``drift_threshold`` triggers DPG growth."""
+        if not self._learn:
+            raise ValueError("refit needs learn=True on the engine — "
+                             "nothing accumulates (G, C) otherwise")
+        if sid is None:
+            sids = [s for s, ls in self._learn_state.items() if ls.dirty]
+        else:
+            if sid not in self._learn_state:
+                raise KeyError(f"session {sid!r} has no learn state (was it "
+                               f"admitted with learn=True on the engine?)")
+            sids = [sid]
+        return self._refit_wave(sids, alpha=alpha)
+
+    def _refit_wave(self, sids, *, alpha: Optional[float] = None
+                    ) -> Dict[Hashable, object]:
+        """The batched refit wave: fold every target's buffers, stack the
+        (G, C, metric) rows (sessions + their grown members), ONE vmapped
+        generalized ridge solve, scatter the results into the readout pool.
+        Timed end-to-end; under autotune the measurement feeds the cost
+        model's ``c_refit(B)`` surface, and the decode planning clock is
+        charged either way (a refit wave spends real latency the decode
+        budget must see)."""
+        if not sids:
+            return {}
+        a = self._refit_alpha if alpha is None else float(alpha)
+        t0 = time.perf_counter()
+        if not self._batched:
+            self._fold_grouped(sids)
+        rows = []                     # (sid, member-or-None, g, c, metric)
+        for sid in sids:
+            ls = self._learn_state[sid]
+            p = self._session_params(sid)
+            self._fold_acc(ls.acc, p)
+            if ls.acc.gram is not None:
+                rows.append((sid, None, ls.acc.gram, ls.acc.cg,
+                             self._metric_of(
+                                 p, self.sessions[sid].slot
+                                 if self._batched else None)))
+            for mb in ls.members:
+                self._fold_acc(mb.acc, mb.params)
+                if mb.acc.gram is not None:
+                    if mb.metric is None:
+                        mb.metric = (esn_fn.eet_metric(mb.params)
+                                     if mb.params.mode == "diag" else
+                                     jnp.eye(self.cfg.n_features,
+                                             dtype=self._dtype))
+                    rows.append((sid, mb, mb.acc.gram, mb.acc.cg,
+                                 mb.metric))
+            self._maybe_grow(sid, ls)
+            ls.dirty = False
+        if not rows:
+            return {}
+        w = self._refit_jit(jnp.stack([r[2] for r in rows]),
+                            jnp.stack([r[3] for r in rows]),
+                            jnp.stack([r[4] for r in rows]), a)
+        jax.block_until_ready(w)
+        us = (time.perf_counter() - t0) * 1e6
+        s = self._stats
+        s["refit_waves"] += 1
+        s["refit_rows"] += len(rows)
+        s["refit_us_sum"] += us
+        if self._autotune and self.cost_model is not None:
+            self.cost_model.observe_refit(len(rows), us)
+        self._decode_clock_us += us
+        out: Dict[Hashable, object] = {}
+        touched = set()
+        for (sid, mb, *_), wi in zip(rows, w):
+            if mb is None:
+                self._activate_pool()
+                key = self._readout_key(sid)
+                self._readouts[key] = wi
+                touched.add(key)
+                out[sid] = wi
+            else:
+                mb.w = wi
+        if touched:
+            # one scatter for every hot session serving ANY refit key this
+            # wave — per-key _sync_key calls would each pay a dispatch
+            self._sync_slot_readouts(
+                [(sid, st.slot) for sid, st in self.sessions.items()
+                 if self._readout_key(sid) in touched])
+        return out
+
     def _run_wave(self, wave: List[WaveItem], capacity: int,
                   results: Dict[Hashable, object], *, method: str,
                   chunk: int, want_outputs: bool) -> None:
@@ -1160,9 +1837,14 @@ class ReservoirEngine:
                 if it.req.y0 is not None:
                     y0s[i] = np.asarray(it.req.y0)
                 slots.append(slot)
+                self._note_admission(it.sid, it.req.tenant)
             touched.update(slots)
             self.arena = self._place_jit(self.arena, jnp.asarray(slots),
                                          jnp.asarray(h0s), jnp.asarray(y0s))
+            # Freshly placed slots must serve their tenant's pooled readout
+            # from the first wave, not the engine-wide base.
+            self._sync_slot_readouts(
+                [(it.sid, s) for it, s in zip(fresh, slots)])
         prompts = [it for it in wave if it.req.u is not None]
         if not prompts:
             self._record_wave(0, len(wave), len(fresh), capacity, 0, None)
@@ -1202,7 +1884,7 @@ class ReservoirEngine:
             self._drain_inflight()
             t0 = time.perf_counter()
         self.arena, out = self._wave_jit(
-            self.params, self.w_out, self.arena, slots,
+            self.params, self._wave_w(), self.arena, slots,
             jnp.asarray(u_pad), jnp.asarray(lengths),
             None if yt_pad is None else jnp.asarray(yt_pad),
             method=wave_method, chunk=chunk, want_outputs=want_outputs)
@@ -1245,6 +1927,25 @@ class ReservoirEngine:
                     out[i, :int(lengths[i])])
             if it.last:
                 st.prefill_pending = False
+                ls = self._learn_state.get(it.sid)
+                if ls is not None:
+                    # The prompt is the washout: the final teacher row
+                    # re-arms the (state, feedback, truth) pairing so the
+                    # very next decode_step + observe forms a training row —
+                    # exactly the row offline fit(washout=T_prompt) keeps
+                    # first.  Grown members do not ride prefill waves; they
+                    # resynchronize off the teacher stream (echo state
+                    # property) and re-washout before accumulating.
+                    ls.steps_since_fb = 0
+                    if self.cfg.use_feedback and it.req.y_teacher is not None:
+                        ls.last_fb = np.asarray(
+                            it.req.y_teacher[it.stop - 1], self._dtype)
+                    for mb in ls.members:
+                        mb.steps_since_fb = 0
+                        mb.acc.skip_left = max(mb.acc.skip_left,
+                                               self._growth_washout)
+                        if ls.last_fb is not None:
+                            mb.y_fb = jnp.asarray(ls.last_fb, self._dtype)
                 # Pop unconditionally: a want_outputs=False final chunk must
                 # still clear chunks recorded by earlier want_outputs=True
                 # flushes, or a later session reusing the sid would
@@ -1280,8 +1981,12 @@ class ReservoirEngine:
                                "fresh": fresh, "capacity": capacity,
                                "tokens": tokens, "us": us})
 
-    def stats(self) -> dict:
-        """Engine-lifetime serving counters (cumulative across ``reset``).
+    def stats(self) -> "EngineStats":
+        """Engine-lifetime serving counters (cumulative across ``reset``),
+        returned as a typed frozen :class:`EngineStats` dataclass — use
+        attribute access (``stats().waves_total``); ``.to_dict()`` yields
+        the historical plain dict, and dict-style key access still works
+        for one release with a :class:`DeprecationWarning`.
 
         Wave occupancy (``rows / max_slots`` per wave) and per-bucket latency
         feed the cost model and the ``launch/serve.py --autotune`` report;
@@ -1309,6 +2014,14 @@ class ReservoirEngine:
         and ``store`` the tier breakdown (host/cold rows, pool occupancy,
         epoch).
 
+        Refit counters (learn-while-serving engines):
+        ``refit_waves_total`` / ``refit_rows_total`` count batched refit
+        waves and the (session + grown-member) rows they solved,
+        ``refit_us_sum`` their cumulative wall time, ``sessions_dirty`` how
+        many sessions currently hold unconsumed streaming ``(G, C)`` stats,
+        and ``growth_events`` how many DPG ensemble members drift growth
+        has sampled.
+
         Pipeline counters: ``pipeline_inflight`` / ``pipeline_inflight_peak``
         the current / high-water in-flight wave window,
         ``host_block_us`` the cumulative wall time the host spent inside
@@ -1329,7 +2042,7 @@ class ReservoirEngine:
                           if w["us"] is not None and w["rows"] > 0]
         promote = (np.asarray(self._promote_us, float)
                    if self._promote_us else None)
-        return {
+        d = {
             "sessions_active": len(self.sessions),
             "sessions_ready": len(self.ready_sessions),
             "sessions_queued": len(self.scheduler),
@@ -1368,10 +2081,17 @@ class ReservoirEngine:
             "pipeline_inflight_peak": s["inflight_peak"],
             "host_block_us": s["host_block_us"],
             "overlap_demotes": s["overlap_demotes"],
+            "refit_waves_total": s["refit_waves"],
+            "refit_rows_total": s["refit_rows"],
+            "refit_us_sum": s["refit_us_sum"],
+            "sessions_dirty": sum(ls.dirty
+                                  for ls in self._learn_state.values()),
+            "growth_events": s["growth_events"],
             "by_bucket": {t: dict(v) for t, v in s["by_bucket"].items()},
             "wave_log": list(self._wave_log),
             "wave_costs": wave_costs,
         }
+        return EngineStats(**d)
 
     def _place(self, sid, slot: int, h0, y0) -> int:
         n = self.cfg.n
@@ -1384,44 +2104,59 @@ class ReservoirEngine:
         self._pipeline_taint([slot])
         self._slots[slot] = sid
         self.sessions[sid] = SessionStats(slot=slot)
+        self._sync_slot_readouts([(sid, slot)])
         return slot
 
-    def evict(self, sid: Hashable):
-        """Hand ``sid``'s state back to the caller and forget the session.
+    def release(self, sid: Hashable, *, drop: bool = False):
+        """Hand ``sid``'s state back to the caller and forget the session —
+        the ONE session-release surface (internal park/demote paths move
+        state between tiers but never forget a session; this does).
         Returns an :class:`EvictResult` — unpacks as the historical
         ``(state, y_prev)`` 2-tuple for re-admission via ``h0=``/``y0=``,
         and carries ``.decoded``: the :class:`DecodeResult` of any buffered
         tokens the caller had not yet collected (they used to be dropped
         silently — token loss; now they leave with the session).
 
-        On a **paged engine** this is the demotion shim: sessions no longer
-        *need* evicting to free capacity (a full arena parks its LRU idle
-        sessions automatically), so ``evict`` is for callers that want the
-        state *out* of the engine — a parked sid is fetched straight from
-        the store tier it lives in, a hot sid from its slot.
+        ``drop=True`` discards the state instead of returning it
+        (``EvictResult(None, None, decoded)``) — for disconnects, where
+        gathering a parked session's host/cold rows just to throw them away
+        is pure waste.  Buffered decoded tokens are still drained and
+        returned either way.
 
-        The oldest queued *admission-only* request (legacy ``add_session``
+        On a **paged engine** sessions no longer *need* releasing to free
+        capacity (a full arena parks its LRU idle sessions automatically),
+        so ``release`` is for callers that want the state *out* of the
+        engine — a parked sid is fetched straight from the store tier it
+        lives in, a hot sid from its slot.
+
+        The oldest queued *admission-only* request (``submit(sid, h0=...)``
         overflow) is admitted into the freed slot; queued *prompt* requests
         stay put until the next :meth:`flush` so their prefill runs
-        wave-batched, not one-by-one on each eviction.
+        wave-batched, not one-by-one on each release.
 
-        Evicting a sid that is still *queued* cancels it instead (returns
+        Releasing a sid that is still *queued* cancels it instead (returns
         its queued ``(h0, y0)``) — clients that disconnect before admission
-        must not leak into slots.  Evicting a **chunk-in-flight** session
+        must not leak into slots.  Releasing a **chunk-in-flight** session
         (slot held, chunk waves still queued) cancels the queued remainder
         and returns the *partial carry* — the slot state after the chunks
         that already ran; without the cancel the orphaned chunks would
         later run on a freed (possibly reassigned) slot.
 
         For a hot session the returned arrays are lazy device slices (no
-        host sync): callers that evict only to free the slot pay nothing;
+        host sync): callers that release only to free the slot pay nothing;
         callers that park the session convert to host storage on their own
         schedule.  Parked sessions return host arrays (they already live
-        there)."""
+        there).  Any streaming learn state (Gram stats, drift EWMA, grown
+        ensemble members) leaves with the session; the tenant's pooled
+        readout stays — other sessions under the same key keep serving
+        it."""
         if self.store is not None and sid in self.store:
             decoded = self.collect_decoded(sid)
             self._last_decode_wall.pop(sid, None)
+            self._learn_state.pop(sid, None)
             states, ys, _ = self.store.fetch_many([sid])
+            if drop:
+                return EvictResult(None, None, decoded)
             return EvictResult(states[0], ys[0], decoded)
         if sid not in self.sessions:
             try:
@@ -1429,7 +2164,11 @@ class ReservoirEngine:
             except KeyError:
                 raise KeyError(
                     f"session {sid!r} is neither active nor queued") from None
-            return EvictResult(req.h0, req.y0, self.collect_decoded(sid))
+            self._learn_state.pop(sid, None)
+            decoded = self.collect_decoded(sid)
+            if drop:
+                return EvictResult(None, None, decoded)
+            return EvictResult(req.h0, req.y0, decoded)
         # Drain the un-collected tokens BEFORE the session bookkeeping goes
         # away: collect_decoded also settles the per-dispatch metadata this
         # sid is still pending in.
@@ -1442,8 +2181,12 @@ class ReservoirEngine:
             self.scheduler.cancel(sid)
         self._chunk_outs.pop(sid, None)
         self._last_decode_wall.pop(sid, None)
-        state = self.arena.states[st.slot]
-        y = self.arena.y_prev[st.slot]
+        self._learn_state.pop(sid, None)
+        if drop:
+            state = y = None
+        else:
+            state = self.arena.states[st.slot]
+            y = self.arena.y_prev[st.slot]
         self._slots[st.slot] = None
         self.arena = arena_mod.release(self.arena, st.slot)
         # The freed slot may be re-placed outside wave bookkeeping — its
@@ -1456,6 +2199,11 @@ class ReservoirEngine:
                 self._place(req.sid, st.slot, req.h0, req.y0)
                 break
         return EvictResult(state, y, decoded)
+
+    def evict(self, sid: Hashable):
+        """Deprecated alias for :meth:`release` (kept one release for
+        migration — see the README migration table)."""
+        return self.release(sid)
 
     def reset(self):
         """Drop all sessions (active + queued) and zero the state arena.
@@ -1471,6 +2219,9 @@ class ReservoirEngine:
         self._use_clock = 0
         self._promote_us.clear()
         self._chunk_outs.clear()
+        self._learn_state.clear()
+        self._readouts.clear()
+        self._slot_w = None
         self._decode_buf.clear()
         self._decode_meta.clear()
         self._last_decode_wall.clear()
@@ -1548,12 +2299,11 @@ class ReservoirEngine:
 
     # --------------------------------------------------------------- prefill
     def _validate_prompt(self, u, y_teacher, xp=np):
-        """Shape/width checks shared by submit() and the eager prefill shim.
+        """Shape/width checks for submit() prompts.
 
-        ``xp=np`` (submit): prompts land on host, where flush() pads them
-        into wave arrays anyway.  ``xp=jnp`` (eager prefill): the array goes
-        straight into the one-row wave, so a device-resident prompt must NOT
-        be pulled to host — validation only reads shape metadata."""
+        ``xp=np``: prompts land on host, where flush() pads them into wave
+        arrays anyway (validation only reads shape metadata, so a
+        device-resident prompt is not pulled to host eagerly)."""
         u = xp.asarray(u, self._dtype)
         if u.ndim != 2 or u.shape[-1] != self.cfg.d_in:
             raise ValueError(
@@ -1579,45 +2329,6 @@ class ReservoirEngine:
                 "is False) — it would be silently ignored; drop it or build "
                 "the model with use_feedback=True")
         return u, y_teacher
-
-    def prefill(self, sid: Hashable, u, y_teacher=None, *,
-                method: str = "auto", chunk: int = 128,
-                want_outputs: bool = True):
-        """Eagerly run ``sid``'s (already admitted) slot through a (T, D_in)
-        prompt — a **one-row wave** through ``arena.prefill_wave``, starting
-        from the slot's current state.  Returns per-step predictions
-        (T, D_out) when a readout is trained, else the (T, N) states.
-
-        .. deprecated:: prefer :meth:`submit` + :meth:`flush` — the eager
-           path serves one session per scan, the wave path batches every
-           same-bucket prompt into one.  Numerics are identical (this shim
-           IS a B=1 wave).
-
-        ``want_outputs=False`` skips the per-step readout and returns None —
-        cheaper when the caller only needs the slot warmed up (the feedback
-        seed for closed-loop decode is still computed)."""
-        warnings.warn(
-            "ReservoirEngine.prefill is deprecated: use submit(sid, u) + "
-            "flush(want_outputs=...) — the eager path is a one-row wave, "
-            "the flush path batches every same-bucket prompt into one",
-            DeprecationWarning, stacklevel=2)
-        st = self._active(sid)
-        # xp=jnp: device-resident prompts stay on device (async dispatch —
-        # validation only reads shape metadata, no host transfer).
-        u, y_teacher = self._validate_prompt(u, y_teacher, xp=jnp)
-        t = int(u.shape[0])
-        if method == "auto" and self.params.mode == "diag":
-            method = dispatch.resolve_method(t, chunk=chunk)
-        self.arena, out = self._wave_jit(
-            self.params, self.w_out, self.arena,
-            jnp.asarray([st.slot]), u[None],
-            jnp.asarray([t], jnp.int32),
-            None if y_teacher is None else y_teacher[None],
-            method=method, chunk=chunk, want_outputs=want_outputs)
-        # Arena write outside wave bookkeeping, but to a known slot.
-        self._pipeline_taint([st.slot])
-        st.tokens_prefilled += t
-        return None if out is None else out[0]
 
     # ---------------------------------------------------------------- decode
     def decode_step(self, inputs: Dict[Hashable, "np.ndarray"]):
@@ -1653,20 +2364,44 @@ class ReservoirEngine:
             st.tokens_decoded += 1
             st.last_use = self._tick()
         self._stats["decode_tokens"] += len(vecs)
+        if self._learn_state:
+            # One teacher-forcible step elapsed: the pairing counter the
+            # observe() accumulation keys on (a pair forms only when exactly
+            # one step separates consecutive teacher events).
+            for sid in vecs:
+                ls = self._learn_state.get(sid)
+                if ls is not None:
+                    ls.steps_since_fb += 1
 
         def launch():
             self.arena, y = self._decode_jit(
-                self.params, self.w_out, self.arena, jnp.asarray(u),
-                jnp.asarray(mask))
+                self.params, self._wave_w(), self.arena, jnp.asarray(u),
+                jnp.asarray(mask), self._ens_weights)
             return y
 
         y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False,
                                   kind="step",
                                   slots=[stats[sid].slot for sid in vecs])
+        if self._learn_state:
+            # ONE batched D2H snapshot of the post-step arena for the
+            # observe() accumulation that typically follows — per-session
+            # row pulls there would cost two blocking transfers per sid per
+            # token (~20% serve overhead measured); keyed on the states
+            # array's identity so any other wave invalidates it.
+            self._acc_cache = (self.arena.states,
+                               np.asarray(self.arena.states, self._dtype),
+                               np.asarray(self.arena.y_prev, self._dtype))
         if self.readout is None:
             return {}
         y = np.asarray(y)
         out = {sid: y[self.sessions[sid].slot] for sid in inputs}
+        for sid in out:
+            # Sessions that grew DPG ensemble members return the validation-
+            # RMSE-weighted vote over primary + members (the members advance
+            # here, teacher-driven off the same input).
+            ls = self._learn_state.get(sid)
+            if ls is not None and ls.members:
+                out[sid] = self._step_members(ls, vecs[sid], out[sid])
         for sid, row in out.items():
             # Unified decode surface: single steps buffer as (1, D) rows so
             # collect_decoded() drains every path the same way.
@@ -1697,6 +2432,46 @@ class ReservoirEngine:
         st = self._active(sid)
         st.last_use = self._tick()
         y = jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out)
+        ls = self._learn_state.get(sid) if self._learn else None
+        if ls is not None:
+            # Streaming accumulation (learn=True): this observe closes a
+            # (state, feedback, truth) training row IF exactly one decode
+            # step separates it from the previous teacher event — the
+            # state/feedback the arena holds right now are then exactly the
+            # feature row the offline teacher-forced fit would build for
+            # this position ("the prompt is the washout" parity).  The
+            # pre-observe ``y_prev`` is the model's prediction for this very
+            # token: it feeds the held-out prequential drift EWMA before the
+            # ground truth overwrites it.  Buffers keep lazy device slices —
+            # the host sync happens at refit folding, never per token.
+            y_np = np.asarray(y, self._dtype)
+            if ls.steps_since_fb == 1 and (not self.cfg.use_feedback
+                                           or ls.last_fb is not None):
+                cache = self._acc_cache
+                if cache is not None and cache[0] is self.arena.states:
+                    # decode_step's batched snapshot: zero extra transfers
+                    # (and the y_prev row is the PRE-observe prediction even
+                    # when an earlier observe this step rewrote the arena).
+                    h_row, pred = cache[1][st.slot], cache[2][st.slot]
+                else:
+                    h_row = self.arena.states[st.slot]
+                    pred = self.arena.y_prev[st.slot]
+                if self._acc_pair(ls.acc, h_row, ls.last_fb, y_np, pred):
+                    ls.dirty = True
+                for mb in ls.members:
+                    if mb.steps_since_fb == 1:
+                        if self._acc_pair(
+                                mb.acc, mb.h, mb.y_fb, y_np,
+                                mb.pred_last if mb.w is not None else None):
+                            ls.dirty = True
+            for mb in ls.members:
+                # Teacher forcing resynchronizes every member's feedback
+                # channel regardless of pairing (echo state property pulls
+                # their states back onto the teacher trajectory).
+                mb.y_fb = y
+                mb.steps_since_fb = 0
+            ls.last_fb = y_np
+            ls.steps_since_fb = 0
         # Teacher-forcing writes arena rows outside wave bookkeeping; the
         # mean-ensemble branch rewrites every ready session's feedback row.
         if self.ensemble == "mean":
@@ -1742,8 +2517,8 @@ class ReservoirEngine:
 
         def launch():
             self.arena, ys = self._closed_jit(
-                self.params, self.w_out, self.arena, jnp.asarray(mask),
-                int(n_steps))
+                self.params, self._wave_w(), self.arena, jnp.asarray(mask),
+                int(n_steps), self._ens_weights)
             return ys
 
         # Autotune times the dispatch (host sync, the price of a
@@ -1752,6 +2527,7 @@ class ReservoirEngine:
         ys = self._dispatch_decode(launch, targets, tokens=n_steps,
                                    block=False,
                                    slots=[stats[s].slot for s in targets])
+        self._note_freerun(targets, n_steps)
         # ys: (n_steps, max_slots, d_out) — return lazy device slices so
         # callers (pipelined serving loops) stay async; convert to host
         # memory on their own schedule (autotune forces the sync above).

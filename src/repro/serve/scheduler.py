@@ -40,7 +40,10 @@ Two orthogonal extensions ride on the same queue:
   the wave is deferred entirely (``[]`` returns, nothing pops) and the
   engine interleaves a decode wave before retrying.  The budget only ever
   removes or delays rows — arrival order within a bucket is untouched, so
-  the fairness bounds survive with the decode waves inserted between.
+  the fairness bounds survive with the decode waves inserted between.  The
+  engine's streaming-refit waves (``flush(refit=True)``) are priced on the
+  same budget via the cost model's ``c_refit(B)`` surface: a refit that
+  would blow the decode SLO yields to a decode wave first.
 * **Page-cost pricing** (``next_wave(free_slots=...)``): with a paged
   session store (``serve.store``) the engine's ``capacity`` counts
   demotable hot sessions, so a wave may admit more fresh rows than there
@@ -96,18 +99,21 @@ _SHRINK_EFFICIENCY = 0.9
 @dataclasses.dataclass
 class PrefillRequest:
     """One queued admission: session id, optional prompt, optional parked
-    state.  ``u`` is None for admission-only requests (the legacy
-    ``add_session``-then-``prefill`` flow) — they ride bucket 0.
+    state.  ``u`` is None for admission-only requests
+    (``submit(sid, h0=...)`` with no prompt) — they ride bucket 0.
     ``done`` is the chunk cursor: tokens already drained into the arena by
-    earlier chunk waves (0 for whole-prompt requests).  Arrival order is the
-    queue's list order; the engine validates/coerces every array *before* a
-    request is constructed."""
+    earlier chunk waves (0 for whole-prompt requests).  ``tenant`` is the
+    engine's readout-pool key (sessions sharing a tenant serve — and
+    refit — one readout).  Arrival order is the queue's list order; the
+    engine validates/coerces every array *before* a request is
+    constructed."""
     sid: Hashable
     u: Optional[object] = None            # (T, D_in) prompt or None
     y_teacher: Optional[object] = None    # (T, D_out) for feedback models
     h0: Optional[object] = None           # parked state to resume from
     y0: Optional[object] = None
     done: int = 0                         # tokens consumed by popped chunks
+    tenant: Optional[Hashable] = None     # readout-pool key (engine-owned)
 
     @property
     def length(self) -> int:

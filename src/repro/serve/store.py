@@ -482,8 +482,45 @@ def snapshot_engine(engine, path: str) -> str:
         "param_batch": engine._batched,
         "park_host_rows": engine._park_host_rows,
         "cold_dir": engine._cold_dir,
+        "learn": engine._learn,
+        "refit_alpha": engine._refit_alpha,
+        "refit_decay": engine._refit_decay,
+        "refit_washout": engine._refit_washout,
+        "drift_threshold": engine._drift_threshold,
+        "drift_beta": engine._drift_beta,
+        "growth_max_members": engine._growth_max,
+        "growth_sigma": engine._growth_sigma,
+        "growth_washout": engine._growth_washout,
     }
     manifest["use_clock"] = engine._use_clock
+
+    # Per-tenant readout pools + per-session streaming learn state.  Folded
+    # stats only: the engine folds each session's buffered rows first (the
+    # snapshot is already a host sync point).  Grown DPG ensemble members
+    # are NOT persisted — they are a drift response, and a restored engine
+    # re-grows them on drift; their teacher signal is in the stream, not
+    # the snapshot.
+    pools = []
+    for i, (key, w) in enumerate(engine._readouts.items()):
+        pools.append({"key": key})
+        arrays[f"pool{i}/w"] = np.asarray(w)
+    manifest["readout_pools"] = pools
+    learn_state = []
+    for i, (sid, ls) in enumerate(engine._learn_state.items()):
+        engine._fold_acc(ls.acc, engine._session_params(sid)
+                         if sid in engine.sessions else engine.params)
+        rec = {"sid": sid, "tenant": ls.tenant, "pairs": ls.acc.pairs,
+               "skip_left": ls.acc.skip_left, "drift": ls.acc.drift,
+               "steps_since_fb": ls.steps_since_fb, "dirty": ls.dirty,
+               "gram": ls.acc.gram is not None,
+               "last_fb": ls.last_fb is not None}
+        if ls.acc.gram is not None:
+            arrays[f"learn{i}/gram"] = np.asarray(ls.acc.gram)
+            arrays[f"learn{i}/cg"] = np.asarray(ls.acc.cg)
+        if ls.last_fb is not None:
+            arrays[f"learn{i}/last_fb"] = np.asarray(ls.last_fb)
+        learn_state.append(rec)
+    manifest["learn_state"] = learn_state
 
     arrays["arena/states"] = np.asarray(engine.arena.states)
     arrays["arena/y_prev"] = np.asarray(engine.arena.y_prev)
@@ -635,6 +672,15 @@ def restore_engine(cls, path: str, *, mesh=None):
               decode_wave_tokens=ek["decode_wave_tokens"],
               park_host_rows=ek["park_host_rows"], cold_dir=ek["cold_dir"],
               pipeline_depth=ek.get("pipeline_depth", 2),
+              learn=ek.get("learn", False),
+              refit_alpha=ek.get("refit_alpha"),
+              refit_decay=ek.get("refit_decay", 1.0),
+              refit_washout=ek.get("refit_washout", 0),
+              drift_threshold=ek.get("drift_threshold"),
+              drift_beta=ek.get("drift_beta", 0.9),
+              growth_max_members=ek.get("growth_max_members", 3),
+              growth_sigma=ek.get("growth_sigma", 0.1),
+              growth_washout=ek.get("growth_washout", 64),
               _param_batch=ek["param_batch"])
     eng.scheduler.max_wave = ek["max_wave"]
     eng._use_clock = m["use_clock"]
@@ -653,6 +699,31 @@ def restore_engine(cls, path: str, *, mesh=None):
         sid = _sid_from_json(rec["sid"])
         eng.sessions[sid] = _stats_from_rec(rec)
         eng._slots[rec["slot"]] = sid
+
+    # Streaming learn state, then tenant readout pools (in that order: the
+    # slot re-scatter below resolves each hot session's pool key through
+    # its restored ``tenant``).  Both absent in pre-learn snapshots —
+    # ``get`` keeps those restorable.
+    for i, rec in enumerate(m.get("learn_state", [])):
+        from .engine import _GramAcc, _LearnState
+        acc = _GramAcc(pairs=rec["pairs"], skip_left=rec["skip_left"],
+                       drift=rec["drift"])
+        if rec["gram"]:
+            acc.gram = jnp.asarray(data[f"learn{i}/gram"])
+            acc.cg = jnp.asarray(data[f"learn{i}/cg"])
+        ls = _LearnState(tenant=_sid_from_json(rec["tenant"]),
+                         steps_since_fb=rec["steps_since_fb"],
+                         dirty=rec["dirty"], acc=acc)
+        if rec["last_fb"]:
+            ls.last_fb = data[f"learn{i}/last_fb"]
+        eng._learn_state[_sid_from_json(rec["sid"])] = ls
+    if m.get("readout_pools"):
+        for i, rec in enumerate(m["readout_pools"]):
+            eng._readouts[_sid_from_json(rec["key"])] = jnp.asarray(
+                data[f"pool{i}/w"])
+        eng._activate_pool()
+        eng._sync_slot_readouts([(sid, st.slot)
+                                 for sid, st in eng.sessions.items()])
 
     if eng.store is not None and "store" in m:
         st = m["store"]

@@ -128,7 +128,7 @@ def test_long_prompt_does_not_monopolize_the_arena():
     assert [r.sid for r in eng.pending] == ["short1", "short2"]
     # wave log: the short wave ran BETWEEN the long prompt's chunk waves
     # (queue-tail requeue after each non-final chunk), not after all of them
-    log = eng.stats()["wave_log"]
+    log = eng.stats().wave_log
     chunk_waves = [i for i, w in enumerate(log) if w["t_bucket"] == 32]
     short_waves = [i for i, w in enumerate(log) if w["t_bucket"] == 16]
     assert len(chunk_waves) == 5 and len(short_waves) == 1
@@ -195,9 +195,9 @@ def test_evict_chunk_in_flight_returns_partial_carry():
     assert eng.sessions["fresh"].tokens_prefilled == 64
     # and the carry re-admits losslessly
     eng.evict("fresh")
-    eng.add_session("resumed", h0=np.asarray(state), y0=np.asarray(y0))
-    eng.prefill("resumed", u[128:256], want_outputs=False,
-                method="sequential")
+    eng.submit("resumed", u[128:256], h0=np.asarray(state),
+               y0=np.asarray(y0))
+    eng.flush(method="sequential")
     whole = ReservoirEngine(params, max_slots=1, readout=readout)
     whole.submit("w", u[:256])
     whole.flush(method="sequential")

@@ -243,13 +243,13 @@ def test_interleave_is_bit_exact_and_actually_interleaves():
     for k in ra:
         np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]))
     st = aware.stats()
-    assert st["decode_interleave_waves"] > 0   # the SLO really preempted
+    assert st.decode_interleave_waves > 0   # the SLO really preempted
     res = aware.collect_decoded()
     assert set(res) == {"d0", "d1"}
     assert all(w["kind"] == "interleave" and w["fused"] for w in res.waves)
     buf = {s: np.asarray(res[s]) for s in res}   # DecodeResult is immutable
     n_tok = int(buf["d0"].shape[0])
-    assert n_tok == st["decode_interleave_waves"] * aware.decode_wave_tokens
+    assert n_tok == st.decode_interleave_waves * aware.decode_wave_tokens
     for _ in range(n_tok):
         ys = blind.decode_closed_loop(1, sids=["d0", "d1"])
         for s in ("d0", "d1"):
@@ -265,10 +265,10 @@ def test_interleave_decode_latency_counters():
     aware = _build_engine(params, readout, u, slo=6000.0)
     aware.flush(decode_interleave=True)
     st = aware.stats()
-    assert st["decode_waves_total"] >= st["decode_interleave_waves"] > 0
-    assert st["decode_rows_total"] >= 2 * st["decode_interleave_waves"]
-    assert st["decode_gaps"] > 0
-    assert st["decode_gap_p95_us"] >= st["decode_gap_p50_us"] > 0.0
+    assert st.decode_waves_total >= st.decode_interleave_waves > 0
+    assert st.decode_rows_total >= 2 * st.decode_interleave_waves
+    assert st.decode_gaps > 0
+    assert st.decode_gap_p95_us >= st.decode_gap_p50_us > 0.0
     # evicting a decoder drops its buffered tokens and gap tracking
     aware.evict("d0")
     assert aware.collect_decoded("d0")["d0"].shape == (0, 1)
@@ -290,7 +290,7 @@ def test_flush_interleave_validation():
                            decode_slo_us=1.0)
     eng2.submit("a", u[:40])
     eng2.flush(decode_interleave=True)
-    assert eng2.stats()["decode_interleave_waves"] == 0
+    assert eng2.stats().decode_interleave_waves == 0
     assert eng2.ready_sessions == ["a"]
 
 
@@ -306,7 +306,7 @@ def test_interleave_explicit_decode_sids():
     eng.flush(decode_interleave=True, decode_sids=["d0"])
     buf = eng.collect_decoded()
     assert set(buf) == {"d0"}                 # d1 was left untouched
-    assert eng.stats()["decode_interleave_waves"] > 0
+    assert eng.stats().decode_interleave_waves > 0
 
 
 def test_unsatisfiable_slo_flush_max_waves_still_progresses():
@@ -328,7 +328,7 @@ def test_unsatisfiable_slo_flush_max_waves_still_progresses():
     for _ in range(20):          # 6 prefill waves needed; 20 is generous
         eng.flush(max_waves=1, decode_interleave=True)
         if not (len(eng.pending)
-                or eng.stats()["chunks_in_flight"]):
+                or eng.stats().chunks_in_flight):
             break
     else:
         pytest.fail("flush(max_waves=1) never drained the queue — "
@@ -336,7 +336,7 @@ def test_unsatisfiable_slo_flush_max_waves_still_progresses():
     assert sorted(eng.ready_sessions, key=str) == sorted(
         ["d0", ("f", 0), ("f", 1), ("f", 2)], key=str)
     # the strict-alternation degradation still decoded along the way
-    assert eng.stats()["decode_interleave_waves"] > 0
+    assert eng.stats().decode_interleave_waves > 0
 
 
 def test_stats_wave_costs_export_is_not_ring_bounded():
@@ -350,6 +350,6 @@ def test_stats_wave_costs_export_is_not_ring_bounded():
     eng = ReservoirEngine(params, max_slots=2, readout=readout,
                           cost_model=m)
     st = eng.stats()
-    assert len(st["wave_log"]) <= 256
-    assert st["wave_costs"] == m.records()
-    assert len(st["wave_costs"]) == m.n_observations > 256
+    assert len(st.wave_log) <= 256
+    assert st.wave_costs == m.records()
+    assert len(st.wave_costs) == m.n_observations > 256

@@ -211,8 +211,8 @@ def test_batched_engine_matches_individual_engines():
     assert beng.param_batched and beng.max_slots == 3
     prompts = [u[i * 30: i * 30 + 180] for i in range(3)]
     for i in range(3):
-        beng.add_session(i)
-        beng.prefill(i, prompts[i])
+        beng.submit(i, prompts[i])
+    beng.flush()
     # open-loop parity
     step_in = {i: u[400 + i] for i in range(3)}
     got = beng.decode_step(step_in)
@@ -221,8 +221,8 @@ def test_batched_engine_matches_individual_engines():
 
     for i, (p, r) in enumerate(zip(batch, readouts)):
         single = ReservoirEngine(p, max_slots=1, readout=r)
-        single.add_session("s")
-        single.prefill("s", prompts[i])
+        single.submit("s", prompts[i])
+        single.flush()
         want = single.decode_step({"s": u[400 + i]})["s"]
         np.testing.assert_allclose(got[i], want, rtol=0, atol=1e-5)
         want_cl = single.decode_closed_loop(25, sids=["s"])["s"]
@@ -240,17 +240,17 @@ def test_batched_engine_readmission_requires_slot_pin():
         stack_params(batch), readout=Readout(
             jnp.stack([r.w_out for r in readouts])))
     for i in range(3):
-        beng.add_session(i)
-        beng.prefill(i, u[:64])
+        beng.submit(i, u[:64])
+    beng.flush()
     h1, y1 = beng.evict(1)
     with pytest.raises(ValueError, match="slot=<original slot>"):
-        beng.add_session("back", h0=h1, y0=y1)       # unpinned: refused
-    beng.add_session("back", h0=h1, y0=y1, slot=1)   # pinned: exact resume
+        beng.submit("back", h0=h1, y0=y1)            # unpinned: refused
+    beng.submit("back", h0=h1, y0=y1, slot=1)        # pinned: exact resume
     np.testing.assert_array_equal(beng.state_of("back"), np.asarray(h1))
     with pytest.raises(ValueError, match="occupied"):
-        beng.add_session("clash", slot=0)
+        beng.submit("clash", slot=0)
     with pytest.raises(ValueError, match="out of range"):
-        beng.add_session("oob", slot=3)
+        beng.submit("oob", slot=3)
 
 
 def test_batched_engine_rejects_wrong_slot_count():
@@ -265,8 +265,8 @@ def test_engine_accepts_bare_params_and_readout_array():
     ro = esn_fn.fit(params, u, y, washout=50)
     eng = ReservoirEngine(params, max_slots=2, readout=np.asarray(ro.w_out))
     assert isinstance(eng.readout, Readout)
-    eng.add_session("s")
-    out = eng.prefill("s", u[:64])
+    eng.submit("s", u[:64])
+    out = eng.flush(want_outputs=True)["s"]
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(esn_fn.predict(params, ro, u[:64])),
                                rtol=0, atol=1e-8)
@@ -282,17 +282,15 @@ def test_engine_requires_at_least_one_slot():
 def test_prefill_rejects_teacher_on_non_feedback_model():
     params = esn_fn.diag_params(CFG)            # use_feedback=False
     eng = ReservoirEngine(params, max_slots=1)
-    eng.add_session("s")
     u, y = _xy(50)
     with pytest.raises(ValueError, match="non-feedback"):
-        eng.prefill("s", u, y_teacher=y)
+        eng.submit("s", u, y_teacher=y)
 
 
 def test_prefill_validates_prompt_width():
     params = esn_fn.diag_params(CFG)            # d_in == 1
     eng = ReservoirEngine(params, max_slots=1)
-    eng.add_session("s")
     with pytest.raises(ValueError, match="d_in"):
-        eng.prefill("s", np.zeros((16, 3)))
+        eng.submit("s", np.zeros((16, 3)))
     with pytest.raises(ValueError, match=r"\(T, d_in"):
-        eng.prefill("s", np.zeros((16,)))
+        eng.submit("s", np.zeros((16,)))

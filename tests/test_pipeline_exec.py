@@ -136,7 +136,7 @@ def test_promote_while_waves_in_flight_bit_exact():
     # The promote blocked and settled the prefill window; the only entry
     # that may remain in flight is the unblocked decode dispatch itself,
     # which rides the window as a tracked writer.
-    assert pipe.stats()["pipeline_inflight"] <= 1
+    assert pipe.stats().pipeline_inflight <= 1
 
 
 def test_evict_of_in_flight_session_bit_exact():
@@ -185,10 +185,10 @@ def test_inflight_window_bounded_by_depth():
             eng.submit((r, i), sig[7 * i:7 * i + 16 + 8 * (i % 4), None])
         eng.flush()
     st = eng.stats()
-    assert 1 <= st["pipeline_inflight_peak"] <= 2
-    assert st["pipeline_inflight"] <= 2
+    assert 1 <= st.pipeline_inflight_peak <= 2
+    assert st.pipeline_inflight <= 2
     eng.reset()                             # reset drains the window
-    assert eng.stats()["pipeline_inflight"] == 0
+    assert eng.stats().pipeline_inflight == 0
 
 
 def test_inflight_window_bounded_by_predicted_slo_cost():
@@ -203,7 +203,7 @@ def test_inflight_window_bounded_by_predicted_slo_cost():
     for i in range(8):
         eng.submit(f"w{i}", sig[9 * i:9 * i + 16, None])
     eng.flush()
-    assert eng.stats()["pipeline_inflight_peak"] <= 1
+    assert eng.stats().pipeline_inflight_peak <= 1
 
 
 def test_sync_mode_never_builds_a_window_and_accounts_blocking():
@@ -214,8 +214,8 @@ def test_sync_mode_never_builds_a_window_and_accounts_blocking():
         eng.submit(f"b{i}", sig[11 * i:11 * i + 16, None])
     eng.flush()
     st = eng.stats()
-    assert st["pipeline_inflight_peak"] == 0
-    assert st["host_block_us"] > 0.0       # every wave paid a real block
+    assert st.pipeline_inflight_peak == 0
+    assert st.host_block_us > 0.0       # every wave paid a real block
     # sync engine gets a sync store
     eng2 = ReservoirEngine(params, readout=readout, max_slots=2,
                            pipeline_depth=0, park_host_rows=4)
@@ -545,7 +545,7 @@ def test_autotune_timings_block_on_timed_result(monkeypatch):
     # sane wall times: a 24-token CPU wave is microseconds-to-milliseconds,
     # never the ~0 a dispatch-only stamp would record
     assert all(r["us"] > 1.0 for r in recs)
-    assert eng.stats()["pipeline_inflight"] == 0
+    assert eng.stats().pipeline_inflight == 0
 
 
 def test_autotune_drains_inflight_predecessors_before_timing():

@@ -90,8 +90,8 @@ def test_decode_parity_vs_dense_reference():
     std, dia, u, _ = _models()
     r_ref, y_ref = _dense_reference(std, u)
     eng = ReservoirEngine(dia, max_slots=3)
-    eng.add_session("s")
-    eng.prefill("s", u[:256])  # chunked/time-parallel path
+    eng.submit("s", u[:256])
+    eng.flush()                # chunked/time-parallel path
     for t in range(256, 300):
         out = eng.decode_step({"s": u[t]})
         np.testing.assert_allclose(out["s"], y_ref[t], rtol=0, atol=1e-5)
@@ -104,8 +104,8 @@ def test_engine_standard_mode_matches_dense_reference():
     std, _, u, _ = _models()
     r_ref, y_ref = _dense_reference(std, u)
     eng = ReservoirEngine(std, max_slots=2)
-    eng.add_session(0)
-    eng.prefill(0, u[:100])
+    eng.submit(0, u[:100])
+    eng.flush()
     np.testing.assert_allclose(eng.state_of(0), r_ref[99], rtol=0, atol=1e-8)
     for t in range(100, 130):
         out = eng.decode_step({0: u[t]})
@@ -115,10 +115,11 @@ def test_engine_standard_mode_matches_dense_reference():
 def test_prefill_equals_stepwise_decode():
     _, dia, u, _ = _models()
     a = ReservoirEngine(dia, max_slots=1)
-    a.add_session("x")
-    a.prefill("x", u[:256])
+    a.submit("x", u[:256])
+    a.flush()
     b = ReservoirEngine(dia, max_slots=1)
-    b.add_session("x")
+    b.submit("x")
+    b.flush()                  # admission-only: zero state
     for t in range(256):
         b.decode_step({"x": u[t]})
     np.testing.assert_allclose(a.state_of("x"), b.state_of("x"),
@@ -130,8 +131,8 @@ def test_evict_readmit_cycles_preserve_trajectory():
     std, dia, u, _ = _models()
     _, y_ref = _dense_reference(std, u)
     eng = ReservoirEngine(dia, max_slots=2)
-    eng.add_session("a")
-    eng.prefill("a", u[:200])
+    eng.submit("a", u[:200])
+    eng.flush()
     t = 200
     for cycle in range(3):  # decode a burst, park, resume — three times
         for _ in range(20):
@@ -141,34 +142,41 @@ def test_evict_readmit_cycles_preserve_trajectory():
         state, y_prev = eng.evict("a")
         assert "a" not in eng.sessions
         # other traffic reuses the freed slot in between
-        eng.add_session(("filler", cycle))
-        eng.prefill(("filler", cycle), u[:64])
-        eng.evict(("filler", cycle))
-        eng.add_session("a", h0=state, y0=y_prev)
+        eng.submit(("filler", cycle), u[:64])
+        eng.flush()
+        eng.release(("filler", cycle))
+        eng.submit("a", h0=state, y0=y_prev)    # admission-only re-admit
+        eng.flush()
 
 
 def test_evict_frees_slot_and_admits_pending():
     _, dia, u, _ = _models()
     eng = ReservoirEngine(dia, max_slots=2)
-    assert eng.add_session("a") is not None
-    assert eng.add_session("b") is not None
-    assert eng.add_session("c") is None           # queued
+    eng.submit("a")
+    eng.submit("b")
+    eng.submit("c")
+    eng.flush()
+    assert "a" in eng.sessions and "b" in eng.sessions
+    assert "c" not in eng.sessions                # overflow: queued
     assert eng.free_slots == 0 and len(eng.pending) == 1
-    eng.evict("a")
-    assert "c" in eng.sessions                    # auto-admitted
+    eng.release("a")
+    assert "c" in eng.sessions                    # auto-admitted back-fill
     assert len(eng.pending) == 0
     with pytest.raises(KeyError):
-        eng.add_session("b")                      # duplicate admission
+        eng.submit("b")                           # duplicate admission
 
 
 def test_evict_cancels_queued_session():
     _, dia, u, _ = _models()
     eng = ReservoirEngine(dia, max_slots=1)
-    eng.add_session("a")
-    assert eng.add_session("ghost") is None       # queued
-    h0, y0 = eng.evict("ghost")                   # client disconnects pre-admission
+    eng.submit("a")
+    eng.flush()
+    eng.submit("ghost")
+    eng.flush()                                   # arena full: ghost queues
+    assert "ghost" not in eng.sessions and len(eng.pending) == 1
+    h0, y0 = eng.release("ghost")                 # client disconnects pre-admission
     assert h0 is None and y0 is None and len(eng.pending) == 0
-    eng.evict("a")                                # ghost must NOT be auto-admitted
+    eng.release("a")                              # ghost must NOT be auto-admitted
     assert eng.active_sessions == [] and eng.free_slots == 1
 
 
@@ -223,8 +231,8 @@ def test_generate_never_serves_stale_readout():
 def test_decode_step_validates_sids_before_mutating():
     _, dia, u, _ = _models()
     eng = ReservoirEngine(dia, max_slots=2)
-    eng.add_session("a")
-    eng.prefill("a", u[:50])
+    eng.submit("a", u[:50])
+    eng.flush()
     state_before = eng.state_of("a")
     with pytest.raises(KeyError):
         eng.decode_step({"a": u[50], "ghost": u[50]})
@@ -235,18 +243,16 @@ def test_decode_step_validates_sids_before_mutating():
 def test_prefill_rejects_empty_prompt():
     _, dia, _, _ = _models()
     eng = ReservoirEngine(dia, max_slots=1)
-    eng.add_session("a")
     with pytest.raises(ValueError, match="T=0"):
-        eng.prefill("a", np.zeros((0, 1)))
+        eng.submit("a", np.zeros((0, 1)))
 
 
 def test_prefill_rejects_mismatched_teacher_length():
     cfg_fb = ESNConfig(n=40, use_feedback=True, seed=5)
     m = LinearESN.standard(cfg_fb)
     eng = ReservoirEngine(m, max_slots=1)
-    eng.add_session("a")
     with pytest.raises(ValueError, match="one teacher output per prompt"):
-        eng.prefill("a", np.zeros((100, 1)), y_teacher=np.zeros((1, 1)))
+        eng.submit("a", np.zeros((100, 1)), y_teacher=np.zeros((1, 1)))
 
 
 def test_sessions_are_isolated():
@@ -256,10 +262,9 @@ def test_sessions_are_isolated():
     u2 = sig2[:-1, None]
     _, y2_ref = _dense_reference(std, u2)
     eng = ReservoirEngine(dia, max_slots=2)
-    eng.add_session("a")
-    eng.add_session("b")
-    eng.prefill("a", u[:100])
-    eng.prefill("b", u2[:100])
+    eng.submit("a", u[:100])
+    eng.submit("b", u2[:100])
+    eng.flush()
     for t in range(100, 120):
         out = eng.decode_step({"a": u[t], "b": u2[t]})
         np.testing.assert_allclose(out["a"], y_ref[t], rtol=0, atol=1e-5)
@@ -279,8 +284,8 @@ def test_prefill_with_readout_keeps_teacher_feedback():
     m = LinearESN.standard(cfg_fb).fit(u, y, washout=50)
     ref = np.asarray(m.run(u[:101], y_teacher=y[:101]))
     eng = ReservoirEngine(m, max_slots=1)
-    eng.add_session("s")
-    eng.prefill("s", u[:100], y_teacher=y[:100])
+    eng.submit("s", u[:100], y_teacher=y[:100])
+    eng.flush()
     eng.decode_step({"s": u[100]})   # teacher y[99], not the prediction
     np.testing.assert_allclose(eng.state_of("s"), ref[100], rtol=0, atol=1e-8)
 
@@ -312,8 +317,8 @@ def test_observe_regression_teacher_forcing_is_not_a_noop():
 
     def fresh():
         e = ReservoirEngine(m, max_slots=1)
-        e.add_session("s")
-        e.prefill("s", u[:300], y_teacher=y[:300])
+        e.submit("s", u[:300], y_teacher=y[:300])
+        e.flush()
         return e
 
     # (a) the observed value must reach the next prediction
@@ -396,8 +401,8 @@ def test_prefill_without_readout_keeps_teacher_feedback():
     m = LinearESN.standard(cfg_fb)               # no readout: state streaming
     ref = np.asarray(m.run(u[:101], y_teacher=y[:101]))
     eng = ReservoirEngine(m, max_slots=1)
-    eng.add_session("s")
-    eng.prefill("s", u[:100], y_teacher=y[:100])
+    eng.submit("s", u[:100], y_teacher=y[:100])
+    eng.flush()
     eng.decode_step({"s": u[100]})               # must use y_teacher[99] feedback
     np.testing.assert_allclose(eng.state_of("s"), ref[100], rtol=0, atol=1e-8)
 
@@ -419,8 +424,8 @@ def test_closed_loop_matches_dense_hand_loop():
     ys_ref = np.stack(ys_ref)
 
     eng = ReservoirEngine(dia, max_slots=1)
-    eng.add_session("g")
-    eng.prefill("g", u[:300])
+    eng.submit("g", u[:300])
+    eng.flush()
     ys = eng.decode_closed_loop(40, sids=["g"])["g"]
     np.testing.assert_allclose(ys, ys_ref, rtol=0, atol=1e-5)
 

@@ -68,8 +68,8 @@ def test_flush_wave_matches_eager_prefill(mode):
 
     eager = ReservoirEngine(params, max_slots=4, readout=readout)
     for i, p in enumerate(prompts):
-        eager.add_session(i)
-        want = eager.prefill(i, p)
+        eager.submit(i, p)
+        want = eager.flush(want_outputs=True)[i]
         np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(want),
                                    rtol=0, atol=1e-5)
         np.testing.assert_allclose(wave_eng.state_of(i), eager.state_of(i),
@@ -112,10 +112,10 @@ def test_flush_wave_feedback_mode_parity():
     eager = ReservoirEngine(params, max_slots=2, readout=readout)
     for i, t in enumerate(lengths):
         wave.submit(i, u[:t], y_teacher=y[:t])
-        eager.add_session(i)
     outs = wave.flush(want_outputs=True)
     for i, t in enumerate(lengths):
-        want = eager.prefill(i, u[:t], y_teacher=y[:t])
+        eager.submit(i, u[:t], y_teacher=y[:t])
+        want = eager.flush(want_outputs=True)[i]
         np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(want),
                                    rtol=0, atol=1e-5)
         np.testing.assert_allclose(wave.state_of(i), eager.state_of(i),
@@ -143,7 +143,8 @@ def test_wave_padding_steps_are_inert(use_feedback):
 
     def run(u_tail, y_tail):
         eng = ReservoirEngine(params, max_slots=1, readout=readout)
-        eng.add_session("s")
+        eng.submit("s")
+        eng.flush()
         u_pad = np.zeros((1, t_pad, cfg.d_in))
         u_pad[0, :t_true] = u[:t_true]
         u_pad[0, t_true:] = u_tail
@@ -214,10 +215,11 @@ def test_scheduler_wave_is_single_bucket_and_ordered():
 def test_evict_while_queued_cancels_prompt_request():
     params, readout, u, _ = _fitted()
     eng = ReservoirEngine(params, max_slots=1, readout=readout)
-    eng.add_session("resident")
+    eng.submit("resident")
+    eng.flush()
     eng.submit("ghost", u[:50])
     assert len(eng.pending) == 1
-    eng.evict("ghost")                   # disconnect before admission
+    eng.release("ghost")                 # disconnect before admission
     assert len(eng.pending) == 0
     eng.flush()
     assert "ghost" not in eng.sessions   # cancelled, never admitted
@@ -256,14 +258,15 @@ def test_submit_validates_before_enqueue():
     assert list(eng.sessions) == ["good"]
     assert eng.sessions["good"].tokens_prefilled == 64
     assert len(eng.pending) == 0
-    # the legacy overflow path (add_session on a full arena) must hold the
-    # same invariant: a mis-shaped parked state is rejected at the call
-    # site, not when evict() later auto-admits it
-    eng.add_session("filler")
+    # the admission-only overflow path (submit with no prompt on a full
+    # arena) must hold the same invariant: a mis-shaped parked state is
+    # rejected at the call site, not when release() later auto-admits it
+    eng.submit("filler")
+    eng.flush()                                      # queued: arena is full
     assert eng.free_slots == 0
     with pytest.raises(ValueError):
-        eng.add_session("bad3", h0=np.zeros(7))
-    state, _ = eng.evict("good")                     # evict still returns state
+        eng.submit("bad3", h0=np.zeros(7))
+    state, _ = eng.evict("good")                     # evict alias still returns state
     assert state.shape == (CFG_FB.n,)
 
 
@@ -352,12 +355,12 @@ def test_ensemble_mean_decode_step_is_mean_of_slots():
     singles = []
     for p, r in zip(batch, readouts):
         s = ReservoirEngine(p, max_slots=1, readout=r)
-        s.add_session("s")
-        s.prefill("s", u[:128], want_outputs=False)
+        s.submit("s", u[:128])
+        s.flush()
         singles.append(s)
     for i in range(3):
-        fused.add_session(i)
-        fused.prefill(i, u[:128], want_outputs=False)
+        fused.submit(i, u[:128])
+    fused.flush()
     outs = fused.decode_step({i: u[128] for i in range(3)})
     want = np.mean([s.decode_step({"s": u[128]})["s"] for s in singles],
                    axis=0)
@@ -377,12 +380,12 @@ def test_ensemble_mean_closed_loop_feeds_mean_back():
     singles = []
     for p, r in zip(batch, readouts):
         s = ReservoirEngine(p, max_slots=1, readout=r)
-        s.add_session("s")
-        s.prefill("s", u[:128], want_outputs=False)
+        s.submit("s", u[:128])
+        s.flush()
         singles.append(s)
     for i in range(3):
-        fused.add_session(i)
-        fused.prefill(i, u[:128], want_outputs=False)
+        fused.submit(i, u[:128])
+    fused.flush()
     got = fused.decode_closed_loop(15)
     # host reference: step every single engine on the current mean
     y_mean = np.mean([np.asarray(s.y_prev[0]) for s in singles], axis=0)

@@ -145,7 +145,7 @@ def test_8_slot_paged_engine_serves_64_sessions_like_manual_parking():
 
     toks_eng, toks_ref = {}, {}
     with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)  # add_session
+        warnings.simplefilter("error", DeprecationWarning)
         for lap in range(2):
             for grp in groups:
                 out = eng.decode_closed_loop(gen, sids=grp)
@@ -153,7 +153,8 @@ def test_8_slot_paged_engine_serves_64_sessions_like_manual_parking():
                     toks_eng.setdefault(sid, []).append(np.asarray(out[sid]))
                 for sid in grp:
                     h0, y0 = parked.pop(sid)
-                    ref.add_session(sid, h0=h0, y0=y0)
+                    ref.submit(sid, h0=h0, y0=y0)
+                ref.flush()
                 out = ref.decode_closed_loop(gen, sids=grp)
                 for sid in grp:
                     toks_ref.setdefault(sid, []).append(np.asarray(out[sid]))

@@ -152,34 +152,34 @@ def test_engine_stats_occupancy_accounting():
         eng.submit(i, u[:100])                    # one bucket (128)
     eng.flush()                                   # one full wave of 4
     st = eng.stats()
-    assert st["waves_total"] == 1 and st["rows_total"] == 4
-    assert st["fresh_rows_total"] == 4
-    assert st["occupancy_mean"] == pytest.approx(1.0)
-    assert st["prefill_tokens"] == 400
-    assert st["sessions_queued"] == 2 and st["sessions_ready"] == 4
+    assert st.waves_total == 1 and st.rows_total == 4
+    assert st.fresh_rows_total == 4
+    assert st.occupancy_mean == pytest.approx(1.0)
+    assert st.prefill_tokens == 400
+    assert st.sessions_queued == 2 and st.sessions_ready == 4
     # autotune timed the wave and fed the model
-    assert st["wave_us_mean"] and st["wave_us_mean"] > 0
+    assert st.wave_us_mean and st.wave_us_mean > 0
     assert eng.cost_model.n_observations == 1
-    assert st["wave_costs"][0]["b"] == 4
-    assert st["by_bucket"][128]["waves"] == 1
-    assert st["by_bucket"][128]["tokens"] == 400
+    assert st.wave_costs[0]["b"] == 4
+    assert st.by_bucket[128]["waves"] == 1
+    assert st.by_bucket[128]["tokens"] == 400
     eng.evict(0), eng.evict(1)
     eng.flush()                                   # half-full wave of 2
     st = eng.stats()
-    assert st["waves_total"] == 2 and st["rows_total"] == 6
-    assert st["occupancy_mean"] == pytest.approx(0.75)
-    assert st["prefill_tokens"] == 600
+    assert st.waves_total == 2 and st.rows_total == 6
+    assert st.occupancy_mean == pytest.approx(0.75)
+    assert st.prefill_tokens == 600
     ys = eng.decode_closed_loop(5)
     st = eng.stats()
-    assert st["decode_tokens"] == 5 * len(ys)
+    assert st.decode_tokens == 5 * len(ys)
     # autotune times decode dispatches too: one closed loop = one decode
     # wave, one decode cost observation, a per-step latency estimate
-    assert st["decode_waves_total"] == 1
-    assert st["decode_rows_total"] == len(ys)
-    assert st["decode_us_per_step"] and st["decode_us_per_step"] > 0
+    assert st.decode_waves_total == 1
+    assert st.decode_rows_total == len(ys)
+    assert st.decode_us_per_step and st.decode_us_per_step > 0
     # counters are engine-lifetime: reset() keeps them and the cost model
     eng.reset()
-    assert eng.stats()["waves_total"] == 2
+    assert eng.stats().waves_total == 2
     assert eng.cost_model.n_observations == 3      # 2 prefill + 1 decode
     # stats exports the model's full record set (prefill + decode kinds)
-    assert eng.stats()["wave_costs"] == eng.cost_model.records()
+    assert eng.stats().wave_costs == eng.cost_model.records()
