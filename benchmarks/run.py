@@ -14,7 +14,8 @@ import traceback
 import jax
 
 MODULES = ["stepcost", "scan_parallel", "mso", "memory_capacity",
-           "mc_connectivity", "roofline", "serve_engine", "params_api"]
+           "mc_connectivity", "roofline", "serve_engine", "loadgen",
+           "params_api"]
 
 
 def main() -> None:

@@ -61,6 +61,16 @@ _SERVE_METRICS = {
     "serve.refit.recovery": ("refit_online", "recovery", "_value"),
 }
 
+#: metrics sourced from the open-loop load generator's artifact
+#: (``serve_loadgen.json``).  ``None`` section reads the top-level dict;
+#: ``"_value"`` gates the stored value itself — ``slo_attainment_worst`` is
+#: a 0..1 fraction (higher is better) and drops out of the gate when NaN
+#: (nothing completed) instead of poisoning it.
+_LOADGEN_METRICS = {
+    "serve.openloop.slo_attainment": (None, "slo_attainment_worst",
+                                      "_value"),
+}
+
 
 def _load(path):
     try:
@@ -71,7 +81,7 @@ def _load(path):
 
 
 def tok_s(res, section, us_key, tok_key):
-    sec = (res or {}).get(section)
+    sec = (res or {}) if section is None else (res or {}).get(section)
     if not isinstance(sec, dict) or us_key not in sec:
         return None
     try:
@@ -96,6 +106,8 @@ def compare(prev_dir: str, cur_dir: str, threshold: float):
     metrics regressed more than ``threshold`` percent."""
     cur = _load(os.path.join(cur_dir, "serve_engine.json"))
     prev = _load(os.path.join(prev_dir, "serve_engine.json"))
+    cur_lg = _load(os.path.join(cur_dir, "serve_loadgen.json"))
+    prev_lg = _load(os.path.join(prev_dir, "serve_loadgen.json"))
     lines = ["### Serve perf trajectory",
              "",
              "| metric | prev tok/s | cur tok/s | delta |",
@@ -105,9 +117,12 @@ def compare(prev_dir: str, cur_dir: str, threshold: float):
     regressions = []
     # ratio-style metrics live below 1.0 — a ",.0f" render would show "0"
     fmt = lambda v: f"{v:,.0f}" if v >= 100 else f"{v:.3f}"  # noqa: E731
-    for name, (section, us_key, tok_key) in _SERVE_METRICS.items():
-        c = tok_s(cur, section, us_key, tok_key)
-        p = tok_s(prev, section, us_key, tok_key)
+    rows = ([(n, spec, cur, prev) for n, spec in _SERVE_METRICS.items()]
+            + [(n, spec, cur_lg, prev_lg)
+               for n, spec in _LOADGEN_METRICS.items()])
+    for name, (section, us_key, tok_key), cur_src, prev_src in rows:
+        c = tok_s(cur_src, section, us_key, tok_key)
+        p = tok_s(prev_src, section, us_key, tok_key)
         record["metrics"][name] = {"prev_tok_s": p, "cur_tok_s": c}
         if c is None:
             continue

@@ -42,6 +42,13 @@ on a parked session transparently promotes it back.  ``--snapshot PATH``
 serializes the whole engine (arena + parked table + queue + cost model) on
 shutdown; ``ReservoirEngine.restore(PATH)`` resumes it bit-exactly.
 
+``--tracker jsonl:PATH`` streams every serving event (prefill / decode /
+page / refit / frontend) to a replayable JSON-lines trace through the
+pluggable ``serve.telemetry.Tracker`` seam; ``--profile-dir DIR`` adds
+``jax.profiler`` capture windows around the waves.  The ``stats()``
+counters are derived from the same event stream, so trace and counters
+can never disagree.
+
 LM smoke loop (token-synchronous prefill + lock-step decode over the
 transformer/hybrid archs — KV/state caches):
 
@@ -122,7 +129,13 @@ def serve_reservoir(args) -> None:
                      decode_wave_tokens=args.decode_wave_tokens,
                      park_host_rows=args.park_host_rows,
                      cold_dir=args.cold_dir,
-                     pipeline_depth=args.pipeline_depth)
+                     pipeline_depth=args.pipeline_depth,
+                     tracker=args.tracker, profile_dir=args.profile_dir)
+    if args.tracker or args.profile_dir:
+        sinks = [s for s in (args.tracker, args.profile_dir and
+                             f"profiler -> {args.profile_dir}") if s]
+        print(f"observability: {', '.join(sinks)} (stats() counters derive "
+              f"from the same event stream)")
     if args.cold_dir and args.park_host_rows is None:
         raise SystemExit("--cold-dir needs --park-host-rows (the cold tier "
                          "sits behind the host pool)")
@@ -198,6 +211,7 @@ def serve_reservoir(args) -> None:
         print(f"ensemble-{args.ensemble} continuation: {args.gen} tok "
               f"closed loop, rmse vs signal {rmse:.3e} "
               f"(B={args.slots} reservoirs fused into one output)")
+        engine.tracker.close()
         return
 
     if args.learn:
@@ -227,6 +241,7 @@ def serve_reservoir(args) -> None:
               f"{st.refit_us_sum / 1e3:.1f} ms total; drift RMSE "
               f"{engine.drift_rmse('live')}; "
               f"{st.growth_events} DPG growth events")
+        engine.tracker.close()
         return
 
     rng = np.random.default_rng(args.seed)
@@ -374,6 +389,7 @@ def serve_reservoir(args) -> None:
         engine.snapshot(args.snapshot)
         print(f"engine snapshot -> {args.snapshot} (resume with "
               f"ReservoirEngine.restore({args.snapshot!r}))")
+    engine.tracker.close()      # flush any JSONL trace to disk
 
 
 # ----------------------------------------------------------------------- lm
@@ -539,6 +555,17 @@ def main():
                          "the pool itself fills, its LRU sessions spill to "
                          "per-session .npz records under DIR (requires "
                          "--park-host-rows)")
+    ap.add_argument("--tracker", default=None, metavar="SPEC",
+                    help="pluggable observability sink: 'null' or "
+                         "'jsonl:PATH' — every prefill/decode/page/refit/"
+                         "frontend event streams to PATH as JSON lines (a "
+                         "replayable trace; stats() counters derive from "
+                         "the same event stream, so they can never "
+                         "disagree with it)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="add jax.profiler capture windows around serving "
+                         "waves, written under DIR (composes with "
+                         "--tracker)")
     ap.add_argument("--snapshot", default=None, metavar="PATH",
                     help="serialize the whole engine on shutdown (arena + "
                          "parked-session table + scheduler queue + cost "

@@ -12,14 +12,24 @@ ONE batched prefill.  Long prompts split into sequential chunk waves
 measured timings (seeded offline by ``benchmarks/serve_engine.py``, refined
 online from engine-recorded wave timings) — what the lookahead plans against,
 plus the c_dec(B, K) fused-decode surface.
-``engine``    — ``ReservoirEngine``: the thin orchestrator (session <-> slot
-mapping, submit/flush/decode/release lifecycle, ensemble readout fusion,
-typed ``EngineStats`` telemetry, and — with ``learn=True`` — learn-while-
-serving: streaming eigenbasis ``(G, C)`` accumulation off the ``observe()``
-teacher path, batched ``refit()`` / ``flush(refit=True)`` waves into
-per-tenant readout pools, and drift-triggered DPG ensemble growth).  Decode
-tokens drain through ``collect_decoded()`` as one typed ``DecodeResult``
-whatever path produced them.
+``engine``    — ``ReservoirEngine``: the thin facade over the four serving
+planes (``telemetry`` observability, ``ingest`` control, ``exec_plane``
+data, ``learn`` learn-while-serving — one-way imports, enforced by test).
+The facade holds the public submit/flush/decode/release lifecycle, wires
+the cross-plane callbacks, and merges the planes' snapshots into the typed
+``EngineStats``.  Decode tokens drain through ``collect_decoded()`` as one
+typed ``DecodeResult`` whatever path produced them; with ``learn=True`` the
+learn plane accumulates streaming eigenbasis ``(G, C)`` off the
+``observe()`` teacher path, refits batched waves into per-tenant readout
+pools, and grows DPG ensembles on drift.
+``telemetry`` — the pluggable ``Tracker`` protocol (``NullTracker`` /
+``JsonlTracker`` / ``ProfilerTracker`` / ``MultiTracker``, specs via
+``make_tracker``) every wave/page/refit/decode event flows through, and the
+``StatsAggregator`` that derives the ``stats()`` counters from that same
+stream.
+``frontend``  — ``OpenLoopServer``: the asyncio open-loop front end on the
+ingest seam (per-token streaming queues, ``AdmissionFull`` backpressure,
+graceful drain); ``benchmarks/loadgen.py`` drives it at fixed offered load.
 ``store``     — ``SessionStore``: tiered session capacity.  The arena is a
 *cache of hot sessions* over a pinned host-memory pool and an fsspec/disk
 cold tier; a full arena parks its LRU
@@ -34,19 +44,29 @@ Backend selection lives in ``core.dispatch`` (the PR-2-era ``serve.dispatch``
 re-export shim is gone); ``resolve_method`` / ``run_scan_q`` stay re-exported
 here for callers that reach them through the serve namespace.
 """
-from . import arena, cost, engine, scheduler, store
+from . import (arena, cost, engine, exec_plane, frontend, ingest, learn,
+               scheduler, store, telemetry)
 from ..core.dispatch import resolve_method, run_scan_q
 from .arena import SlotArena
 from .cost import WaveCostModel, cost_key
 from .engine import (DecodeResult, EngineStats, EvictResult, ReservoirEngine,
                      SessionStats)
+from .frontend import OpenLoopServer, SessionHandle, StreamToken
+from .ingest import AdmissionFull
 from .scheduler import PrefillRequest, WaveItem, WaveScheduler, bucket_length
 from .store import HostPool, SessionStore
+from .telemetry import (JsonlTracker, MultiTracker, NullTracker,
+                        ProfilerTracker, StatsAggregator, Tracker,
+                        make_tracker)
 
-__all__ = ["arena", "cost", "engine", "scheduler", "store",
+__all__ = ["arena", "cost", "engine", "exec_plane", "frontend", "ingest",
+           "learn", "scheduler", "store", "telemetry",
+           "OpenLoopServer", "SessionHandle", "StreamToken",
            "SlotArena", "WaveCostModel", "cost_key",
            "resolve_method", "run_scan_q",
            "DecodeResult", "EngineStats", "EvictResult", "ReservoirEngine",
-           "SessionStats",
+           "SessionStats", "AdmissionFull",
+           "Tracker", "NullTracker", "JsonlTracker", "ProfilerTracker",
+           "MultiTracker", "StatsAggregator", "make_tracker",
            "PrefillRequest", "WaveItem", "WaveScheduler", "bucket_length",
            "HostPool", "SessionStore"]

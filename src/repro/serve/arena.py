@@ -65,6 +65,7 @@ __all__ = [
     "arena_step",
     "apply_readout",
     "decode_step",
+    "driven_loop",
     "closed_loop",
     "closed_loop_fused",
     "prefill_wave",
@@ -213,6 +214,33 @@ def decode_step(params, w_out, arena: SlotArena, u, mask, ens_weights=None, *,
         y = _ensemble_reduce(y, mask, ens_weights)
     y_out = jnp.where(mask[:, None], y, arena.y_prev)
     return dataclasses.replace(arena, states=states, y_prev=y_out), y_out
+
+
+def driven_loop(params, w_out, arena: SlotArena, mask, u_seq,
+                ens_weights=None, *, batched: bool = False,
+                ensemble: str = "off"):
+    """Teacher-driven generation over the masked slots: step K queued inputs
+    ``u_seq`` of shape (K, B, D_in) through the arena in ONE dispatch.  Each
+    scan step is exactly :func:`decode_step` on ``u_seq[t]``, so draining a
+    per-session input queue this way is bit-identical to K sequential
+    ``decode_step`` calls.  Returns ``(arena', ys)`` with ``ys`` of shape
+    (K, B, D_out)."""
+    w_ens = ens_weights if ensemble == "weighted" else None
+
+    def step(carry, u_t):
+        states, y = carry
+        new = arena_step(params, states, u_t, y, batched=batched)
+        states = jnp.where(mask[:, None], new, states)
+        x = esn_fn.assemble_features(params, states, y)
+        y_new = apply_readout(w_out, x, batched=batched)
+        if ensemble in ("mean", "weighted"):
+            y_new = _ensemble_reduce(y_new, mask, w_ens)
+        y_new = jnp.where(mask[:, None], y_new, y)
+        return (states, y_new), y_new
+
+    (states, y_prev), ys = jax.lax.scan(
+        step, (arena.states, arena.y_prev), u_seq)
+    return dataclasses.replace(arena, states=states, y_prev=y_prev), ys
 
 
 def closed_loop(params, w_out, arena: SlotArena, mask, n_steps: int,

@@ -1,343 +1,41 @@
-"""ReservoirEngine — the orchestration layer of the serving stack.
+"""ReservoirEngine — the thin facade over the serving planes.
 
-The paper's punchline is operational: once diagonalized, the reservoir step is
-O(N) element-wise, so *per-user persistent recurrent state* is the cheapest
-serving primitive there is.  The serving stack splits that into three layers:
+Four planes, one-way imports (enforced by tests/test_serving_planes.py);
+this module is the only thing that sees all of them:
+``serve.telemetry`` (observability: ``Tracker`` seam + ``StatsAggregator``),
+``serve.ingest`` (control: session table, admission, input queues,
+backpressure), ``serve.exec_plane`` (data: the slot arena and every device
+dispatch), ``serve.learn`` (streaming refit, drift, DPG growth).
+Planes never import each other sideways or upward; cross-plane *runtime*
+effects travel through callbacks this facade wires at construction.  The
+facade holds the public API and the bit-exactness contract: every output
+is identical to the pre-split monolith (pinned by the facade-parity suite).
 
-* ``serve.arena``     — the device-side ``(B, N)`` state (a ``SlotArena``
-  pytree) plus pure ``prefill_wave`` / ``decode_step`` / ``closed_loop``
-  functions.  One arena can span a multi-device mesh
-  (``sharding.rules.plan_arena``: slots on ``data``, N on ``model``).
-* ``serve.scheduler`` — host-side admission: requests accumulate
-  (:meth:`ReservoirEngine.submit`), are bucketed by padded prompt length,
-  and each :meth:`flush` wave runs ONE ``(B_wave, T_bucket)`` batched
-  prefill instead of B sequential scans.
-* this module         — the thin orchestrator: it owns the session <-> slot
-  mapping and per-session accounting, and calls down into both layers.  It
-  holds **no raw state arrays** (the arena does) and **no prefill compute**
-  (``arena.prefill_wave`` does).
-
-Session lifecycle: ``submit`` (queue with prompt; ``slot=`` pins an
-admission-only placement, ``tenant=`` keys the readout pool) -> ``flush``
-(wave-batched admission + prefill) -> ``decode_step`` /
-``decode_closed_loop`` -> ``release`` (returns the exact slot state for
-parking; re-admitting via ``h0=`` continues bit-for-bit).  ``submit/flush``
-is the ONE admission surface — the PR-6 eager shims (``add_session`` /
-``prefill``) are gone.
-
-**Learn-while-serving** (``learn=True``): the engine is a training system
-too.  Every ``observe()`` teacher token both corrects the feedback column
-AND accumulates the session's eigenbasis Gram sufficient statistics
-``(G, C)`` (``core.ridge.gram_streaming`` rows, λ-decayed so old regimes
-fade); :meth:`refit` / ``flush(refit=True)`` solves
-``ridge_solve_general(G, C, eet_metric, α)`` for every dirty session as ONE
-batched device wave, priced by the cost model's ``c_refit(B)`` surface
-under the same decode budget.  Refit results land in a **per-tenant
-readout pool**: one shared reservoir arena serves thousands of per-session
-/ per-tenant ``(F, D_out)`` readouts (the wave functions take the
-``(max_slots, F, D_out)`` pool wherever any tenant readout has diverged
-from the base).  When a session's held-out streaming RMSE drifts past
-``drift_threshold``, a fresh ``dpg_params`` reservoir member is sampled
-on-demand (DPG: O(N), no diagonalization) and folded into that session's
-ensemble with validation-RMSE-weighted voting.
-
-Decode-aware planning (``decode_slo_us`` + ``flush(decode_interleave=True)``)
-prices prefill *and* decode on the same cost model so an oversubscribed
-prefill queue cannot starve decode latency: whenever the predicted prefill
-cost charged since the ready decoders' last token would blow the SLO, the
-scheduler shrinks or defers the prefill wave and a closed-loop decode wave
-interleaves (Orca-style iteration-level scheduling, priced instead of
-round-robined).  The policy only reorders waves — outputs are bit-exact.
-
-``from_param_batch`` serves B independently-seeded reservoirs (slot i =
-reservoir i) from one vmap-ed trace; ``ensemble="mean"`` additionally fuses
-their B predictions into one ensemble output — which is also what feeds back
-in closed loop, so the ensemble free-runs as a single logical stream.
+Lifecycle: ``submit`` -> ``flush`` -> ``decode_step`` /
+``decode_closed_loop`` / ``queue_inputs`` -> ``release``.
+``submit/flush`` is the ONE admission surface.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import functools
-import time
-import warnings
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import dispatch
-from ..core import esn as esn_fn
-from ..core import ridge as ridge_mod
 from ..core.params import DiagParams, Readout, StandardParams
-from . import arena as arena_mod
 from . import store as store_mod
 from .cost import WaveCostModel, cost_key
-from .scheduler import (PrefillRequest, WaveItem, WaveScheduler,
-                        bucket_length)
+from .exec_plane import DecodeResult, EvictResult, ExecPlane
+from .ingest import AdmissionFull, IngestPlane, SessionStats, SessionTable
+from .learn import (LearnPlane, _GramAcc, _LearnState,  # noqa: F401
+                    _Member)
+from .scheduler import WaveScheduler
+from .telemetry import (EngineStats, MultiTracker, ProfilerTracker,
+                        StatsAggregator, Tracker, make_tracker)
 
 __all__ = ["SessionStats", "DecodeResult", "EvictResult", "EngineStats",
-           "ReservoirEngine"]
-
-
-@dataclasses.dataclass(frozen=True)
-class DecodeResult:
-    """The one decode-output type: what :meth:`ReservoirEngine.collect_decoded`
-    returns for single-step, interleaved, and fused K-token decode alike.
-
-    ``tokens``: sid -> (n_tokens, D_out) array — every decode path buffers in
-    this shape, so a caller never branches on where a token came from.
-    ``waves``: per-dispatch metadata dicts (``kind`` "step" / "closed_loop" /
-    "interleave", ``rows``, ``tokens`` per row, ``us`` wall time when timed,
-    ``fused`` whether the K-token fused kernel ran) for the dispatches whose
-    tokens this result drained.  Mapping-shaped on ``tokens`` (iter / ``[]`` /
-    ``items`` / ``get``), so dict-era callers keep working unchanged.
-    """
-    tokens: Dict[Hashable, jnp.ndarray]
-    waves: Tuple[dict, ...] = ()
-
-    def __getitem__(self, sid):
-        return self.tokens[sid]
-
-    def __iter__(self):
-        return iter(self.tokens)
-
-    def __len__(self) -> int:
-        return len(self.tokens)
-
-    def __contains__(self, sid) -> bool:
-        return sid in self.tokens
-
-    def keys(self):
-        return self.tokens.keys()
-
-    def values(self):
-        return self.tokens.values()
-
-    def items(self):
-        return self.tokens.items()
-
-    def get(self, sid, default=None):
-        return self.tokens.get(sid, default)
-
-
-class EvictResult(tuple):
-    """What :meth:`ReservoirEngine.evict` returns: unpacks as the historical
-    ``(state, y_prev)`` 2-tuple (every existing ``state, y = evict(sid)``
-    call site keeps working), and additionally carries ``.decoded`` — the
-    :class:`DecodeResult` of any tokens the session had buffered but not yet
-    collected.  Eviction used to drop that buffer silently (documented, but
-    still token loss); now the tokens leave with the session."""
-
-    def __new__(cls, state, y_prev, decoded: DecodeResult):
-        self = super().__new__(cls, (state, y_prev))
-        self.decoded = decoded
-        return self
-
-    @property
-    def state(self):
-        return self[0]
-
-    @property
-    def y_prev(self):
-        return self[1]
-
-
-def _warn_stats_mapping() -> None:
-    warnings.warn(
-        "dict-key access to EngineStats is deprecated: stats() now returns "
-        "a typed frozen dataclass — read the field directly "
-        "(stats().waves_total) or convert once via stats().to_dict()",
-        DeprecationWarning, stacklevel=3)
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineStats:
-    """Typed :meth:`ReservoirEngine.stats` result — every serving counter as
-    a named field (waves / rows / occupancy / latency / by-bucket / decode /
-    page / pipeline / refit), frozen so a report can never mutate the
-    engine's accounting.  ``to_dict()`` is the sanctioned dict conversion;
-    mapping-style access (``stats()["waves_total"]``) keeps working for one
-    release behind a ``DeprecationWarning``."""
-    sessions_active: int
-    sessions_ready: int
-    sessions_queued: int
-    sessions_parked: int
-    store: Optional[dict]
-    page_waves_total: int
-    page_rows_total: int
-    promote_waves: int
-    demote_waves: int
-    page_us_sum: float
-    promote_us_p95: Optional[float]
-    chunks_in_flight: int
-    waves_total: int
-    rows_total: int
-    fresh_rows_total: int
-    prefill_tokens: int
-    decode_tokens: int
-    occupancy_mean: Optional[float]
-    wave_us_mean: Optional[float]
-    decode_waves_total: int
-    decode_rows_total: int
-    decode_interleave_waves: int
-    decode_us_per_step: Optional[float]
-    decode_gaps: int
-    decode_gap_p50_us: Optional[float]
-    decode_gap_p95_us: Optional[float]
-    pipeline_depth: int
-    pipeline_inflight: int
-    pipeline_inflight_peak: int
-    host_block_us: float
-    overlap_demotes: int
-    refit_waves_total: int
-    refit_rows_total: int
-    refit_us_sum: float
-    sessions_dirty: int
-    growth_events: int
-    by_bucket: dict
-    wave_log: list
-    wave_costs: list
-
-    def to_dict(self) -> dict:
-        """Shallow dict of every field (the old ``stats()`` return shape)."""
-        return {f.name: getattr(self, f.name)
-                for f in dataclasses.fields(self)}
-
-    # One release of dict-shaped compat (the DecodeResult pattern): every
-    # mapping accessor warns once per call site and then behaves exactly
-    # like the old raw dict did.
-    def __getitem__(self, key):
-        _warn_stats_mapping()
-        try:
-            return getattr(self, key)
-        except AttributeError:
-            raise KeyError(key) from None
-
-    def get(self, key, default=None):
-        _warn_stats_mapping()
-        return getattr(self, key, default)
-
-    def keys(self):
-        _warn_stats_mapping()
-        return [f.name for f in dataclasses.fields(self)]
-
-    def items(self):
-        _warn_stats_mapping()
-        return [(f.name, getattr(self, f.name))
-                for f in dataclasses.fields(self)]
-
-    def __iter__(self):
-        _warn_stats_mapping()
-        return iter([f.name for f in dataclasses.fields(self)])
-
-    def __contains__(self, key) -> bool:
-        return any(f.name == key for f in dataclasses.fields(self))
-
-
-@dataclasses.dataclass
-class _GramAcc:
-    """Streaming sufficient statistics for one readout: the folded
-    eigenbasis Gram pair ``(G, C)`` plus the not-yet-folded row buffers
-    (lazy device slices — folding pays the stack/matmul in one chunk at
-    refit time, never per token) and the held-out drift EWMA buffers
-    (pre-observe prediction vs truth — prequential, so the 'validation'
-    set is every teacher token *before* it trains)."""
-    gram: Optional[object] = None           # folded (F, F) device array
-    cg: Optional[object] = None             # folded (F, D_out) device array
-    pairs: int = 0                          # rows folded so far
-    skip_left: int = 0                      # washout rows still to discard
-    drift: Optional[float] = None           # EWMA of held-out squared error
-    buf_h: List = dataclasses.field(default_factory=list)
-    buf_fb: List = dataclasses.field(default_factory=list)
-    buf_y: List = dataclasses.field(default_factory=list)
-    buf_pred: List = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass
-class _Member:
-    """A DPG-grown ensemble member: its own freshly sampled reservoir
-    (``core.esn.dpg_params`` — O(N), no diagonalization) advancing in
-    lock-step with the session's teacher stream from ``h=0`` (the echo
-    state property synchronizes it), plus its own :class:`_GramAcc`.  Its
-    readout ``w`` stays None (no vote) until the first refit wave solves
-    it from enough accumulated pairs."""
-    params: object
-    h: object                               # (N,) member state
-    y_fb: object                            # member's own feedback column
-    w: Optional[object] = None              # (F, D_out) once refit-trained
-    steps_since_fb: int = 0
-    pred_last: Optional[object] = None
-    acc: _GramAcc = dataclasses.field(default_factory=_GramAcc)
-    metric: Optional[object] = None         # cached EET metric (params-const)
-
-
-@dataclasses.dataclass
-class _LearnState:
-    """Per-session learn-while-serving state (host-side, engine-owned — it
-    does NOT travel through the session store: a parked session keeps its
-    accumulated ``(G, C)`` exactly like it keeps its un-collected decode
-    buffer).  ``steps_since_fb`` gates accumulation: a feature row is only
-    a valid training pair when exactly ONE decode step ran since the last
-    teacher token (free-running tokens in between would pair a state with
-    a truth it never saw)."""
-    tenant: Optional[Hashable] = None
-    last_fb: Optional[np.ndarray] = None    # teacher value forced last
-    steps_since_fb: int = 0
-    dirty: bool = False
-    acc: _GramAcc = dataclasses.field(default_factory=_GramAcc)
-    members: List = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass(slots=True)
-class SessionStats:
-    """Per-session accounting (host-side; never enters jit).
-    ``prefill_pending``: the session holds a slot but chunk waves of its
-    prompt are still queued — decode is blocked until the last chunk lands.
-    ``last_use``: monotone engine tick of the session's last prefill/decode/
-    observe touch — the LRU key paging demotes by (``slot`` is -1 while the
-    session is parked in the ``serve.store`` tiers)."""
-    slot: int
-    tokens_prefilled: int = 0
-    tokens_decoded: int = 0
-    prefill_pending: bool = False
-    last_use: int = 0
-
-
-def _fold_rows_core(params, h, fb, y, g0, c0, lam):
-    """One-dispatch refit fold: assemble the feature rows, apply the
-    λ-decay row weights, accumulate the (G, C) Gram pair, and (when prior
-    stats exist) decay-combine them — fused so a warm refit wave pays one
-    kernel instead of a chain of eager ops.  ``fb``/``g0`` being None
-    selects a second trace (None is a static pytree), and the window
-    length m recompiles by shape — constant at serve cadence."""
-    x = esn_fn.assemble_features(params, h, fb)
-    m = x.shape[0]
-    if lam < 1.0:
-        w = lam ** (jnp.arange(m - 1, -1, -1, dtype=x.dtype) / 2.0)
-        x = x * w[:, None]
-        y = y * w[:, None]
-    g, c = ridge_mod.gram_streaming(x, y)
-    if g0 is not None:
-        decay = lam ** m
-        g = decay * g0 + g
-        c = decay * c0 + c
-    return g, c
-
-
-_fold_rows = functools.partial(jax.jit, static_argnames=("lam",))(
-    _fold_rows_core)
-
-
-@functools.partial(jax.jit, static_argnames=("lam",))
-def _fold_rows_batch(params, h, fb, y, g0, c0, lam):
-    """The same fold vmapped over sessions (shared params): a refit wave
-    whose dirty sessions share one window length — the steady serve
-    cadence — folds them all in ONE dispatch instead of one per session."""
-    return jax.vmap(lambda hh, ff, yy, gg, cc:
-                    _fold_rows_core(params, hh, ff, yy, gg, cc, lam)
-                    )(h, fb, y, g0, c0)
+           "AdmissionFull", "ReservoirEngine"]
 
 
 def _coerce_model(model, readout):
@@ -357,42 +55,76 @@ def _coerce_model(model, readout):
     return params, readout
 
 
+# Exec-plane internals historically reachable as engine attributes (tests,
+# benchmarks, and snapshot restore poke them); forwarded read-only via
+# __getattr__ so the facade stays thin without breaking the compat surface.
+# Restore only ever *mutates* these containers (``eng._decode_buf[sid] =``),
+# never rebinds the attribute, so read-only forwarding is enough.
+_EXEC_FWD = frozenset({
+    "_arena_base", "_base_valid", "_base_dirty", "_donate", "_slot_w",
+    "_ens_weights", "_wave_w", "_demote_wave", "_promote_wave",
+    "_ensure_hot", "_make_room", "_capacity", "_demotable",
+    "_inflight_admit", "_inflight_retire", "_drain_inflight",
+    "_window_settled", "_pipeline_invalidate", "_pipeline_taint",
+    "_inflight_dirty_slots", "_decode_wave", "_driven_wave",
+    "_dispatch_decode", "_note_decode", "_run_wave", "_record_wave",
+    "_note_page", "_base_readout", "_pool_readout", "_fresh_arena",
+    "_decode_budget", "_decode_jit", "_closed_jit", "_driven_jit",
+    "_wave_jit", "_place_jit", "_release_jit", "_gather_jit", "_active",
+    "_inflight", "_decode_buf", "_decode_meta", "_chunk_outs",
+    "_decode_k_auto", "pipeline_depth",
+})
+
+#: other live views and method delegations: facade name -> (plane, name).
+#: The bound plane method carries the canonical docstring — the facade adds
+#: nothing to these, so it forwards instead of wrapping.
+_PLANE_FWD = {
+    "sessions": ("_table", "sessions"),
+    "_slots": ("_table", "slots"),
+    "active_sessions": ("_table", "active"),
+    "ready_sessions": ("_table", "ready"),
+    "free_slots": ("_table", "free_slots"),
+    "_tick": ("_table", "tick"),
+    "_learn_state": ("_learn_plane", "state"),
+    "_readouts": ("_learn_plane", "readouts"),
+    "_promote_us": ("_agg", "promote_us"),
+    "max_queued": ("_ingest", "max_queued"),
+    # control plane
+    "queue_inputs": ("_ingest", "queue_inputs"),
+    # data plane
+    "_place": ("_exec", "place"),
+    "state_of": ("_exec", "state_of"),
+    "decode_step": ("_exec", "decode_step"),
+    "observe": ("_exec", "observe"),
+    "decode_closed_loop": ("_exec", "decode_closed_loop"),
+    "collect_decoded": ("_exec", "collect_decoded"),
+    "_activate_pool": ("_exec", "activate_pool"),
+    "_sync_slot_readouts": ("_exec", "sync_slot_readouts"),
+    # learn plane
+    "drift_rmse": ("_learn_plane", "drift_rmse"),
+    "_refit_wave": ("_learn_plane", "refit_wave"),
+    "_fold_acc": ("_learn_plane", "_fold_acc"),
+    "_session_params": ("_learn_plane", "_session_params"),
+    "_note_admission": ("_learn_plane", "note_admission"),
+    "_readout_key": ("_learn_plane", "readout_key"),
+    # telemetry plane
+    "clear_decode_gaps": ("_agg", "clear_gaps"),
+}
+
+
 class ReservoirEngine:
     """Batched multi-session serving over an immutable reservoir param struct.
 
-    ``model``: a ``core.params`` struct (``StandardParams`` / ``DiagParams``)
-    or — deprecated — a ``core.esn.LinearESN`` facade, whose params/readout
-    are taken.  ``readout``: optional ``core.params.Readout`` (or bare W_out
-    array); required for predictions / closed-loop decode but not for pure
-    state streaming.
-
-    ``mesh``: optional ``(data, model)`` jax mesh — the arena and params are
-    placed per ``sharding.rules.plan_arena`` (slots data-parallel, N
-    TP-sharded) so one engine spans all the mesh's devices.  ``bucket_min``:
-    smallest prefill bucket (prompt lengths are padded up to powers of two).
-
-    ``chunk_max``: prompts longer than this drain as sequential chunk waves
-    resumed from the slot's carried state (bit-exact vs one wave; pinned by
-    test) — a 500k-token prompt no longer monopolizes the arena.
-    ``autotune``: time every flushed wave *and* every decode dispatch, feed
-    the measurements into a ``serve.cost.WaveCostModel`` (pass a pre-seeded
-    one via ``cost_model``), and let the scheduler's two-wave lookahead plan
-    waves by predicted tokens-per-second instead of the static ``max_wave``
-    cap.
-
-    ``decode_slo_us``: decode-aware planning (default off).  When set, any
-    :meth:`flush` call with ``decode_interleave=True`` bounds how much
-    *predicted* prefill cost may accumulate while ready-to-decode sessions
-    wait: a candidate prefill wave that would push the decode inter-token
-    gap past the budget is shrunk or deferred so a closed-loop decode wave
-    (``decode_wave_tokens`` tokens over every ready session, buffered for
-    :meth:`collect_decoded`) interleaves first.  The policy only *reorders*
-    waves — outputs stay bit-exact (pinned by test).  A cold cost model is
-    created automatically if none is supplied.
-
-    The engine **snapshots (params, readout) at construction** — both are
-    immutable structs, so nothing can mutate underneath the compiled step
-    functions; build the engine *after* fitting.
+    ``model``: a ``core.params`` struct (or — deprecated — a ``LinearESN``
+    facade).  ``decode_slo_us``: the engine-wide default decode deadline;
+    ``submit(..., decode_slo_us=)`` overrides it per session, and
+    interleaved flushes decode the most-urgent deadline first — premium
+    sessions cannot be starved by default-tier traffic (pinned by test).
+    ``tracker``: a ``serve.telemetry.Tracker`` or spec string (``"null"``,
+    ``"jsonl:PATH"``); ``profile_dir`` adds ``jax.profiler`` capture
+    windows.  ``max_queued`` bounds the admission queue (:meth:`submit`
+    raises :class:`AdmissionFull` beyond it).  The engine **snapshots
+    (params, readout) at construction** — build it *after* fitting.
     """
 
     def __init__(self, model, max_slots: int = 8, *,
@@ -414,6 +146,9 @@ class ReservoirEngine:
                  growth_max_members: int = 3,
                  growth_sigma: float = 0.1,
                  growth_washout: int = 64,
+                 tracker=None,
+                 profile_dir: Optional[str] = None,
+                 max_queued: Optional[int] = None,
                  _param_batch: bool = False):
         self.params, self.readout = _coerce_model(model, readout)
         self.cfg = self.params.cfg
@@ -439,11 +174,6 @@ class ReservoirEngine:
                 f"of a param-batched engine — use from_param_batch with a "
                 f"readout")
         self.ensemble = ensemble
-        # ensemble="weighted": validation-RMSE-derived per-reservoir voting
-        # weights (None = uniform, i.e. the plain mean) — set via
-        # set_ensemble_weights(); passed to the wave fns as a traced arg so
-        # weight updates never retrace.
-        self._ens_weights = None
         # ---- learn-while-serving knobs -----------------------------------
         self._learn = bool(learn)
         if self._learn and self.readout is None:
@@ -478,16 +208,6 @@ class ReservoirEngine:
         self._growth_max = int(growth_max_members)
         self._growth_sigma = float(growth_sigma)
         self._growth_washout = int(growth_washout)
-        self._growth_seed = int(getattr(self.cfg, "seed", 0) or 0) + 7001
-        self._learn_state: Dict[Hashable, _LearnState] = {}
-        # Per-tenant readout pool: key -> (F, D_out) readout.  _slot_w is
-        # the device-side (max_slots, F, D_out) gather of the pool — None
-        # (zero overhead, engine-wide w_out serves every slot) until the
-        # first tenant readout diverges from the base.
-        self._readouts: Dict[Hashable, object] = {}
-        self._slot_w = None
-        self._metric_cache: Dict[Hashable, object] = {}
-        self._acc_cache = None          # (states_ref, states_np, y_prev_np)
         self._dtype = self.params.dtype
         self.mesh = mesh
         self._plan = None
@@ -500,25 +220,15 @@ class ReservoirEngine:
             if self.readout is not None:
                 self.readout = Readout(
                     jax.device_put(self.readout.w_out, self._plan.readout))
-        self.arena = self._fresh_arena()
-        self._slots: list = [None] * self.max_slots  # slot -> session id
-        self.sessions: Dict[Hashable, SessionStats] = {}
-        # Cost-model wave planning: autotune=True times every flushed wave
-        # (host-blocking — the price of a measurement) and feeds the model,
-        # which the scheduler's two-wave lookahead then plans against.  A
-        # pre-seeded model (WaveCostModel.from_artifact) can be passed in;
-        # autotune without one starts cold and learns from the first flush.
         self._autotune = bool(autotune)
         if decode_slo_us is not None and decode_slo_us <= 0:
             raise ValueError(
                 f"decode_slo_us must be positive (got {decode_slo_us}); "
                 f"use None to disable decode-aware planning")
-        # K-adaptive decode wave sizing: "auto" resolves K per interleaved
-        # flush from the fitted c_dec(B, K) surface (largest K whose
-        # marginal cost/token still improves, capped by the decode SLO)
-        # instead of a static constructor constant.
-        self._decode_k_auto = decode_wave_tokens == "auto"
-        if self._decode_k_auto:
+        # "auto" resolves K per interleaved flush from the fitted c_dec(B, K)
+        # surface instead of a static constructor constant.
+        decode_k_auto = decode_wave_tokens == "auto"
+        if decode_k_auto:
             decode_wave_tokens = 1      # resolved per flush; 1 until fitted
         if not isinstance(decode_wave_tokens, (int, np.integer)):
             raise ValueError(
@@ -527,20 +237,16 @@ class ReservoirEngine:
         if decode_wave_tokens < 1:
             raise ValueError(f"decode_wave_tokens must be >= 1, "
                              f"got {decode_wave_tokens}")
-        self.decode_slo_us = (None if decode_slo_us is None
-                              else float(decode_slo_us))
-        self.decode_wave_tokens = int(decode_wave_tokens)
-        # Pipelined wave executor: flush() keeps up to pipeline_depth waves
-        # in flight on the device while the host plans/places the next ones;
-        # 0 = fully synchronous (block after every wave — the bit-exact
-        # baseline the pipeline is tested and benchmarked against).
+        decode_slo_us = (None if decode_slo_us is None
+                         else float(decode_slo_us))
+        # pipeline_depth waves stay in flight while the host plans the next;
+        # 0 = fully synchronous (the bit-exact baseline).
         if int(pipeline_depth) < 0:
             raise ValueError(f"pipeline_depth must be >= 0, "
                              f"got {pipeline_depth}")
-        self.pipeline_depth = int(pipeline_depth)
-        # Paged session store: capacity becomes sessions, not slots.  The
-        # arena turns into a cache of hot sessions over a pinned host pool
-        # (park_host_rows rows) and an optional disk/fsspec cold tier.
+        pipeline_depth = int(pipeline_depth)
+        # Paged session store: the arena becomes a cache of hot sessions
+        # over a pinned host pool and an optional disk/fsspec cold tier.
         if cold_dir is not None and park_host_rows is None:
             raise ValueError(
                 "cold_dir needs park_host_rows — the cold tier is the "
@@ -554,124 +260,106 @@ class ReservoirEngine:
         self._park_host_rows = (None if park_host_rows is None
                                 else int(park_host_rows))
         self._cold_dir = cold_dir
-        self.store = None
+        store = None
         if self._park_host_rows is not None:
             # A synchronous engine (pipeline_depth=0) gets a synchronous
             # store: no async spill/prefetch lane, so the baseline really is
             # the old serialized flush end to end.
-            self.store = store_mod.SessionStore(
+            store = store_mod.SessionStore(
                 self.cfg.n, self.cfg.d_out, self._dtype,
                 host_rows=self._park_host_rows, cold_dir=cold_dir,
-                io_workers=2 if self.pipeline_depth > 0 else 0)
-        self._use_clock = 0
-        self._promote_us: collections.deque = collections.deque(maxlen=4096)
-        # Decode-aware planning needs a cost surface to price the candidate
-        # prefill waves against the budget — a cold model's documented
-        # constants are enough to start; autotune refines them in place.
-        # Engine-created models are keyed by (backend, n, d_out) so their
-        # persisted observations never mis-price a different machine or
-        # model size; a caller-supplied model keeps whatever key it has.
+                io_workers=2 if pipeline_depth > 0 else 0)
+        # Decode-aware planning needs a cost surface; engine-created models
+        # are keyed by (backend, n, d_out) so persisted observations never
+        # mis-price a different machine or model size.
         if cost_model is None and (autotune or decode_slo_us is not None
-                                   or self._decode_k_auto or self._learn
-                                   or self.store is not None):
+                                   or decode_k_auto or self._learn
+                                   or store is not None):
             cost_model = WaveCostModel(key=cost_key(
                 jax.default_backend(), self.cfg.n, self.cfg.d_out))
-        self.cost_model = cost_model
-        self.scheduler = WaveScheduler(bucket_min=bucket_min,
-                                       chunk_max=chunk_max,
-                                       cost_model=cost_model)
-        self._chunk_outs: Dict[Hashable, List] = {}
-        self._decode_buf: Dict[Hashable, List] = {}
-        self._decode_meta: List[dict] = []
-        self._stats = {"waves": 0, "rows": 0, "fresh_rows": 0,
-                       "prefill_tokens": 0, "decode_tokens": 0,
-                       "occupancy_sum": 0.0,
-                       "wave_us_sum": 0.0, "timed_waves": 0,
-                       "decode_waves": 0, "decode_rows": 0,
-                       "decode_interleave_waves": 0,
-                       "decode_us_sum": 0.0, "decode_timed_steps": 0,
-                       "page_waves": 0, "page_rows": 0, "page_us_sum": 0.0,
-                       "promote_waves": 0, "demote_waves": 0,
-                       "inflight_peak": 0, "host_block_us": 0.0,
-                       "overlap_demotes": 0,
-                       "refit_waves": 0, "refit_rows": 0,
-                       "refit_us_sum": 0.0, "growth_events": 0,
-                       "by_bucket": {}}
-        # Pipelined-executor window: dispatched-but-unretired waves, oldest
-        # first.  Each entry carries the lazy output to block on (marker),
-        # the cost model's predicted wave cost (the window bound), the slot
-        # set the wave writes, and the arena value right after its dispatch.
-        # ``_arena_base`` is the arena as of the oldest in-flight wave's
-        # *inputs* — a donation-free backend may gather untouched rows from
-        # it without waiting for the in-flight scans (see _demote_wave);
-        # ``_base_valid`` drops to False whenever an untracked path mutates
-        # the arena while waves are in flight.
-        self._inflight: collections.deque = collections.deque()
-        self._arena_base = None
-        self._base_valid = False
-        self._base_dirty: set = set()
-        self._wave_log: collections.deque = collections.deque(maxlen=256)
-        # Decode latency bookkeeping: the planning clock (predicted/measured
-        # prefill cost charged since the last decode wave), the wall stamp
-        # of the last decode event (host overhead — evictions, admissions,
-        # queue drains — consumes latency budget no cost model predicts),
-        # and the measured wall-clock inter-token gaps per session.
-        self._decode_clock_us = 0.0
-        self._last_decode_t = time.perf_counter()
-        self._last_decode_wall: Dict[Hashable, float] = {}
-        self._decode_gaps_us: collections.deque = collections.deque(
-            maxlen=4096)
-        self._decode_jit = jax.jit(functools.partial(
-            arena_mod.decode_step, batched=self._batched,
-            ensemble=self.ensemble))
-        # Closed-loop decode routes through the fused K-token path
-        # (arena.closed_loop_fused -> core.dispatch.run_decode_fused): one
-        # dispatch per wave instead of per token, Pallas kernel on TPU, jnp
-        # reference elsewhere; dense params fall back to the scan inside.
-        # The arena argument is donated on TPU so the (B, N) slot state
-        # updates in place — never copies per wave (donation elsewhere is a
-        # no-op that XLA warns about, so it is gated).
-        donate = (2,) if jax.default_backend() == "tpu" else ()
-        # Donation-safety flag for the pipelined executor: with the arena
-        # donated (TPU), a superseded arena's buffer may already be reused
-        # in place, so gathering from a pre-wave arena value while the wave
-        # is in flight would read freed memory — the overlap-demote fast
-        # path is gated off and demotes fall back to the ordered gather.
-        self._donate = bool(donate)
-        self._closed_jit = jax.jit(
-            functools.partial(arena_mod.closed_loop_fused,
-                              batched=self._batched,
-                              ensemble=self.ensemble),
-            static_argnums=4, donate_argnums=donate)
-        self._wave_jit = jax.jit(
-            functools.partial(arena_mod.prefill_wave, batched=self._batched),
-            static_argnames=("method", "chunk", "want_outputs"))
-        # Paging bundles as ONE executable each: eagerly, place_many /
-        # release_many / gather_rows cost several device dispatches per
-        # wave, and under the pipelined executor every dispatch also draws
-        # down the backend's bounded in-flight-computation budget — eager
-        # paging ops exhaust it mid-round and the "overlapped" host work
-        # stalls on dispatch backpressure behind the in-flight scan.
-        self._place_jit = jax.jit(arena_mod.place_many)
-        self._release_jit = jax.jit(arena_mod.release_many)
-        self._gather_jit = jax.jit(arena_mod.gather_rows)
-        # Batched refit: ONE vmapped generalized ridge solve covers every
-        # dirty session (and grown member) in a wave — (R, F, F) Grams,
-        # (R, F, D) cross terms, (R, F, F) per-row metrics (EET
-        # blockdiag(I, QᵀQ) for diag rows, identity for standard), shared
-        # traced alpha.
-        self._refit_jit = jax.jit(jax.vmap(ridge_mod.ridge_solve_general,
-                                           in_axes=(0, 0, 0, None)))
+        # Observability: the aggregator is always first in the fan-out, so
+        # stats() counters and a user trace derive from the SAME events.
+        self._agg = StatsAggregator()
+        if isinstance(tracker, Tracker):
+            user: Optional[Tracker] = tracker
+            if profile_dir:
+                user = MultiTracker([user, ProfilerTracker(profile_dir)])
+        elif tracker is not None or profile_dir is not None:
+            user = make_tracker(tracker, profile_dir=profile_dir)
+        else:
+            user = None
+        self.tracker: Tracker = (MultiTracker([self._agg, user])
+                                 if user is not None else self._agg)
+        # ---- planes ------------------------------------------------------
+        sched = WaveScheduler(bucket_min=bucket_min, chunk_max=chunk_max,
+                              cost_model=cost_model)
+        self._table = SessionTable(self.max_slots)
+        self._exec = ExecPlane(
+            self.params, self.readout, self.cfg, self._dtype,
+            batched=self._batched, ensemble=self.ensemble,
+            max_slots=self.max_slots, plan=self._plan,
+            pipeline_depth=pipeline_depth, decode_slo_us=decode_slo_us,
+            decode_wave_tokens=int(decode_wave_tokens),
+            decode_k_auto=decode_k_auto, store=store, cost_model=cost_model,
+            autotune=self._autotune, tracker=self.tracker,
+            table=self._table, scheduler=sched)
+        self._ingest = IngestPlane(
+            self.cfg, self._dtype, batched=self._batched,
+            max_slots=self.max_slots, table=self._table, scheduler=sched,
+            default_decode_slo_us=decode_slo_us, max_queued=max_queued)
+        self._learn_plane = LearnPlane(
+            self.params, self.cfg, self._dtype, batched=self._batched,
+            enabled=self._learn, tracker=self.tracker,
+            refit_alpha=self._refit_alpha, refit_decay=self._refit_decay,
+            refit_washout=self._refit_washout,
+            drift_threshold=self._drift_threshold,
+            drift_beta=self._drift_beta, growth_max=self._growth_max,
+            growth_sigma=self._growth_sigma,
+            growth_washout=self._growth_washout,
+            cost_model=cost_model, autotune=self._autotune)
+        self._wire_planes()
 
-    def _fresh_arena(self) -> arena_mod.SlotArena:
-        ar = arena_mod.make_arena(self.cfg.n, self.cfg.d_out, self.max_slots,
-                                  self._dtype)
-        if self._plan is not None:
-            ar = arena_mod.SlotArena(
-                states=jax.device_put(ar.states, self._plan.arena["states"]),
-                y_prev=jax.device_put(ar.y_prev, self._plan.arena["y_prev"]),
-                active=jax.device_put(ar.active, self._plan.arena["active"]))
-        return ar
+    def _wire_planes(self) -> None:
+        """Cross-plane runtime effects travel through these callbacks so
+        imports stay one-way; the closures read live facade state."""
+        ex, ig, ln = self._exec, self._ingest, self._learn_plane
+        # exec -> learn (teacher pairing, voting, refit) and -> ingest
+        # (open-loop input queues).
+        ex.note_admission = ln.note_admission
+        ex.on_prompt_done = ln.on_prompt_done
+        ex.note_freerun = ln.note_freerun
+        ex.note_steps = ln.note_steps
+        ex.cache_post_step = ln.cache_post_step
+        ex.vote = ln.vote
+        ex.on_observe = ln.on_observe
+        ex.pool_entry = ln.pool_entry
+        ex.learn_active = lambda: self._learn
+        ex.dirty_sids = ln.dirty_sids
+        ex.refit_wave = ln.refit_wave
+        ex.input_depth = ig.input_depth
+        ex.pop_inputs = ig.pop_inputs
+
+        def _forget(sid):
+            # One release hook: the learn state leaves with the session and
+            # any still-queued open-loop inputs are dropped.
+            ln.pop(sid)
+            ig.drop_inputs(sid)
+        ex.pop_learn = _forget
+        # ingest -> exec (the one device effect admission needs: a pinned
+        # placement) and -> learn (session learn-state creation).
+        ig.place = ex.place
+        ig.note_admission = ln.note_admission
+        ig.in_store = lambda sid: (ex.store is not None and sid in ex.store)
+        # learn -> exec (refit results scatter into the device pool) and ->
+        # the session table / scheduler (slot resolve, wave-cost charge).
+        ln.session_slot = lambda sid: self._table.sessions[sid].slot
+        ln.activate_pool = ex.activate_pool
+        ln.sync_readouts = ex.sync_slot_readouts
+        ln.hot_serving = lambda keys: [
+            (sid, st.slot) for sid, st in self._table.sessions.items()
+            if ln.readout_key(sid) in keys]
+        # Through the property: reset() swaps the scheduler instance.
+        ln.charge = lambda us: self.scheduler.charge_decode_cost(us)
 
     @classmethod
     def from_param_batch(cls, params, readout: Optional[Readout] = None, *,
@@ -684,23 +372,16 @@ class ReservoirEngine:
                          decode_wave_tokens=1,
                          pipeline_depth: int = 2,
                          park_host_rows: Optional[int] = None,
-                         cold_dir: Optional[str] = None
+                         cold_dir: Optional[str] = None,
+                         tracker=None,
+                         profile_dir: Optional[str] = None,
+                         max_queued: Optional[int] = None
                          ) -> "ReservoirEngine":
-        """Engine over a *batch* of independently-seeded reservoirs.
-
-        ``params``: a stacked struct (``core.params.stack_params``) whose
-        leaves carry a leading axis ``B``; ``readout``: optional stacked
-        ``Readout`` with ``w_out`` of shape (B, N', D_out) — e.g. from
-        ``jax.vmap(core.esn.fit, ...)``.  Slot ``i`` is permanently bound to
-        reservoir ``i``; one jitted, ``vmap``-over-params decode trace
-        advances all of them per token.
-
-        ``ensemble="mean"``: the B per-reservoir predictions are averaged
-        into ONE output per step — ``decode_step`` returns that mean for
-        every queried session, and closed-loop decode feeds the mean back as
-        the next input of every reservoir (the serving-quality readout-fusion
-        knob: B cheap reservoirs vote on one stream).
-        """
+        """Engine over a *batch* of independently-seeded reservoirs: slot
+        ``i`` is permanently bound to reservoir ``i``; one vmap-over-params
+        decode trace advances all of them per token.  ``ensemble="mean"``
+        averages the B predictions into ONE output per step (B cheap
+        reservoirs vote on one stream)."""
         b = jax.tree_util.tree_leaves(params)[0].shape[0]
         return cls(params, max_slots=b, readout=readout, ensemble=ensemble,
                    mesh=mesh, bucket_min=bucket_min, chunk_max=chunk_max,
@@ -709,7 +390,81 @@ class ReservoirEngine:
                    decode_wave_tokens=decode_wave_tokens,
                    pipeline_depth=pipeline_depth,
                    park_host_rows=park_host_rows, cold_dir=cold_dir,
-                   _param_batch=True)
+                   tracker=tracker, profile_dir=profile_dir,
+                   max_queued=max_queued, _param_batch=True)
+
+    # ------------------------------------------------- plane state (compat)
+    # The facade owns NO serving state: every attribute below is a live
+    # view into the plane that does.  Assignments propagate where the old
+    # monolith allowed them (snapshot restore, tests).
+    def __getattr__(self, name):
+        if name in _EXEC_FWD:
+            return getattr(object.__getattribute__(self, "_exec"), name)
+        fwd = _PLANE_FWD.get(name)
+        if fwd is not None:
+            return getattr(object.__getattribute__(self, fwd[0]), fwd[1])
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+    @property
+    def arena(self):
+        return self._exec.arena
+
+    @arena.setter
+    def arena(self, value):
+        self._exec.arena = value
+
+    @property
+    def _use_clock(self) -> int:
+        return self._table.use_clock
+
+    @_use_clock.setter
+    def _use_clock(self, value: int) -> None:
+        self._table.use_clock = int(value)
+
+    @property
+    def scheduler(self) -> WaveScheduler:
+        return self._exec.scheduler
+
+    @scheduler.setter
+    def scheduler(self, sched: WaveScheduler) -> None:
+        self._exec.scheduler = sched
+        self._ingest.scheduler = sched
+
+    @property
+    def store(self):
+        return self._exec.store
+
+    @store.setter
+    def store(self, value) -> None:
+        self._exec.store = value
+
+    @property
+    def cost_model(self):
+        return self._exec.cost_model
+
+    @cost_model.setter
+    def cost_model(self, model) -> None:
+        self._exec.cost_model = model
+        self._learn_plane.cost_model = model
+        self.scheduler.cost_model = model
+
+    @property
+    def decode_slo_us(self):
+        return self._exec.decode_slo_us
+
+    @decode_slo_us.setter
+    def decode_slo_us(self, value) -> None:
+        self._exec.decode_slo_us = value
+        self._ingest.default_decode_slo_us = value
+
+    @property
+    def decode_wave_tokens(self) -> int:
+        return self._exec.decode_wave_tokens
+
+    @decode_wave_tokens.setter
+    def decode_wave_tokens(self, value: int) -> None:
+        self._exec.decode_wave_tokens = int(value)
 
     # -------------------------------------------------------------- compat
     @property
@@ -720,271 +475,21 @@ class ReservoirEngine:
     def param_batched(self) -> bool:
         return self._batched
 
-    # Read-only views into the arena.  Deliberately NO setters: the arena is
-    # the one owner of the serving arrays, and a correctness-critical write
-    # routed through an attribute assignment is exactly how teacher forcing
-    # became a silent no-op (observe() assigned `self.y_prev = ...`; had the
-    # compat property been dropped, the assignment would have bound a stray
-    # instance attribute and the arena would never see the ground truth).
-    # Writers go through `self.arena = dataclasses.replace(...)` / the pure
-    # ``serve.arena`` functions, and a stray attribute write now raises.
+    # Read-only arena views — deliberately NO setters: writers go through
+    # the exec plane's pure ``serve.arena`` functions, so a stray attribute
+    # write (the old silent-no-op teacher-forcing bug) now raises.
     @property
     def states(self):
-        """The arena's (max_slots, N) state block (owned by ``serve.arena``;
-        kept as a read-only property for callers that peek at slots)."""
-        return self.arena.states
+        return self._exec.arena.states
 
     @property
     def y_prev(self):
-        return self.arena.y_prev
+        return self._exec.arena.y_prev
 
     @property
     def pending(self):
         """The scheduler's queue (len/iter-able) — sessions awaiting a slot."""
         return self.scheduler
-
-    # ---------------------------------------------------------------- paging
-    def _tick(self) -> int:
-        """Advance the engine's LRU clock (every session touch gets a fresh
-        monotone stamp — wall time would make snapshot restores non-
-        deterministic)."""
-        self._use_clock += 1
-        return self._use_clock
-
-    def _demotable(self, protect=frozenset()) -> List[Hashable]:
-        """Hot sessions eligible to park, least-recently-used first: ready
-        (no chunk waves in flight — a mid-prompt slot's carry is owed to the
-        scheduler's queued chunks) and not protected (a flush's decode set,
-        a promote wave's own targets)."""
-        cands = [(st.last_use, sid) for sid, st in self.sessions.items()
-                 if not st.prefill_pending and sid not in protect]
-        cands.sort(key=lambda c: c[0])
-        return [sid for _, sid in cands]
-
-    def _capacity(self, protect=frozenset()) -> int:
-        """Admission capacity for the scheduler: free slots, plus — on a
-        paged engine — every demotable hot session (admitting over the free
-        slots parks the LRU idle sessions instead of rejecting; this is the
-        tentpole semantic change: capacity is sessions, not slots)."""
-        cap = self.free_slots
-        if self.store is not None:
-            cap += len(self._demotable(protect))
-        return cap
-
-    def _note_page(self, rows: int, us: float, *, promote: bool) -> None:
-        """Page-wave accounting: counters, the cost model's page surface
-        (autotune only — mirrors decode: in pipelined serving the blocking
-        transfer also drains queued waves, and that drain time would poison
-        the fit), and the decode planning clock (a page wave spends real
-        latency the decode budget must see)."""
-        s = self._stats
-        s["page_waves"] += 1
-        s["page_rows"] += rows
-        s["page_us_sum"] += us
-        s["promote_waves" if promote else "demote_waves"] += 1
-        if self._autotune and self.cost_model is not None:
-            self.cost_model.observe_page(rows, us)
-        self._decode_clock_us += us
-
-    # ---------------------------------------------------- pipelined executor
-    def _inflight_admit(self, marker, pred_us: float, slots,
-                        arena_before) -> None:
-        """Admit a freshly dispatched wave into the in-flight window, then
-        retire from the front until the window is legal again: at most
-        ``pipeline_depth`` waves deep, AND — when a decode SLO is set — the
-        summed *predicted* cost of the in-flight waves stays under it (an
-        unbounded dispatch queue is exactly how async dispatch blows a
-        latency SLO: every queued wave is latency someone's next token must
-        wait behind)."""
-        if not self._inflight:
-            # Window was empty: the pre-dispatch lineage is fully retired,
-            # so the arena value the wave read from is a safe gather source
-            # for rows no in-flight wave touches.  The base is captured
-            # fresh, past every earlier out-of-band mutation — the taint
-            # set starts clean.
-            self._arena_base = arena_before
-            self._base_valid = True
-            self._base_dirty = set()
-        self._inflight.append({"marker": marker, "pred_us": float(pred_us),
-                               "slots": frozenset(slots),
-                               "arena_after": self.arena})
-        while len(self._inflight) > self.pipeline_depth or (
-                self.decode_slo_us is not None and len(self._inflight) > 1
-                and sum(e["pred_us"] for e in self._inflight)
-                > self.decode_slo_us):
-            self._inflight_retire()
-        s = self._stats
-        s["inflight_peak"] = max(s["inflight_peak"], len(self._inflight))
-
-    def _inflight_retire(self) -> None:
-        """Block on the oldest in-flight wave and advance the safe gather
-        base past it.  The blocked time is the host's pipeline-idle time —
-        accounted so the overlap-efficiency benchmark can report
-        1 - host_idle/wall."""
-        e = self._inflight.popleft()
-        t0 = time.perf_counter()
-        jax.block_until_ready(e["marker"])
-        self._stats["host_block_us"] += (time.perf_counter() - t0) * 1e6
-        if self._base_valid:
-            self._arena_base = e["arena_after"]
-        if not self._inflight:
-            self._arena_base = None
-
-    def _drain_inflight(self) -> None:
-        while self._inflight:
-            self._inflight_retire()
-
-    def _window_settled(self) -> None:
-        """The caller just blocked on a value downstream of every in-flight
-        wave (a decode wave's tokens, a promote's scatter): the whole window
-        is materialized — forget it without further blocking."""
-        self._inflight.clear()
-        self._pipeline_invalidate()
-
-    def _pipeline_invalidate(self) -> None:
-        """An arena mutation outside the tracked wave path whose touched
-        rows are unknown (an unmasked decode, a wholesale arena swap): the
-        pre-wave gather base can no longer vouch for any row — fall back to
-        ordered gathers until the window turns over."""
-        self._arena_base = None
-        self._base_valid = False
-        self._base_dirty = set()
-
-    def _pipeline_taint(self, slots) -> None:
-        """A *known-slot* arena mutation outside the tracked wave path
-        (evict release, single-session place, teacher-forcing): the gather
-        base stays valid for every OTHER row — only the touched slots fall
-        back to ordered gathers.  Slot-granular where
-        :meth:`_pipeline_invalidate` is wholesale, so steady churn (evicts
-        every round) doesn't permanently kill the overlap-demote fast path.
-        """
-        if self._base_valid:
-            self._base_dirty.update(slots)
-
-    def _inflight_dirty_slots(self) -> set:
-        dirty: set = set()
-        for e in self._inflight:
-            dirty |= e["slots"]
-        return dirty
-
-    def _demote_wave(self, sids: List[Hashable]) -> None:
-        """Park ``sids``: gather their slot rows in ONE device->host
-        transfer, free the slots in ONE scatter, and hand the rows (plus
-        each session's accounting struct, verbatim) to the store.  The
-        ``device_get`` is inherently blocking — but on a donation-free
-        backend, a pipelined engine gathers from the **pre-wave arena
-        value** when no in-flight wave touches the victim slots: those rows
-        are bit-identical in both values (waves scatter only their own
-        slots), and the older value does not depend on the in-flight scans,
-        so the page-out overlaps them instead of draining the window.  With
-        the arena donated (TPU) the superseded buffer may already be reused
-        in place, so the fast path is gated off (donation safety)."""
-        if not sids:
-            return
-        slots = [self.sessions[s].slot for s in sids]
-        idx = jnp.asarray(slots)
-        if (self._inflight and self._base_valid and not self._donate
-                and self._arena_base is not None
-                and not (set(slots) & (self._inflight_dirty_slots()
-                                       | self._base_dirty))):
-            # Overlap fast path: the base value was materialized by the
-            # last retire, so device_get here waits only on its own ready
-            # event and copies — no gather computation is enqueued.  An
-            # enqueued gather would serialize behind the in-flight scan on
-            # backends that execute in dispatch order (CPU), turning the
-            # "overlap" into a hidden drain.  The row select runs on host.
-            base = self._arena_base
-            self._stats["overlap_demotes"] += 1
-            t0 = time.perf_counter()
-            all_states, all_ys = jax.device_get((base.states, base.y_prev))
-            sel = np.asarray(slots)
-            states, ys = all_states[sel], all_ys[sel]
-        else:
-            t0 = time.perf_counter()
-            states, ys = jax.device_get(
-                self._gather_jit(self.arena, idx))
-        us = (time.perf_counter() - t0) * 1e6
-        stats = []
-        for sid in sids:
-            st = self.sessions.pop(sid)
-            self._slots[st.slot] = None
-            st.slot = -1
-            stats.append(st)
-        self.arena = self._release_jit(self.arena, idx)
-        self.store.park_many(sids, np.asarray(states), np.asarray(ys),
-                             stats)
-        self._note_page(len(sids), us, promote=False)
-
-    def _promote_wave(self, sids: List[Hashable]) -> None:
-        """Un-park ``sids`` into free slots: one store fetch (host rows or
-        cold records), ONE ``place_many`` scatter.  The wave blocks until
-        the states are resident — a promote is always on someone's decode
-        critical path, and an unmaterialized state is still latency; the
-        measured restore latency feeds ``promote_us_p95`` in :meth:`stats`.
-        """
-        if not sids:
-            return
-        t0 = time.perf_counter()
-        states, ys, stats = self.store.fetch_many(sids)
-        slots = []
-        for sid, st in zip(sids, stats):
-            slot = self._slots.index(None)
-            self._slots[slot] = sid
-            st.slot = slot
-            self.sessions[sid] = st
-            slots.append(slot)
-        self.arena = self._place_jit(self.arena, jnp.asarray(slots),
-                                     jnp.asarray(states), jnp.asarray(ys))
-        # Promoted sessions re-enter on fresh slots: re-scatter their tenant
-        # pool readouts so the next decode wave serves the right weights.
-        self._sync_slot_readouts(list(zip(sids, slots)))
-        # A promote stays blocking even in the pipelined executor: it is on
-        # someone's decode critical path, and an unmaterialized state is
-        # still latency — the measured restore latency must be real.  The
-        # block also materializes every in-flight wave (the scatter depends
-        # on them), so the window settles for free.
-        jax.block_until_ready(self.arena.states)
-        self._window_settled()
-        us = (time.perf_counter() - t0) * 1e6
-        self._promote_us.append(us)
-        self._note_page(len(sids), us, promote=True)
-
-    def _ensure_hot(self, sids, protect=frozenset()) -> None:
-        """Transparently promote any parked sessions in ``sids`` — called at
-        the top of every decode/observe path, so decoding a parked session
-        just works: the LRU idle hot sessions page out to make room.  No-op
-        on an unpaged engine or when everything is already hot."""
-        if self.store is None:
-            return
-        parked = [s for s in sids if s in self.store]
-        if not parked:
-            return
-        # Kick the cold->host reads onto the store's async lane now: they
-        # overlap the demote wave below (and any in-flight prefill), and
-        # _promote_wave's fetch consumes the per-session futures — blocking
-        # only if a read is genuinely still in flight when needed.
-        self.store.prefetch_many(parked)
-        need = len(parked) - self.free_slots
-        if need > 0:
-            victims = self._demotable(set(sids) | set(protect))[:need]
-            if len(victims) < need:
-                raise RuntimeError(
-                    f"cannot promote {len(parked)} parked session(s): "
-                    f"{self.free_slots} free slot(s), "
-                    f"{len(victims)} demotable — decode at most "
-                    f"max_slots={self.max_slots} sessions per wave")
-            self._demote_wave(victims)
-        self._promote_wave(parked)
-
-    def _make_room(self, wave: List[WaveItem], protect=frozenset()) -> None:
-        """Demote enough LRU idle sessions that the popped wave's fresh rows
-        all find free slots (the scheduler's ``capacity`` already counted
-        them, so the victims exist by construction)."""
-        if self.store is None:
-            return
-        need = sum(it.first for it in wave) - self.free_slots
-        if need > 0:
-            self._demote_wave(self._demotable(protect)[:need])
 
     @property
     def parked_sessions(self) -> List[Hashable]:
@@ -995,58 +500,10 @@ class ReservoirEngine:
         return [] if self.store is None else self.store.sids
 
     # -------------------------------------------------- per-tenant readouts
-    def _wave_w(self):
-        """The readout the wave functions serve: the (max_slots, F, D_out)
-        per-slot pool once any tenant readout has diverged from the base,
-        else the engine-wide ``w_out`` (zero pool overhead until then)."""
-        return self.w_out if self._slot_w is None else self._slot_w
-
-    def _activate_pool(self) -> None:
-        """Materialize the per-slot readout pool (one-time retrace of the
-        wave fns: 2D -> 3D ``w_out``).  Seeded by broadcasting the base
-        readout to every slot; a param-batched engine's stacked readout
-        already IS the pool."""
-        if self._slot_w is not None:
-            return
-        if self.readout is None:
-            raise ValueError("per-tenant readout pools need a base readout")
-        w = self.w_out
-        if not self._batched:
-            w = jnp.broadcast_to(w, (self.max_slots,) + w.shape)
-        self._slot_w = jnp.asarray(w)
-
-    def _readout_key(self, sid) -> Hashable:
-        """The readout-pool key serving ``sid``: its tenant when one was
-        given at submit, else the sid itself (private per-session pool)."""
-        ls = self._learn_state.get(sid)
-        return sid if ls is None or ls.tenant is None else ls.tenant
-
-    def _base_readout(self, slot: int):
-        return (None if self.readout is None
-                else self.w_out[slot] if self._batched else self.w_out)
-
-    def _pool_readout(self, sid, slot: int):
-        w = self._readouts.get(self._readout_key(sid))
-        return self._base_readout(slot) if w is None else w
-
-    def _sync_slot_readouts(self, pairs) -> None:
-        """Scatter each (sid, slot) pair's effective readout into the device
-        pool — called at every placement/promotion.  No-op while the pool is
-        dormant (every slot serves the base readout by construction)."""
-        if self._slot_w is None:
-            return
-        pairs = list(pairs)
-        if not pairs:
-            return
-        idx = jnp.asarray([slot for _, slot in pairs])
-        ws = jnp.stack([self._pool_readout(sid, slot)
-                        for sid, slot in pairs])
-        self._slot_w = self._slot_w.at[idx].set(ws)
-
     def _sync_key(self, key) -> None:
         """Re-scatter every hot session serving ``key`` (tenant refit: all
-        of the tenant's hot sessions pick up the new readout at once)."""
-        self._sync_slot_readouts(
+        the tenant's hot sessions switch together)."""
+        self._exec.sync_slot_readouts(
             [(sid, st.slot) for sid, st in self.sessions.items()
              if self._readout_key(sid) == key])
 
@@ -1060,19 +517,19 @@ class ReservoirEngine:
         if w.shape != want:
             raise ValueError(f"pool readout for {key!r} must be {want}, "
                              f"got {tuple(w.shape)}")
-        self._activate_pool()
+        self._exec.activate_pool()
         self._readouts[key] = w
         self._sync_key(key)
 
     def readout_for(self, sid):
         """The effective (F, D_out) readout currently serving ``sid`` —
         its tenant/session pool entry when one exists, else the base."""
-        w = self._readouts.get(self._readout_key(sid))
+        w = self._learn_plane.pool_entry(sid)
         if w is not None:
             return w
         if not self._batched:
             return self.w_out
-        return self._base_readout(self.sessions[sid].slot)
+        return self._exec._base_readout(self.sessions[sid].slot)
 
     def set_ensemble_weights(self, weights) -> None:
         """Per-reservoir voting weights for ``ensemble='weighted'`` —
@@ -1083,85 +540,25 @@ class ReservoirEngine:
                 f"set_ensemble_weights needs ensemble='weighted' "
                 f"(engine has ensemble={self.ensemble!r})")
         if weights is None:
-            self._ens_weights = None
+            self._exec._ens_weights = None
             return
         w = jnp.asarray(weights, self._dtype).reshape(self.max_slots)
-        self._ens_weights = w
+        self._exec._ens_weights = w
 
     # ------------------------------------------------------------- lifecycle
-    def _coerce_state(self, h0, y0):
-        """Validate/coerce a parked (state, feedback) pair at the call site —
-        nothing mis-shaped may enter the admission queue."""
-        if h0 is not None:
-            h0 = np.asarray(h0, self._dtype).reshape(self.cfg.n)
-        if y0 is not None:
-            y0 = np.asarray(y0, self._dtype).reshape(self.cfg.d_out)
-        return h0, y0
-
     def submit(self, sid: Hashable, u=None, y_teacher=None, *, h0=None,
                y0=None, slot: Optional[int] = None,
-               tenant: Optional[Hashable] = None) -> Optional[int]:
+               tenant: Optional[Hashable] = None,
+               decode_slo_us: Optional[float] = None) -> Optional[int]:
         """Queue ``sid`` for wave-batched admission — the ONE admission
-        surface (the PR-6 ``add_session``/``prefill`` shims are gone).
-
-        The request accumulates in the scheduler; :meth:`flush` drains the
-        queue in same-bucket waves, each running ONE batched prefill.
-
-        ``u=None`` queues an *admission-only* request (bucket 0): the
-        session lands with its parked ``h0``/``y0`` (zeros when omitted) on
-        the next flush, or back-fills the slot a :meth:`release` frees.
-
-        ``slot=``: pin an admission-only placement to a specific slot,
-        immediately (never queues; raises if the slot is taken or ``u`` is
-        given — a pinned prompt would bypass wave batching).  Returns the
-        slot index.  A param-batched engine *requires* the pin when
-        re-admitting a parked state: slot ``i`` IS reservoir ``i``, so the
-        state must land under the weights that produced it.
-
-        ``tenant=``: readout-pool key — sessions sharing a tenant serve
-        (and, with ``learn=True``, refit) ONE pooled readout; without it a
-        learning session refits a private per-sid readout."""
-        if (sid in self.sessions or self.scheduler.has(sid)
-                or (self.store is not None and sid in self.store)):
-            raise KeyError(f"session {sid!r} already admitted")
-        if slot is not None:
-            if u is not None:
-                raise ValueError(
-                    "slot-pinned submit is admission-only: submit the "
-                    "prompt without slot= (wave admission assigns slots) "
-                    "or decode the pinned session open-loop")
-            if not 0 <= slot < self.max_slots:
-                raise ValueError(f"slot {slot} out of range "
-                                 f"[0, {self.max_slots})")
-            if self._slots[slot] is not None:
-                raise ValueError(
-                    f"slot {slot} is occupied by {self._slots[slot]!r} "
-                    f"(pinned admission never queues)")
-            h0, y0 = self._coerce_state(h0, y0)
-            out = self._place(sid, slot, h0, y0)
-            self._note_admission(sid, tenant)
-            return out
-        if self._batched and h0 is not None:
-            raise ValueError(
-                "param-batched engine: a parked state belongs to the "
-                "reservoir (= slot) it was released from — re-admit with "
-                "submit(sid, h0=..., slot=<original slot>) so it cannot "
-                "land under different weights")
-        # Everything is validated/coerced HERE, before the request enters the
-        # queue: flush() commits host bookkeeping (slot table, sessions) as
-        # it builds each wave, so a mis-shaped array surfacing there would
-        # leave the engine permanently corrupted (admitted sessions with
-        # empty states and a lost prompt).
-        if u is not None:
-            u, y_teacher = self._validate_prompt(u, y_teacher)
-        elif y_teacher is not None:
-            raise ValueError("y_teacher without a prompt — admission-only "
-                             "submits carry state, not teacher tokens")
-        h0, y0 = self._coerce_state(h0, y0)
-        self.scheduler.submit(PrefillRequest(sid=sid, u=u,
-                                             y_teacher=y_teacher,
-                                             h0=h0, y0=y0, tenant=tenant))
-        return None
+        surface (:meth:`flush` drains the queue).  ``slot=`` pins a
+        placement, ``tenant=`` keys the readout pool, ``decode_slo_us=``
+        overrides the engine-wide decode deadline for this session.  At
+        ``max_queued`` capacity raises :class:`AdmissionFull` (the front
+        end's backpressure).  See ``serve.ingest.IngestPlane.submit``."""
+        return self._ingest.submit(sid, u, y_teacher, h0=h0, y0=y0,
+                                   slot=slot, tenant=tenant,
+                                   decode_slo_us=decode_slo_us)
 
     def flush(self, *, method: str = "auto", chunk: int = 128,
               want_outputs: bool = False,
@@ -1170,1035 +567,89 @@ class ReservoirEngine:
               decode_sids=None, refit: bool = False
               ) -> Dict[Hashable, object]:
         """Drain the admission queue, one batched prefill per same-bucket
-        wave.  Returns sid -> per-step outputs for the prompt sessions that
-        *completed* their prefill this flush (None entries unless
-        ``want_outputs=True``; chunked prompts yield the concatenation of
-        their chunk outputs when the last chunk lands).
-
-        Each wave is a ``(B_wave, T_bucket)`` call into
-        ``arena.prefill_wave`` — rows padded to the bucket length share one
-        compiled trace, and the padded tail steps are inert (the per-row
-        final state is gathered at the true length).  With ``chunk_max`` set
-        a long prompt drains as K sequential chunk rows resumed from the
-        slot's carried state, interleaved with other buckets' waves; chunk
-        *continuation* rows need no free slot, so they keep draining even
-        with the arena full.  ``max_waves`` bounds how many *prefill* waves
-        this call runs (None: until nothing is runnable) — serving loops use
-        it to interleave decode between waves; interleaved decode waves
-        never consume the quota, so ``flush(max_waves=1)`` always makes
-        prefill progress even under an unsatisfiable decode budget (pinned
-        by test).  Keep ``want_outputs`` consistent
-        across the flushes that drain one chunked prompt: chunks that ran
-        under ``want_outputs=False`` recorded no outputs to concatenate.
-
-        ``decode_interleave=True`` (needs ``decode_slo_us`` set and a
-        closed-loop-capable engine): the flush drains prefill *and* decode
-        as alternating waves.  The protected decoders are the sessions in
-        ``decode_sids`` (each must be ready; default: every session ready
-        when the flush began — pass an explicit subset when some ready
-        sessions are driven open-loop by the caller, or a free-run token
-        would be injected into their stream); whenever the predicted
-        prefill cost charged since their last decode wave would exceed
-        ``decode_slo_us``, the scheduler shrinks or defers the candidate
-        prefill wave and a ``decode_wave_tokens``-token closed-loop decode
-        wave runs instead (outputs buffered — :meth:`collect_decoded`).
-        Planning only reorders waves, so every output is bit-exact vs the
-        decode-blind schedule.  An SLO below even a single-row wave's
-        predicted cost degrades to strict prefill/decode alternation
-        (progress is never traded for an unsatisfiable budget).
-
-        **Paged engine** (``park_host_rows=``): a full arena no longer
-        queues fresh admissions — the flush demotes the least-recently-used
-        idle hot sessions to the session store in one page wave and admits
-        into the freed slots, so every queued session lands as long as the
-        *store* has room.  Demoted sessions keep their accounting and
-        buffered decode tokens; decoding them later promotes them back
-        transparently.  Paging moves state bit-exactly, so outputs match an
-        unpaged engine with enough slots (pinned by test).
-
-        ``refit=True`` (needs ``learn=True``): after the queue drains, every
-        *dirty* learning session (new teacher pairs since its last solve)
-        refits in ONE batched device wave (:meth:`refit`).  With decode
-        interleaving active the wave is priced first on the cost model's
-        ``c_refit(B)`` surface — a refit predicted to blow the decode
-        budget yields to a decode wave before running.
-        """
+        wave; returns sid -> per-step outputs for prompts *completed* this
+        flush.  ``decode_interleave=True`` (needs ``decode_slo_us`` —
+        engine-wide, or per-session deadlines covering an explicit
+        ``decode_sids`` set) alternates SLO-protected decode waves with
+        prefill: tighter (premium) deadlines decode first, and due sessions
+        with rows buffered via :meth:`queue_inputs` advance teacher-driven
+        instead of free-running.  Planning only reorders waves, so every
+        output is bit-exact vs the decode-blind schedule.  ``refit=True``
+        (needs ``learn=True``) batch-refits dirty sessions after the
+        drain.  Full contract: ``serve.exec_plane.ExecPlane.flush``."""
         if refit and not self._learn:
             raise ValueError("flush(refit=True) needs learn=True on the "
                              "engine — nothing accumulates (G, C) otherwise")
-        if not decode_interleave:
-            decode_sids = []
-        else:
-            if self.decode_slo_us is None:
-                raise ValueError(
-                    "decode_interleave=True needs decode_slo_us set on the "
-                    "engine — the latency budget that prices when a decode "
-                    "wave must preempt prefill")
-            if self.readout is None or self.cfg.d_in != self.cfg.d_out:
-                raise ValueError(
-                    "interleaved decode waves free-run (closed loop): the "
-                    "engine needs a trained readout and d_in == d_out")
-            if decode_sids is not None:
-                decode_sids = list(dict.fromkeys(decode_sids))
-                # Paged engine: a parked decoder is still a valid protected
-                # decoder — promote it now so the ready check below sees it.
-                self._ensure_hot(decode_sids)
-            ready = self.ready_sessions
-            if decode_sids is None:
-                decode_sids = list(ready)
-            else:
-                missing = [s for s in decode_sids if s not in set(ready)]
-                if missing:
-                    raise KeyError(
-                        f"decode_sids must be ready sessions; not ready: "
-                        f"{missing!r}")
-            if self._decode_k_auto and self.cost_model is not None:
-                # K-adaptive wave sizing: resolve decode_wave_tokens for
-                # this flush from the fitted c_dec(B, K) surface — largest
-                # K whose marginal cost/token still improves, capped so the
-                # whole wave fits the decode SLO.
-                self.decode_wave_tokens = self.cost_model.best_decode_k(
-                    max(1, len(decode_sids)), slo_us=self.decode_slo_us)
-        results: Dict[Hashable, object] = {}
-        protect = frozenset(decode_sids)
-        waves_run = 0
-        just_decoded = False
-        while max_waves is None or waves_run < max_waves:
-            # Paged engine: capacity counts demotable hot sessions too — a
-            # full arena admits by parking its LRU idle sessions, so the
-            # queue drains as long as *sessions* fit, not slots.  The true
-            # free-slot count still goes to the scheduler so the budget fit
-            # can price the forced demote page wave (c_page of the
-            # overflow) against the same decode SLO.
-            capacity = self._capacity(protect)
-            free = self.free_slots if self.store is not None else None
-            if not self.scheduler.has_runnable(capacity):
-                break
-            budget = (self._decode_budget(len(decode_sids))
-                      if decode_sids else None)
-            wave = self.scheduler.next_wave(capacity, budget_us=budget,
-                                            free_slots=free)
-            if not wave:
-                if not just_decoded:
-                    # Runnable prefill exists but is over the decode budget:
-                    # a decode wave runs instead and resets the clock.  It
-                    # does NOT count toward max_waves — a partial drain's
-                    # wave quota is prefill progress, and spending it on
-                    # decode would livelock a flush(max_waves=1) loop under
-                    # an unsatisfiable SLO (pinned by test).
-                    self._decode_wave(decode_sids)
-                    just_decoded = True
-                    continue
-                # Fresh budget: waive the shrink-efficiency floor — a
-                # slow-but-SLO-compliant part-wave beats blowing the budget
-                # on the full one.
-                wave = self.scheduler.next_wave(
-                    capacity, budget_us=self._decode_budget(
-                        len(decode_sids)), shrink_floor=0.0,
-                    free_slots=free)
-                if not wave:
-                    # Truly unsatisfiable: not even one row fits the SLO;
-                    # run unbudgeted rather than spin decode-only forever.
-                    wave = self.scheduler.next_wave(capacity,
-                                                    free_slots=free)
-                    if not wave:
-                        break
-            just_decoded = False
-            waves_run += 1
-            self._make_room(wave, protect)
-            self._run_wave(wave, capacity, results, method=method,
-                           chunk=chunk, want_outputs=want_outputs)
-            if (self.pipeline_depth > 0 and not self._autotune
-                    and self.store is not None):
-                # Plan one wave ahead against *predicted* post-wave
-                # occupancy (pure host bookkeeping — the slot table is
-                # already updated at dispatch time, no device ground truth
-                # needed) and run the planned wave's page-out NOW: the
-                # demote gather reads untouched rows from the pre-wave
-                # arena value, so it overlaps the in-flight scan instead of
-                # draining the pipeline.  The next iteration's next_wave
-                # pops exactly this wave (peek is exact), and _make_room
-                # then finds the slots already free.
-                planned = self.scheduler.peek_wave(self._capacity(protect))
-                if planned:
-                    self._make_room(planned, protect)
-        if refit:
-            dirty = [s for s, ls in self._learn_state.items() if ls.dirty]
-            if dirty and decode_sids and self.cost_model is not None and (
-                    self.cost_model.predict_refit_us(len(dirty))
-                    > self._decode_budget(len(decode_sids))):
-                # The refit wave would blow the decode budget: decode first
-                # (fresh budget), then solve.
-                self._decode_wave(decode_sids)
-            self._refit_wave(dirty)
-        return results
+        return self._exec.flush(method=method, chunk=chunk,
+                                want_outputs=want_outputs,
+                                max_waves=max_waves,
+                                decode_interleave=decode_interleave,
+                                decode_sids=decode_sids, refit=refit)
 
-    def _decode_budget(self, n_decoders: int) -> float:
-        """Remaining decode latency budget in microseconds.  Consumed = the
-        larger of the planned prefill cost and the real wall time since the
-        last decode (host work — evictions, admissions, queue drains — and
-        mispredicted waves eat latency the cost model never sees); the
-        decode wave's own predicted cost is reserved up front, because the
-        inter-token gap the SLO bounds ends when the decode wave's tokens
-        *exist*, not when it starts."""
-        elapsed = max(self._decode_clock_us,
-                      (time.perf_counter() - self._last_decode_t) * 1e6)
-        # c_dec(B, K): one fused K-token wave, not K times a single step —
-        # the fused kernel amortizes the dispatch constant over K, which is
-        # exactly why multi-token decode waves are worth planning.
-        reserve = self.cost_model.predict_decode_us(n_decoders,
-                                                    self.decode_wave_tokens)
-        return self.decode_slo_us - elapsed - reserve
-
-    def _dispatch_decode(self, launch, sids, *, tokens: int,
-                         block: bool, interleave: bool = False,
-                         kind: str = "closed_loop", slots=None):
-        """Shared wrapper around every decode dispatch: optional wall timing
-        (always when ``block``, else only under autotune), decode-surface
-        observation (autotune only — there every prefill wave was itself
-        synced, so the wall time is decode alone; in pipelined serving a
-        block also drains queued prefill waves, and that drain time would
-        poison the fit), and the gap/counter/clock accounting.  ``launch``
-        performs the jitted call, stores the new arena, and returns the
-        output array to block on.  ``slots`` (pipelined, unblocked path):
-        the slot set the dispatch writes — known exactly (it is the decode
-        mask), so the dispatch is admitted into the in-flight window as a
-        tracked writer instead of invalidating the demote fast path's base
-        arena."""
-        timed = (block or self._autotune) and sids and tokens
-        arena_before = self.arena
-        t0 = time.perf_counter() if timed else None
-        out = launch()
-        us = None
-        if t0 is not None:
-            jax.block_until_ready(out)
-            # ``out`` is downstream of every queued prefill wave (they share
-            # the arena), so the whole in-flight window just materialized —
-            # retire it without paying another block per entry.
-            self._window_settled()
-            us = (time.perf_counter() - t0) * 1e6
-            if self._autotune:
-                # The whole K-token wave is ONE observation on the
-                # c_dec(B, K) surface — dividing by K would erase the very
-                # dispatch amortization the fused kernel buys.
-                self.cost_model.observe_decode(len(sids), us, k=tokens)
-        elif self.pipeline_depth > 0 and slots is not None:
-            pred = (self.cost_model.predict_decode_us(len(sids), tokens)
-                    if self.cost_model is not None and sids and tokens
-                    else 1.0)
-            self._inflight_admit(out, pred, set(slots), arena_before)
-        else:
-            # Unblocked decode dispatch mutating arena rows the in-flight
-            # bookkeeping didn't record — the demote fast path's base arena
-            # is no longer trustworthy.
-            self._pipeline_invalidate()
-        if sids and tokens:
-            self._note_decode(sids, us=us, tokens=tokens,
-                              interleave=interleave, kind=kind)
-        return out
-
-    def _decode_wave(self, sids: List) -> None:
-        """One interleaved decode wave: advance every protected decoder by
-        ``decode_wave_tokens`` free-running tokens, buffered for
-        :meth:`collect_decoded`.
-
-        The wave **always blocks** until its tokens exist: the decode SLO is
-        a *latency* contract, and on an async backend a dispatched-but-
-        unmaterialized token is still latency — blocking here is what makes
-        the inter-token gap statistics (and the clock reset) real wall
-        time, and it drains the queued prefill waves the tokens depend on.
-        """
-        mask = np.zeros((self.max_slots,), bool)
-        for sid in sids:
-            st = self.sessions[sid]
-            mask[st.slot] = True
-            st.tokens_decoded += self.decode_wave_tokens
-            st.last_use = self._tick()
-        self._stats["decode_tokens"] += self.decode_wave_tokens * len(sids)
-
-        def launch():
-            self.arena, ys = self._closed_jit(
-                self.params, self._wave_w(), self.arena, jnp.asarray(mask),
-                int(self.decode_wave_tokens), self._ens_weights)
-            return ys
-
-        ys = self._dispatch_decode(launch, sids,
-                                   tokens=self.decode_wave_tokens,
-                                   block=True, interleave=True,
-                                   kind="interleave")
-        self._note_freerun(sids, self.decode_wave_tokens)
-        for sid in sids:
-            self._decode_buf.setdefault(sid, []).append(
-                ys[:, self.sessions[sid].slot])
-
-    def clear_decode_gaps(self) -> None:
-        """Drop the recorded inter-token gap samples (``decode_gap_*`` in
-        :meth:`stats`).  Call after a warmup phase: first-dispatch gaps span
-        XLA compilation and would sit at the top of the percentile window
-        for the whole serving run otherwise."""
-        self._decode_gaps_us.clear()
-
-    def collect_decoded(self, sid: Optional[Hashable] = None) -> DecodeResult:
-        """Drain the decoded tokens every decode path buffered — single
-        :meth:`decode_step` rows, :meth:`decode_closed_loop` runs, and the
-        fused K-token waves that interleaved flushes dispatch all land in
-        the same per-session buffers.
-
-        Returns a :class:`DecodeResult`: ``tokens`` maps each drained sid to
-        its (n_tokens, D_out) array and ``waves`` carries the metadata of
-        the dispatches drained.  With ``sid`` the result is restricted to
-        that session (its array has length 0 when nothing is buffered).
-        Buffers clear on read; evicting a session drops its buffer, so
-        collect before evicting."""
-        if sid is not None:
-            chunks = self._decode_buf.pop(sid, [])
-            arr = (jnp.zeros((0, self.cfg.d_out), self._dtype)
-                   if not chunks else
-                   chunks[0] if len(chunks) == 1
-                   else jnp.concatenate(chunks, axis=0))
-            waves = []
-            for meta in list(self._decode_meta):
-                pending = meta["_pending"]
-                if sid in pending:
-                    waves.append({k: v for k, v in meta.items()
-                                  if k != "_pending"})
-                    pending.discard(sid)
-                    if not pending:
-                        self._decode_meta.remove(meta)
-            return DecodeResult(tokens={sid: arr}, waves=tuple(waves))
-        out = {s: (c[0] if len(c) == 1 else jnp.concatenate(c, axis=0))
-               for s, c in self._decode_buf.items()}
-        self._decode_buf.clear()
-        waves = tuple({k: v for k, v in meta.items() if k != "_pending"}
-                      for meta in self._decode_meta)
-        self._decode_meta.clear()
-        return DecodeResult(tokens=out, waves=waves)
-
-    def _note_decode(self, sids, *, us=None, tokens: int = 1,
-                     interleave: bool = False,
-                     kind: str = "closed_loop") -> None:
-        """Decode-side accounting shared by every decode path: wall-clock
-        inter-token gaps per session, decode wave counters, the per-dispatch
-        metadata :meth:`collect_decoded` reports, and the planning clock
-        reset (a decode just ran, so the prefill-cost-since-decode budget
-        restarts)."""
-        wall = time.perf_counter()
-        for sid in sids:
-            prev = self._last_decode_wall.get(sid)
-            if prev is not None:
-                self._decode_gaps_us.append((wall - prev) * 1e6)
-            self._last_decode_wall[sid] = wall
-        s = self._stats
-        s["decode_waves"] += 1
-        s["decode_rows"] += len(sids)
-        if interleave:
-            s["decode_interleave_waves"] += 1
-        if us is not None:
-            s["decode_us_sum"] += us
-            s["decode_timed_steps"] += tokens
-        fused = (kind != "step" and self.params.mode == "diag"
-                 and self.readout is not None)
-        self._decode_meta.append({"kind": kind, "rows": len(sids),
-                                  "tokens": int(tokens), "us": us,
-                                  "fused": fused, "_pending": set(sids)})
-        self._decode_clock_us = 0.0
-        self._last_decode_t = wall
-
-    # ----------------------------------------------------- learn-while-serve
-    def _note_admission(self, sid, tenant) -> None:
-        """Create the session's learn state at admission (lazy: an engine
-        with ``learn=False`` and no tenant key never allocates one)."""
-        if tenant is None and not self._learn:
-            return
-        ls = self._learn_state.setdefault(sid, _LearnState())
-        if tenant is not None:
-            ls.tenant = tenant
-        if ls.acc.pairs == 0 and not ls.acc.buf_h:
-            ls.acc.skip_left = self._refit_washout
-
-    def _note_freerun(self, sids, n: int) -> None:
-        """Free-running tokens break the teacher pairing: the next observe
-        of these sessions must not form a training pair (``steps_since_fb``
-        overshoots 1), and grown members — which do NOT free-run — fall out
-        of state sync and re-washout before accumulating again."""
-        if not self._learn_state:
-            return
-        for sid in sids:
-            ls = self._learn_state.get(sid)
-            if ls is None:
-                continue
-            ls.steps_since_fb += n
-            for mb in ls.members:
-                mb.steps_since_fb += n
-                mb.acc.skip_left = max(mb.acc.skip_left,
-                                       self._growth_washout)
-
-    def _acc_pair(self, acc: _GramAcc, h, fb, y_np, pred) -> bool:
-        """Buffer one (state, feedback, truth) training row — host copies,
-        taken HERE because the decode wave that produced them has already
-        materialized (``decode_step`` blocks on its output), so the copy is
-        a cheap D2H of one row; buffering the lazy device slices instead
-        turns the later fold into hundreds of tiny dispatches (measured
-        ~40ms/wave vs ~1ms).  Also keeps the pre-observe prediction for the
-        held-out drift EWMA.  Returns whether a training row was kept
-        (washout rows only feed drift)."""
-        if pred is not None:
-            acc.buf_pred.append((np.asarray(pred, self._dtype), y_np))
-        if acc.skip_left > 0:
-            acc.skip_left -= 1
-            return False
-        acc.buf_h.append(np.asarray(h, self._dtype))
-        acc.buf_fb.append(None if fb is None
-                          else np.asarray(fb, self._dtype))
-        acc.buf_y.append(y_np)
-        return True
-
-    def _fold_grouped(self, sids) -> None:
-        """Batch the session folds of one refit wave: sessions sharing the
-        engine params, one window length, and one prior-stats shape fold in
-        ONE vmapped :func:`_fold_rows_batch` dispatch — at the steady serve
-        cadence (every session observes every token, refits on one clock)
-        that is ALL of them, and the per-wave fold cost stops scaling with
-        the session count.  Stragglers (odd window lengths, first-ever
-        folds mixed with decayed ones) fall through to the per-session
-        :meth:`_fold_acc` untouched."""
-        lam = self._refit_decay
-        use_fb = self.cfg.use_feedback
-        groups: Dict[tuple, list] = {}
-        for sid in sids:
-            acc = self._learn_state[sid].acc
-            m = len(acc.buf_h)
-            if not m or (use_fb and any(f is None for f in acc.buf_fb)):
-                continue
-            groups.setdefault((m, acc.gram is None), []).append(acc)
-        for (m, fresh), accs in groups.items():
-            if len(accs) < 2:
-                continue              # a lone fold gains nothing from vmap
-            h = jnp.asarray(np.stack([np.stack(a.buf_h) for a in accs]),
-                            self._dtype)
-            y = jnp.asarray(np.stack([np.stack(a.buf_y) for a in accs]),
-                            self._dtype)
-            fb = (jnp.asarray(np.stack([np.stack(a.buf_fb) for a in accs]),
-                              self._dtype) if use_fb else None)
-            g0 = c0 = None
-            if not fresh:
-                g0 = jnp.stack([a.gram for a in accs])
-                c0 = jnp.stack([a.cg for a in accs])
-            g, c = _fold_rows_batch(self.params, h, fb, y, g0, c0, lam)
-            for i, acc in enumerate(accs):
-                acc.gram, acc.cg = g[i], c[i]
-                acc.pairs += m
-                acc.buf_h.clear()
-                acc.buf_fb.clear()
-                acc.buf_y.clear()
-
-    def _fold_acc(self, acc: _GramAcc, params) -> None:
-        """Fold the buffered rows into the running ``(G, C)`` — λ-decayed:
-        row i of an m-row window scales by λ^((m-1-i)/2) before
-        ``gram_streaming`` so BOTH G and C carry λ^(m-1-i), and the
-        previously folded stats decay by λ^m (exactly the weights one
-        decayed offline fit over the whole stream would use).  Also folds
-        the buffered predictions into the drift EWMA.  Buffers are host
-        rows (see :meth:`_acc_pair`), so the fold is ONE H2D upload plus
-        the fused :func:`_fold_rows` kernel."""
-        m = len(acc.buf_h)
-        lam = self._refit_decay
-        if m:
-            h = jnp.asarray(np.stack(acc.buf_h), self._dtype)
-            y = jnp.asarray(np.stack(acc.buf_y), self._dtype)
-            fb = None
-            if self.cfg.use_feedback:
-                fb = jnp.asarray(np.stack(acc.buf_fb), self._dtype)
-            acc.gram, acc.cg = _fold_rows(params, h, fb, y,
-                                          acc.gram, acc.cg, lam)
-            acc.pairs += m
-            acc.buf_h.clear()
-            acc.buf_fb.clear()
-            acc.buf_y.clear()
-        if acc.buf_pred:
-            preds = np.stack([p for p, _ in acc.buf_pred])
-            ys = np.stack([t for _, t in acc.buf_pred])
-            errs = np.mean((preds - ys) ** 2, axis=1)
-            acc.buf_pred.clear()
-            b = self._drift_beta
-            d = acc.drift
-            for e in errs:
-                d = float(e) if d is None else b * d + (1.0 - b) * float(e)
-            acc.drift = d
-
-    def _session_params(self, sid):
-        """The param struct whose features/metric govern ``sid``'s refit —
-        the slot's slice on a param-batched engine (slot i IS reservoir i,
-        and batched engines never park, so the slot is always live)."""
-        if not self._batched:
-            return self.params
-        slot = self.sessions[sid].slot
-        return jax.tree_util.tree_map(lambda leaf: leaf[slot], self.params)
-
-    def _metric_of(self, params, cache_key: Hashable = None):
-        """Per-row refit metric: EET blockdiag(I, QᵀQ) for diag params
-        (paper Eq. 29 — refit trains directly in the eigenbasis), identity
-        for standard mode (plain ridge).  The metric is a constant of the
-        (frozen) params, so it caches under ``cache_key`` (slot index on a
-        param-batched engine, None otherwise) — rebuilding it cost more
-        than the refit solve itself."""
-        m = self._metric_cache.get(cache_key)
-        if m is None:
-            if params.mode == "diag":
-                m = esn_fn.eet_metric(params)
-            else:
-                m = jnp.eye(self.cfg.n_features, dtype=self._dtype)
-            self._metric_cache[cache_key] = m
-        return m
-
-    def _maybe_grow(self, sid, ls: _LearnState) -> None:
-        """DPG ensemble growth: when the session's held-out streaming RMSE
-        drifts past the threshold, sample a fresh reservoir member
-        on-demand (``dpg_params`` — O(N), no diagonalization ever runs) and
-        fold it into the session's ensemble.  The member starts at h=0 and
-        synchronizes off the shared teacher stream (echo state property);
-        it votes only after its first refit.  The drift EWMA resets so one
-        excursion cannot cascade straight to ``growth_max_members``."""
-        if (self._drift_threshold is None or self._batched
-                or ls.acc.drift is None
-                or len(ls.members) >= self._growth_max
-                or ls.acc.drift ** 0.5 <= self._drift_threshold):
-            return
-        self._growth_seed += 1
-        p = esn_fn.dpg_params(
-            dataclasses.replace(self.cfg, seed=self._growth_seed),
-            "noisy_golden", sigma=self._growth_sigma)
-        fb0 = (jnp.zeros((self.cfg.d_out,), self._dtype)
-               if ls.last_fb is None
-               else jnp.asarray(ls.last_fb, self._dtype))
-        mb = _Member(params=p, h=jnp.zeros((self.cfg.n,), self._dtype),
-                     y_fb=fb0)
-        mb.acc.skip_left = self._growth_washout
-        ls.members.append(mb)
-        ls.acc.drift = None
-        self._stats["growth_events"] += 1
-
-    def _step_members(self, ls: _LearnState, u_vec, y_primary):
-        """Advance the session's grown members one teacher-driven step and
-        return the validation-RMSE-weighted vote over primary + members
-        (weight 1/(mse+eps); members without a refit-trained readout or a
-        drift estimate yet abstain)."""
-        u = jnp.asarray(np.asarray(u_vec, self._dtype))[None]
-        w0 = (1.0 if ls.acc.drift is None
-              else 1.0 / (ls.acc.drift + 1e-6))
-        votes = [(np.asarray(y_primary, np.float64), w0)]
-        for mb in ls.members:
-            fb_col = None
-            if self.cfg.use_feedback:
-                fb_col = jnp.asarray(mb.y_fb, self._dtype)[None]
-            h = esn_fn.step_states(mb.params, mb.h[None],
-                                   esn_fn.drive(mb.params, u, fb_col))[0]
-            mb.h = h
-            mb.steps_since_fb += 1
-            if mb.w is None:
-                continue
-            x = esn_fn.assemble_features(mb.params, h[None], fb_col)
-            pred = arena_mod.apply_readout(mb.w, x)[0]
-            mb.pred_last = pred
-            mb.y_fb = pred
-            if mb.acc.drift is not None:
-                votes.append((np.asarray(pred, np.float64),
-                              1.0 / (mb.acc.drift + 1e-6)))
-        if len(votes) == 1:
-            return y_primary
-        total = sum(w for _, w in votes)
-        fused = sum(p * w for p, w in votes) / total
-        return fused.astype(np.asarray(y_primary).dtype)
-
-    def drift_rmse(self, sid) -> Optional[float]:
-        """The session's held-out streaming RMSE estimate (sqrt of the
-        prequential squared-error EWMA), folding any buffered predictions
-        first.  None until at least one post-washout teacher pair landed."""
-        ls = self._learn_state.get(sid)
-        if ls is None:
-            return None
-        self._fold_acc(ls.acc, self._session_params(sid))
-        return None if ls.acc.drift is None else ls.acc.drift ** 0.5
-
+    # ------------------------------------------------- learn-while-serving
     def refit(self, sid: Optional[Hashable] = None, *,
               alpha: Optional[float] = None) -> Dict[Hashable, object]:
         """Solve fresh readouts from the streaming ``(G, C)`` — one batched
-        device wave over every dirty session (or just ``sid``), vmapped
-        ``ridge_solve_general`` with the per-row EET metric.  The solved
-        readout lands in the session's tenant pool entry (hot slots
-        re-scatter immediately) and is returned per sid.  With λ=1 and a
-        washout equal to the prompt length, the solution matches offline
-        ``core.esn.fit`` on the concatenated teacher stream ≤1e-5 (pinned
-        by test — "the prompt is the washout").  Grown members refit in the
-        same wave; drift past ``drift_threshold`` triggers DPG growth."""
+        device wave over every dirty session (or just ``sid``).  The
+        solved readout lands in the session's tenant pool entry (hot slots
+        re-scatter immediately) and is returned per sid; matches offline
+        ``core.esn.fit`` on the concatenated teacher stream ≤1e-5 ("the
+        prompt is the washout", pinned by test)."""
         if not self._learn:
             raise ValueError("refit needs learn=True on the engine — "
                              "nothing accumulates (G, C) otherwise")
         if sid is None:
-            sids = [s for s, ls in self._learn_state.items() if ls.dirty]
+            sids = self._learn_plane.dirty_sids()
         else:
-            if sid not in self._learn_state:
+            if sid not in self._learn_plane.state:
                 raise KeyError(f"session {sid!r} has no learn state (was it "
                                f"admitted with learn=True on the engine?)")
             sids = [sid]
-        return self._refit_wave(sids, alpha=alpha)
+        return self._learn_plane.refit_wave(sids, alpha=alpha)
 
-    def _refit_wave(self, sids, *, alpha: Optional[float] = None
-                    ) -> Dict[Hashable, object]:
-        """The batched refit wave: fold every target's buffers, stack the
-        (G, C, metric) rows (sessions + their grown members), ONE vmapped
-        generalized ridge solve, scatter the results into the readout pool.
-        Timed end-to-end; under autotune the measurement feeds the cost
-        model's ``c_refit(B)`` surface, and the decode planning clock is
-        charged either way (a refit wave spends real latency the decode
-        budget must see)."""
-        if not sids:
-            return {}
-        a = self._refit_alpha if alpha is None else float(alpha)
-        t0 = time.perf_counter()
-        if not self._batched:
-            self._fold_grouped(sids)
-        rows = []                     # (sid, member-or-None, g, c, metric)
-        for sid in sids:
-            ls = self._learn_state[sid]
-            p = self._session_params(sid)
-            self._fold_acc(ls.acc, p)
-            if ls.acc.gram is not None:
-                rows.append((sid, None, ls.acc.gram, ls.acc.cg,
-                             self._metric_of(
-                                 p, self.sessions[sid].slot
-                                 if self._batched else None)))
-            for mb in ls.members:
-                self._fold_acc(mb.acc, mb.params)
-                if mb.acc.gram is not None:
-                    if mb.metric is None:
-                        mb.metric = (esn_fn.eet_metric(mb.params)
-                                     if mb.params.mode == "diag" else
-                                     jnp.eye(self.cfg.n_features,
-                                             dtype=self._dtype))
-                    rows.append((sid, mb, mb.acc.gram, mb.acc.cg,
-                                 mb.metric))
-            self._maybe_grow(sid, ls)
-            ls.dirty = False
-        if not rows:
-            return {}
-        w = self._refit_jit(jnp.stack([r[2] for r in rows]),
-                            jnp.stack([r[3] for r in rows]),
-                            jnp.stack([r[4] for r in rows]), a)
-        jax.block_until_ready(w)
-        us = (time.perf_counter() - t0) * 1e6
-        s = self._stats
-        s["refit_waves"] += 1
-        s["refit_rows"] += len(rows)
-        s["refit_us_sum"] += us
-        if self._autotune and self.cost_model is not None:
-            self.cost_model.observe_refit(len(rows), us)
-        self._decode_clock_us += us
-        out: Dict[Hashable, object] = {}
-        touched = set()
-        for (sid, mb, *_), wi in zip(rows, w):
-            if mb is None:
-                self._activate_pool()
-                key = self._readout_key(sid)
-                self._readouts[key] = wi
-                touched.add(key)
-                out[sid] = wi
-            else:
-                mb.w = wi
-        if touched:
-            # one scatter for every hot session serving ANY refit key this
-            # wave — per-key _sync_key calls would each pay a dispatch
-            self._sync_slot_readouts(
-                [(sid, st.slot) for sid, st in self.sessions.items()
-                 if self._readout_key(sid) in touched])
-        return out
-
-    def _run_wave(self, wave: List[WaveItem], capacity: int,
-                  results: Dict[Hashable, object], *, method: str,
-                  chunk: int, want_outputs: bool) -> None:
-        # One batched placement for the whole wave's admissions (per-slot
-        # .at[] sets are device dispatches; at wave sizes they'd dwarf the
-        # scan).  Continuation rows already own their slot.
-        arena_before = self.arena
-        touched: set = set()
-        fresh = [it for it in wave if it.first]
-        if fresh:
-            h0s = np.zeros((len(fresh), self.cfg.n), self._dtype)
-            y0s = np.zeros((len(fresh), self.cfg.d_out), self._dtype)
-            slots = []
-            for i, it in enumerate(fresh):
-                slot = self._slots.index(None)
-                self._slots[slot] = it.sid
-                self.sessions[it.sid] = SessionStats(
-                    slot=slot, prefill_pending=not it.last,
-                    last_use=self._tick())
-                if it.req.h0 is not None:
-                    h0s[i] = np.asarray(it.req.h0)
-                if it.req.y0 is not None:
-                    y0s[i] = np.asarray(it.req.y0)
-                slots.append(slot)
-                self._note_admission(it.sid, it.req.tenant)
-            touched.update(slots)
-            self.arena = self._place_jit(self.arena, jnp.asarray(slots),
-                                         jnp.asarray(h0s), jnp.asarray(y0s))
-            # Freshly placed slots must serve their tenant's pooled readout
-            # from the first wave, not the engine-wide base.
-            self._sync_slot_readouts(
-                [(it.sid, s) for it, s in zip(fresh, slots)])
-        prompts = [it for it in wave if it.req.u is not None]
-        if not prompts:
-            self._record_wave(0, len(wave), len(fresh), capacity, 0, None)
-            if fresh and self.pipeline_depth > 0 and not self._autotune:
-                self._inflight_admit(self.arena.states, 1.0, touched,
-                                     arena_before)
-            return                  # admission-only wave (bucket 0)
-        # Max over the rows, not prompts[0]: a padded-up remainder chunk
-        # (scheduler mixed-kind waves) rides a wave whose bucket is set by
-        # its longest row; its own padded tail steps are inert.
-        t_bucket = max(bucket_length(it.length,
-                                     bucket_min=self.scheduler.bucket_min)
-                       for it in prompts)
-        bw = len(prompts)
-        u_pad = np.zeros((bw, t_bucket, self.cfg.d_in), self._dtype)
-        lengths = np.zeros((bw,), np.int32)
-        yt_pad = (np.zeros((bw, t_bucket, self.cfg.d_out), self._dtype)
-                  if self.cfg.use_feedback else None)
-        for i, it in enumerate(prompts):
-            t = it.length
-            u_pad[i, :t] = it.req.u[it.start:it.stop]
-            lengths[i] = t
-            if yt_pad is not None:
-                yt_pad[i, :t] = it.req.y_teacher[it.start:it.stop]
-        slot_list = [self.sessions[it.sid].slot for it in prompts]
-        touched.update(slot_list)
-        slots = jnp.asarray(slot_list)
-        wave_method = method
-        if wave_method == "auto" and self.params.mode == "diag":
-            wave_method = dispatch.resolve_method(t_bucket, chunk=chunk)
-        t0 = None
-        if self._autotune:
-            # Settle predecessors BEFORE starting the clock: with a non-empty
-            # in-flight window, block_until_ready on this wave would also pay
-            # for every queued predecessor and the timed c(B,T) record would
-            # be inflated by work that isn't this wave's.
-            self._drain_inflight()
-            t0 = time.perf_counter()
-        self.arena, out = self._wave_jit(
-            self.params, self._wave_w(), self.arena, slots,
-            jnp.asarray(u_pad), jnp.asarray(lengths),
-            None if yt_pad is None else jnp.asarray(yt_pad),
-            method=wave_method, chunk=chunk, want_outputs=want_outputs)
-        us = None
-        if t0 is not None:
-            # Timing a wave means waiting for it — autotune trades a host
-            # sync per wave for a cost model that tracks this machine.
-            jax.block_until_ready(self.arena.states)
-            us = (time.perf_counter() - t0) * 1e6
-            self.cost_model.observe(bw, t_bucket, us)
-        elif self.pipeline_depth == 0:
-            # Strict synchronous baseline: materialize every wave before the
-            # host plans the next one.  This is the reference the pipelined
-            # path must stay bit-exact against.
-            tb0 = time.perf_counter()
-            jax.block_until_ready(self.arena.states)
-            self._stats["host_block_us"] += (time.perf_counter() - tb0) * 1e6
-        else:
-            pred = (self.cost_model.predict_us(bw, t_bucket)
-                    if self.cost_model is not None else 1.0)
-            self._inflight_admit(self.arena.states, pred, touched,
-                                 arena_before)
-        tokens = int(lengths.sum())
-        self._record_wave(t_bucket, len(wave), len(fresh), capacity,
-                          tokens, us)
-        # Charge the decode clock with what this wave cost (measured when
-        # autotune timed it, else the model's prediction): the budget decode
-        # -aware flushes plan against is "prefill cost since the last decode
-        # wave", whether or not this particular flush is interleaving.
-        if us is not None:
-            self._decode_clock_us += us
-        elif self.cost_model is not None:
-            self._decode_clock_us += self.cost_model.predict_us(bw, t_bucket)
-        for i, it in enumerate(prompts):
-            st = self.sessions[it.sid]
-            st.tokens_prefilled += int(lengths[i])
-            st.last_use = self._tick()
-            if want_outputs:
-                self._chunk_outs.setdefault(it.sid, []).append(
-                    out[i, :int(lengths[i])])
-            if it.last:
-                st.prefill_pending = False
-                ls = self._learn_state.get(it.sid)
-                if ls is not None:
-                    # The prompt is the washout: the final teacher row
-                    # re-arms the (state, feedback, truth) pairing so the
-                    # very next decode_step + observe forms a training row —
-                    # exactly the row offline fit(washout=T_prompt) keeps
-                    # first.  Grown members do not ride prefill waves; they
-                    # resynchronize off the teacher stream (echo state
-                    # property) and re-washout before accumulating.
-                    ls.steps_since_fb = 0
-                    if self.cfg.use_feedback and it.req.y_teacher is not None:
-                        ls.last_fb = np.asarray(
-                            it.req.y_teacher[it.stop - 1], self._dtype)
-                    for mb in ls.members:
-                        mb.steps_since_fb = 0
-                        mb.acc.skip_left = max(mb.acc.skip_left,
-                                               self._growth_washout)
-                        if ls.last_fb is not None:
-                            mb.y_fb = jnp.asarray(ls.last_fb, self._dtype)
-                # Pop unconditionally: a want_outputs=False final chunk must
-                # still clear chunks recorded by earlier want_outputs=True
-                # flushes, or a later session reusing the sid would
-                # concatenate this session's stale outputs into its own.
-                chunks = self._chunk_outs.pop(it.sid, None)
-                if not want_outputs:
-                    results[it.sid] = None
-                else:
-                    results[it.sid] = (chunks[0] if len(chunks) == 1
-                                       else jnp.concatenate(chunks, axis=0))
-
-    def _record_wave(self, t_bucket: int, rows: int, fresh: int,
-                     capacity: int, tokens: int,
-                     us: Optional[float]) -> None:
-        s = self._stats
-        s["waves"] += 1
-        s["rows"] += rows
-        s["fresh_rows"] += fresh
-        s["prefill_tokens"] += tokens
-        s["occupancy_sum"] += rows / self.max_slots
-        by = s["by_bucket"].setdefault(t_bucket,
-                                       {"waves": 0, "rows": 0, "tokens": 0,
-                                        "us_sum": 0.0, "timed_waves": 0})
-        by["waves"] += 1
-        by["rows"] += rows
-        by["tokens"] += tokens
-        if us is not None:
-            s["wave_us_sum"] += us
-            s["timed_waves"] += 1
-            by["us_sum"] += us
-            by["timed_waves"] += 1
-        self._wave_log.append({"t_bucket": t_bucket, "rows": rows,
-                               "fresh": fresh, "capacity": capacity,
-                               "tokens": tokens, "us": us})
-
-    def stats(self) -> "EngineStats":
-        """Engine-lifetime serving counters (cumulative across ``reset``),
-        returned as a typed frozen :class:`EngineStats` dataclass — use
-        attribute access (``stats().waves_total``); ``.to_dict()`` yields
-        the historical plain dict, and dict-style key access still works
-        for one release with a :class:`DeprecationWarning`.
-
-        Wave occupancy (``rows / max_slots`` per wave) and per-bucket latency
-        feed the cost model and the ``launch/serve.py --autotune`` report;
-        ``wave_log`` holds the last 256 waves for offline inspection, and
-        ``wave_costs`` is exactly the record list
-        ``WaveCostModel.seed`` / ``from_artifact`` consume — exported from
-        ``cost_model.records()`` (the model's full retained observation set,
-        prefill and decode), NOT from the bounded wave log: a long-serving
-        engine's ring forgets everything past 256 waves, and persisting a
-        truncated set would silently degrade the reloaded model.
-
-        Decode counters: ``decode_waves_total`` counts decode dispatches
-        (interleaved waves + user-called steps/closed loops;
-        ``decode_interleave_waves`` is the interleaved subset),
-        ``decode_us_per_step`` the mean timed dispatch cost per token, and
-        ``decode_gap_p50_us`` / ``decode_gap_p95_us`` the measured
-        wall-clock inter-token gap percentiles over the last 4096 gaps —
-        the serving-latency numbers ``--decode-slo`` bounds.
-
-        Page counters (paged engines): ``page_waves_total`` /
-        ``page_rows_total`` split into ``promote_waves`` / ``demote_waves``,
-        ``promote_us_p95`` the measured parked->decodable restore latency
-        over the last 4096 promote waves (every promote blocks until the
-        states are resident — an unmaterialized state is still latency),
-        and ``store`` the tier breakdown (host/cold rows, pool occupancy,
-        epoch).
-
-        Refit counters (learn-while-serving engines):
-        ``refit_waves_total`` / ``refit_rows_total`` count batched refit
-        waves and the (session + grown-member) rows they solved,
-        ``refit_us_sum`` their cumulative wall time, ``sessions_dirty`` how
-        many sessions currently hold unconsumed streaming ``(G, C)`` stats,
-        and ``growth_events`` how many DPG ensemble members drift growth
-        has sampled.
-
-        Pipeline counters: ``pipeline_inflight`` / ``pipeline_inflight_peak``
-        the current / high-water in-flight wave window,
-        ``host_block_us`` the cumulative wall time the host spent inside
-        ``block_until_ready`` (the overlap-efficiency numerator:
-        1 − host_block/wall), and ``overlap_demotes`` how many demote waves
-        gathered from the pre-wave base arena instead of waiting for the
-        in-flight window."""
-        s = self._stats
-        waves = s["waves"]
-        gaps = (np.asarray(self._decode_gaps_us, float)
-                if self._decode_gaps_us else None)
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> EngineStats:
+        """Engine-lifetime serving counters (cumulative across ``reset``)
+        as a typed frozen :class:`EngineStats` — attribute access or
+        ``.to_dict()``; dict-style key access is REMOVED (see the README
+        migration table).  Counters derive from the same event stream a
+        ``tracker=`` sink records, merged with per-plane occupancy
+        snapshots; field docs live on
+        :class:`~repro.serve.telemetry.EngineStats`."""
+        d = self._agg.snapshot()
         if self.cost_model is not None:
             wave_costs = self.cost_model.records()
         else:           # no model: best effort from the (bounded) wave log
             wave_costs = [{"b": w["rows"], "t_bucket": w["t_bucket"],
                            "us": w["us"]}
-                          for w in self._wave_log
+                          for w in d["wave_log"]
                           if w["us"] is not None and w["rows"] > 0]
-        promote = (np.asarray(self._promote_us, float)
-                   if self._promote_us else None)
-        d = {
-            "sessions_active": len(self.sessions),
-            "sessions_ready": len(self.ready_sessions),
-            "sessions_queued": len(self.scheduler),
-            "sessions_parked": 0 if self.store is None else len(self.store),
-            "store": None if self.store is None else self.store.stats(),
-            "page_waves_total": s["page_waves"],
-            "page_rows_total": s["page_rows"],
-            "promote_waves": s["promote_waves"],
-            "demote_waves": s["demote_waves"],
-            "page_us_sum": s["page_us_sum"],
-            "promote_us_p95": (None if promote is None
-                               else float(np.percentile(promote, 95))),
-            "chunks_in_flight": sum(st.prefill_pending
-                                    for st in self.sessions.values()),
-            "waves_total": waves,
-            "rows_total": s["rows"],
-            "fresh_rows_total": s["fresh_rows"],
-            "prefill_tokens": s["prefill_tokens"],
-            "decode_tokens": s["decode_tokens"],
-            "occupancy_mean": (s["occupancy_sum"] / waves) if waves else None,
-            "wave_us_mean": (s["wave_us_sum"] / s["timed_waves"]
-                             if s["timed_waves"] else None),
-            "decode_waves_total": s["decode_waves"],
-            "decode_rows_total": s["decode_rows"],
-            "decode_interleave_waves": s["decode_interleave_waves"],
-            "decode_us_per_step": (s["decode_us_sum"]
-                                   / s["decode_timed_steps"]
-                                   if s["decode_timed_steps"] else None),
-            "decode_gaps": 0 if gaps is None else int(gaps.size),
-            "decode_gap_p50_us": (None if gaps is None
-                                  else float(np.percentile(gaps, 50))),
-            "decode_gap_p95_us": (None if gaps is None
-                                  else float(np.percentile(gaps, 95))),
-            "pipeline_depth": self.pipeline_depth,
-            "pipeline_inflight": len(self._inflight),
-            "pipeline_inflight_peak": s["inflight_peak"],
-            "host_block_us": s["host_block_us"],
-            "overlap_demotes": s["overlap_demotes"],
-            "refit_waves_total": s["refit_waves"],
-            "refit_rows_total": s["refit_rows"],
-            "refit_us_sum": s["refit_us_sum"],
-            "sessions_dirty": sum(ls.dirty
-                                  for ls in self._learn_state.values()),
-            "growth_events": s["growth_events"],
-            "by_bucket": {t: dict(v) for t, v in s["by_bucket"].items()},
-            "wave_log": list(self._wave_log),
-            "wave_costs": wave_costs,
-        }
+        d.update(
+            sessions_active=len(self.sessions),
+            sessions_ready=len(self.ready_sessions),
+            sessions_queued=len(self.scheduler),
+            sessions_parked=(0 if self.store is None else len(self.store)),
+            store=None if self.store is None else self.store.stats(),
+            chunks_in_flight=sum(st.prefill_pending
+                                 for st in self.sessions.values()),
+            pipeline_depth=self.pipeline_depth,
+            pipeline_inflight=len(self._exec._inflight),
+            sessions_dirty=sum(ls.dirty
+                               for ls in self._learn_plane.state.values()),
+            wave_costs=wave_costs,
+        )
         return EngineStats(**d)
 
-    def _place(self, sid, slot: int, h0, y0) -> int:
-        n = self.cfg.n
-        h0 = jnp.zeros((n,), self._dtype) if h0 is None else jnp.asarray(h0)
-        y0 = (jnp.zeros((self.cfg.d_out,), self._dtype) if y0 is None
-              else jnp.asarray(y0))
-        self.arena = arena_mod.place(self.arena, slot,
-                                     h0.astype(self._dtype),
-                                     y0.astype(self._dtype))
-        self._pipeline_taint([slot])
-        self._slots[slot] = sid
-        self.sessions[sid] = SessionStats(slot=slot)
-        self._sync_slot_readouts([(sid, slot)])
-        return slot
-
+    # ------------------------------------------------------------ lifecycle
     def release(self, sid: Hashable, *, drop: bool = False):
-        """Hand ``sid``'s state back to the caller and forget the session —
-        the ONE session-release surface (internal park/demote paths move
-        state between tiers but never forget a session; this does).
-        Returns an :class:`EvictResult` — unpacks as the historical
-        ``(state, y_prev)`` 2-tuple for re-admission via ``h0=``/``y0=``,
-        and carries ``.decoded``: the :class:`DecodeResult` of any buffered
-        tokens the caller had not yet collected (they used to be dropped
-        silently — token loss; now they leave with the session).
-
-        ``drop=True`` discards the state instead of returning it
-        (``EvictResult(None, None, decoded)``) — for disconnects, where
-        gathering a parked session's host/cold rows just to throw them away
-        is pure waste.  Buffered decoded tokens are still drained and
-        returned either way.
-
-        On a **paged engine** sessions no longer *need* releasing to free
-        capacity (a full arena parks its LRU idle sessions automatically),
-        so ``release`` is for callers that want the state *out* of the
-        engine — a parked sid is fetched straight from the store tier it
-        lives in, a hot sid from its slot.
-
-        The oldest queued *admission-only* request (``submit(sid, h0=...)``
-        overflow) is admitted into the freed slot; queued *prompt* requests
-        stay put until the next :meth:`flush` so their prefill runs
-        wave-batched, not one-by-one on each release.
-
-        Releasing a sid that is still *queued* cancels it instead (returns
-        its queued ``(h0, y0)``) — clients that disconnect before admission
-        must not leak into slots.  Releasing a **chunk-in-flight** session
-        (slot held, chunk waves still queued) cancels the queued remainder
-        and returns the *partial carry* — the slot state after the chunks
-        that already ran; without the cancel the orphaned chunks would
-        later run on a freed (possibly reassigned) slot.
-
-        For a hot session the returned arrays are lazy device slices (no
-        host sync): callers that release only to free the slot pay nothing;
-        callers that park the session convert to host storage on their own
-        schedule.  Parked sessions return host arrays (they already live
-        there).  Any streaming learn state (Gram stats, drift EWMA, grown
-        ensemble members) leaves with the session; the tenant's pooled
-        readout stays — other sessions under the same key keep serving
-        it."""
-        if self.store is not None and sid in self.store:
-            decoded = self.collect_decoded(sid)
-            self._last_decode_wall.pop(sid, None)
-            self._learn_state.pop(sid, None)
-            states, ys, _ = self.store.fetch_many([sid])
-            if drop:
-                return EvictResult(None, None, decoded)
-            return EvictResult(states[0], ys[0], decoded)
-        if sid not in self.sessions:
-            try:
-                req = self.scheduler.cancel(sid)
-            except KeyError:
-                raise KeyError(
-                    f"session {sid!r} is neither active nor queued") from None
-            self._learn_state.pop(sid, None)
-            decoded = self.collect_decoded(sid)
-            if drop:
-                return EvictResult(None, None, decoded)
-            return EvictResult(req.h0, req.y0, decoded)
-        # Drain the un-collected tokens BEFORE the session bookkeeping goes
-        # away: collect_decoded also settles the per-dispatch metadata this
-        # sid is still pending in.
-        decoded = self.collect_decoded(sid)
-        st = self.sessions.pop(sid)
-        if st.prefill_pending:
-            # prefill_pending <=> the chunk remainder is still queued; the
-            # scheduler returns it with its progress cursor (see
-            # WaveScheduler.cancel) and the arena slot holds the carry.
-            self.scheduler.cancel(sid)
-        self._chunk_outs.pop(sid, None)
-        self._last_decode_wall.pop(sid, None)
-        self._learn_state.pop(sid, None)
-        if drop:
-            state = y = None
-        else:
-            state = self.arena.states[st.slot]
-            y = self.arena.y_prev[st.slot]
-        self._slots[st.slot] = None
-        self.arena = arena_mod.release(self.arena, st.slot)
-        # The freed slot may be re-placed outside wave bookkeeping — its
-        # base row can no longer vouch for it, but every other row is
-        # untouched: taint the one slot instead of dropping the base.
-        self._pipeline_taint([st.slot])
-        for req in self.scheduler:
-            if req.u is None:
-                self.scheduler.cancel(req.sid)
-                self._place(req.sid, st.slot, req.h0, req.y0)
-                break
-        return EvictResult(state, y, decoded)
+        """Hand ``sid``'s state back and forget the session — the ONE
+        release surface.  Returns an :class:`EvictResult` (unpacks as the
+        historical ``(state, y_prev)`` 2-tuple; ``.decoded`` carries any
+        uncollected tokens).  ``drop=True`` discards the state.  Learn
+        state, the per-request deadline, and queued open-loop inputs leave
+        with the session; the tenant's pooled readout stays.  Full
+        contract: ``serve.exec_plane.ExecPlane.release``."""
+        return self._exec.release(sid, drop=drop)
 
     def evict(self, sid: Hashable):
         """Deprecated alias for :meth:`release` (kept one release for
@@ -2209,329 +660,32 @@ class ReservoirEngine:
         """Drop all sessions (active + queued) and zero the state arena.
         Keeps the compiled step functions, the learned cost model, and the
         cumulative :meth:`stats` counters — cheap way to reuse an engine."""
-        self._drain_inflight()
-        self._pipeline_invalidate()
-        self.arena = self._fresh_arena()
-        self._slots = [None] * self.max_slots
-        self.sessions.clear()
-        if self.store is not None:
-            self.store.clear()
-        self._use_clock = 0
-        self._promote_us.clear()
-        self._chunk_outs.clear()
-        self._learn_state.clear()
-        self._readouts.clear()
-        self._slot_w = None
-        self._decode_buf.clear()
-        self._decode_meta.clear()
-        self._last_decode_wall.clear()
-        self._decode_clock_us = 0.0
-        self._last_decode_t = time.perf_counter()
-        self.scheduler = WaveScheduler(bucket_min=self.scheduler.bucket_min,
-                                       max_wave=self.scheduler.max_wave,
-                                       chunk_max=self.scheduler.chunk_max,
-                                       cost_model=self.scheduler.cost_model)
+        self._exec.reset()
+        self._learn_plane.clear()
+        self._ingest.clear()
+        self._agg.promote_us.clear()
+        old = self.scheduler
+        self.scheduler = WaveScheduler(bucket_min=old.bucket_min,
+                                       max_wave=old.max_wave,
+                                       chunk_max=old.chunk_max,
+                                       cost_model=old.cost_model)
 
     # ----------------------------------------------------- snapshot/restore
     def snapshot(self, path: str) -> str:
-        """Serialize the whole serving process to ``path`` (a directory):
-        params + readout, arena, hot/parked/queued session tables (chunk
-        cursors included), un-collected decode buffers, and the cost-model
-        artifact — everything :meth:`restore` needs to resume mid-workload
-        bit-exactly.  Atomic (tmp-rename + ``_COMPLETE`` marker, the
-        ``train/checkpoint.py`` contract); cold-tier records are referenced,
-        not copied.  The enabler for drain -> upgrade -> resume rolling
-        restarts.  See ``serve.store.snapshot_engine``."""
+        """Serialize the whole serving process to ``path`` — everything
+        :meth:`restore` needs to resume mid-workload bit-exactly.  Atomic
+        (tmp-rename + ``_COMPLETE`` marker).  See
+        ``serve.store.snapshot_engine``."""
         return store_mod.snapshot_engine(self, path)
 
     @classmethod
     def restore(cls, path: str, *, mesh=None) -> "ReservoirEngine":
         """Rebuild an engine from :meth:`snapshot` output and resume
-        serving: the next :meth:`flush` / decode produces exactly what the
-        snapshotted process would have (pinned by test; assumes the same
-        ``jax_enable_x64`` setting).  ``mesh`` re-places the arena on a new
-        device mesh — elastic restore.  Cumulative :meth:`stats` counters
-        start fresh; the session store opens a new cold epoch so new
-        records never collide with ones the snapshot references."""
+        serving bit-exactly (pinned by test).  ``mesh`` re-places the
+        arena on a new device mesh.  Stats counters start fresh."""
         return store_mod.restore_engine(cls, path, mesh=mesh)
 
-    @property
-    def active_sessions(self):
-        """Sessions holding a slot — including chunk-in-flight ones (see
-        :attr:`ready_sessions` for the decodable subset)."""
-        return [s for s in self._slots if s is not None]
-
-    @property
-    def ready_sessions(self):
-        """Slot-holding sessions whose prompt has fully landed (no chunk
-        waves pending) — the set decode may touch."""
-        return [s for s in self._slots
-                if s is not None and not self.sessions[s].prefill_pending]
-
-    @property
-    def free_slots(self) -> int:
-        return self._slots.count(None)
-
-    def _active(self, sid: Hashable) -> SessionStats:
-        """Resolve an *admitted, decodable* session, with descriptive errors
-        for the natural submit-then-use flow (still queued / chunk waves
-        still in flight)."""
-        try:
-            st = self.sessions[sid]
-        except KeyError:
-            if self.scheduler.has(sid):
-                raise KeyError(
-                    f"session {sid!r} is queued, not yet admitted — flush() "
-                    f"(or wait for an eviction) before using it") from None
-            raise
-        if st.prefill_pending:
-            raise KeyError(
-                f"session {sid!r} still has prefill chunk waves in flight — "
-                f"flush() until its prompt completes before decoding")
-        return st
-
-    def state_of(self, sid: Hashable):
-        if self.store is not None and sid in self.store:
-            # Read-only peek: inspecting a parked session must not thrash
-            # the arena (no promotion).
-            return self.store.peek(sid)[0]
-        return np.asarray(self.arena.states[self._active(sid).slot])
-
-    # --------------------------------------------------------------- prefill
-    def _validate_prompt(self, u, y_teacher, xp=np):
-        """Shape/width checks for submit() prompts.
-
-        ``xp=np``: prompts land on host, where flush() pads them into wave
-        arrays anyway (validation only reads shape metadata, so a
-        device-resident prompt is not pulled to host eagerly)."""
-        u = xp.asarray(u, self._dtype)
-        if u.ndim != 2 or u.shape[-1] != self.cfg.d_in:
-            raise ValueError(
-                f"prompt must be (T, d_in={self.cfg.d_in}), got {u.shape}")
-        if u.shape[0] == 0:
-            raise ValueError("prefill needs at least one token (got T=0)")
-        if self.cfg.use_feedback:
-            if y_teacher is None:
-                raise ValueError("feedback model: prefill is teacher-forced, "
-                                 "pass y_teacher")
-            y_teacher = xp.asarray(y_teacher, self._dtype)
-            if y_teacher.shape[0] != u.shape[0]:
-                raise ValueError(
-                    f"y_teacher length {y_teacher.shape[0]} != prompt length "
-                    f"{u.shape[0]} (one teacher output per prompt token)")
-            if y_teacher.ndim != 2 or y_teacher.shape[1] != self.cfg.d_out:
-                raise ValueError(
-                    f"y_teacher must be (T, d_out={self.cfg.d_out}), got "
-                    f"{y_teacher.shape}")
-        elif y_teacher is not None:
-            raise ValueError(
-                "y_teacher passed to a non-feedback model (cfg.use_feedback "
-                "is False) — it would be silently ignored; drop it or build "
-                "the model with use_feedback=True")
-        return u, y_teacher
-
-    # ---------------------------------------------------------------- decode
-    def decode_step(self, inputs: Dict[Hashable, "np.ndarray"]):
-        """Advance every session in ``inputs`` by one token, batched.
-
-        ``inputs``: sid -> (D_in,) input vector.  Sessions not mentioned hold
-        their state.  Returns sid -> (D_out,) prediction (requires a trained
-        readout; without one the states advance and an empty dict returns).
-        With ``ensemble="mean"`` every queried sid maps to the SAME fused
-        prediction (the mean over the stepped reservoirs).
-        The prediction is stored as the session's feedback ``y_prev``; call
-        :meth:`observe` afterwards to teacher-force a ground-truth output —
-        the observed value replaces the prediction in the arena, so the next
-        step drives open-loop from ground truth.
-        Under ``autotune`` the dispatch is timed (host sync — the price of a
-        measurement) and feeds the cost model's decode surface.
-        """
-        # Parked sessions promote transparently (paged engine) before the
-        # resolve: decode on a parked sid is the promotion trigger.
-        self._ensure_hot(list(inputs))
-        # Resolve every sid and validate every vector before mutating
-        # anything: a bad input must not leave other sessions' stats
-        # half-updated.
-        stats = {sid: self._active(sid) for sid in inputs}
-        vecs = {sid: np.asarray(vec).reshape(self.cfg.d_in)
-                for sid, vec in inputs.items()}
-        u = np.zeros((self.max_slots, self.cfg.d_in), self._dtype)
-        mask = np.zeros((self.max_slots,), bool)
-        for sid, vec in vecs.items():
-            st = stats[sid]
-            u[st.slot] = vec
-            mask[st.slot] = True
-            st.tokens_decoded += 1
-            st.last_use = self._tick()
-        self._stats["decode_tokens"] += len(vecs)
-        if self._learn_state:
-            # One teacher-forcible step elapsed: the pairing counter the
-            # observe() accumulation keys on (a pair forms only when exactly
-            # one step separates consecutive teacher events).
-            for sid in vecs:
-                ls = self._learn_state.get(sid)
-                if ls is not None:
-                    ls.steps_since_fb += 1
-
-        def launch():
-            self.arena, y = self._decode_jit(
-                self.params, self._wave_w(), self.arena, jnp.asarray(u),
-                jnp.asarray(mask), self._ens_weights)
-            return y
-
-        y = self._dispatch_decode(launch, list(vecs), tokens=1, block=False,
-                                  kind="step",
-                                  slots=[stats[sid].slot for sid in vecs])
-        if self._learn_state:
-            # ONE batched D2H snapshot of the post-step arena for the
-            # observe() accumulation that typically follows — per-session
-            # row pulls there would cost two blocking transfers per sid per
-            # token (~20% serve overhead measured); keyed on the states
-            # array's identity so any other wave invalidates it.
-            self._acc_cache = (self.arena.states,
-                               np.asarray(self.arena.states, self._dtype),
-                               np.asarray(self.arena.y_prev, self._dtype))
-        if self.readout is None:
-            return {}
-        y = np.asarray(y)
-        out = {sid: y[self.sessions[sid].slot] for sid in inputs}
-        for sid in out:
-            # Sessions that grew DPG ensemble members return the validation-
-            # RMSE-weighted vote over primary + members (the members advance
-            # here, teacher-driven off the same input).
-            ls = self._learn_state.get(sid)
-            if ls is not None and ls.members:
-                out[sid] = self._step_members(ls, vecs[sid], out[sid])
-        for sid, row in out.items():
-            # Unified decode surface: single steps buffer as (1, D) rows so
-            # collect_decoded() drains every path the same way.
-            self._decode_buf.setdefault(sid, []).append(
-                jnp.asarray(row)[None])
-        return out
-
-    def observe(self, sid: Hashable, y_true):
-        """Teacher-force ``sid``: overwrite its stored output with the
-        ground-truth ``y_true`` (D_out,).  On a **feedback model** the next
-        :meth:`decode_step` then drives from the true output instead of the
-        model's own prediction — the open-loop serving correction; the next
-        prediction matches the dense teacher-forced reference (pinned by
-        regression test).  On a non-feedback model the stored output is
-        only read as the **closed-loop seed**, so observe retargets the
-        next :meth:`decode_closed_loop` free-run but leaves open-loop
-        ``decode_step`` predictions untouched (their features never see y).
-
-        The arena is rebuilt in place (``arena.force_output``); with
-        ``ensemble="mean"`` the correction lands in every *ready* slot —
-        the fused mean is what fed back into all of them, so a one-slot
-        write would leave B-1 reservoirs driving from the stale prediction
-        (chunk-in-flight slots are excluded: their ``y_prev`` carries the
-        teacher-forced chunk state, which the fused mean never touched).
-        Resolves the session first, so observing a queued / chunk-in-flight
-        sid raises instead of silently dropping the correction."""
-        self._ensure_hot([sid])        # a parked sid promotes transparently
-        st = self._active(sid)
-        st.last_use = self._tick()
-        y = jnp.asarray(y_true, self._dtype).reshape(self.cfg.d_out)
-        ls = self._learn_state.get(sid) if self._learn else None
-        if ls is not None:
-            # Streaming accumulation (learn=True): this observe closes a
-            # (state, feedback, truth) training row IF exactly one decode
-            # step separates it from the previous teacher event — the
-            # state/feedback the arena holds right now are then exactly the
-            # feature row the offline teacher-forced fit would build for
-            # this position ("the prompt is the washout" parity).  The
-            # pre-observe ``y_prev`` is the model's prediction for this very
-            # token: it feeds the held-out prequential drift EWMA before the
-            # ground truth overwrites it.  Buffers keep lazy device slices —
-            # the host sync happens at refit folding, never per token.
-            y_np = np.asarray(y, self._dtype)
-            if ls.steps_since_fb == 1 and (not self.cfg.use_feedback
-                                           or ls.last_fb is not None):
-                cache = self._acc_cache
-                if cache is not None and cache[0] is self.arena.states:
-                    # decode_step's batched snapshot: zero extra transfers
-                    # (and the y_prev row is the PRE-observe prediction even
-                    # when an earlier observe this step rewrote the arena).
-                    h_row, pred = cache[1][st.slot], cache[2][st.slot]
-                else:
-                    h_row = self.arena.states[st.slot]
-                    pred = self.arena.y_prev[st.slot]
-                if self._acc_pair(ls.acc, h_row, ls.last_fb, y_np, pred):
-                    ls.dirty = True
-                for mb in ls.members:
-                    if mb.steps_since_fb == 1:
-                        if self._acc_pair(
-                                mb.acc, mb.h, mb.y_fb, y_np,
-                                mb.pred_last if mb.w is not None else None):
-                            ls.dirty = True
-            for mb in ls.members:
-                # Teacher forcing resynchronizes every member's feedback
-                # channel regardless of pairing (echo state property pulls
-                # their states back onto the teacher trajectory).
-                mb.y_fb = y
-                mb.steps_since_fb = 0
-            ls.last_fb = y_np
-            ls.steps_since_fb = 0
-        # Teacher-forcing writes arena rows outside wave bookkeeping; the
-        # mean-ensemble branch rewrites every ready session's feedback row.
-        if self.ensemble == "mean":
-            self._pipeline_taint(self.sessions[s].slot
-                                 for s in self.ready_sessions)
-        else:
-            self._pipeline_taint([st.slot])
-        if self.ensemble == "mean":
-            slots = jnp.asarray([self.sessions[s].slot
-                                 for s in self.ready_sessions])
-            self.arena = dataclasses.replace(
-                self.arena,
-                y_prev=self.arena.y_prev.at[slots].set(y))
-            return
-        self.arena = arena_mod.force_output(self.arena, st.slot, y)
-
-    # ----------------------------------------------------------- closed loop
-    def decode_closed_loop(self, n_steps: int, sids=None):
-        """Free-running generation: feed each session's prediction back as its
-        next input (D_in == D_out).  Decodes all active sessions in lock-step
-        (``sids`` restricts the set).  Returns sid -> (n_steps, D_out).
-        With ``ensemble="mean"`` the fused mean is what free-runs: every
-        reservoir receives it as input, and every sid's series IS the mean
-        series."""
-        if self.readout is None:
-            raise ValueError("closed-loop decode needs a trained readout")
-        if self.cfg.d_in != self.cfg.d_out:
-            raise ValueError("closed loop requires d_in == d_out")
-        # dict.fromkeys: dedupe (a repeated sid must not double-count tokens)
-        # while preserving order; values resolved via _active for clear
-        # errors.  Default: the *ready* sessions — chunk-in-flight sessions
-        # hold slots but must not free-run mid-prompt.
-        targets = list(dict.fromkeys(
-            self.ready_sessions if sids is None else sids))
-        self._ensure_hot(targets)      # parked targets promote transparently
-        stats = {sid: self._active(sid) for sid in targets}  # validate first
-        mask = np.zeros((self.max_slots,), bool)
-        for sid in targets:
-            mask[stats[sid].slot] = True
-            stats[sid].tokens_decoded += n_steps
-            stats[sid].last_use = self._tick()
-        self._stats["decode_tokens"] += n_steps * len(targets)
-
-        def launch():
-            self.arena, ys = self._closed_jit(
-                self.params, self._wave_w(), self.arena, jnp.asarray(mask),
-                int(n_steps), self._ens_weights)
-            return ys
-
-        # Autotune times the dispatch (host sync, the price of a
-        # measurement) — the per-token cost feeds the decode surface the
-        # decode-aware planner budgets against.
-        ys = self._dispatch_decode(launch, targets, tokens=n_steps,
-                                   block=False,
-                                   slots=[stats[s].slot for s in targets])
-        self._note_freerun(targets, n_steps)
-        # ys: (n_steps, max_slots, d_out) — return lazy device slices so
-        # callers (pipelined serving loops) stay async; convert to host
-        # memory on their own schedule (autotune forces the sync above).
-        out = {sid: ys[:, stats[sid].slot] for sid in targets}
-        for sid, arr in out.items():
-            self._decode_buf.setdefault(sid, []).append(arr)
-        return out
+    # Decode (``decode_step`` / ``observe`` / ``decode_closed_loop`` /
+    # ``collect_decoded``), ``queue_inputs``, ``state_of``, ``drift_rmse``
+    # and ``clear_decode_gaps`` forward straight to their owning plane via
+    # ``_PLANE_FWD`` — the bound plane method carries the contract.

@@ -78,7 +78,8 @@ that all lives a layer down in ``serve.arena``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, List, Optional, Tuple
+import time
+from typing import Dict, Hashable, List, Optional, Tuple
 
 __all__ = ["PrefillRequest", "WaveItem", "bucket_length", "WaveScheduler"]
 
@@ -172,6 +173,17 @@ class WaveScheduler:
         self._queue: List[PrefillRequest] = []
         self._sids: set = set()           # O(1) membership for has()
         self._deferred: Optional[Hashable] = None
+        # Per-session decode deadlines: sid -> [slo_us, charged_us, stamp].
+        # ``charged_us`` is the predicted/measured non-decode cost (prefill,
+        # page, refit waves) accrued since the sid's last decode; ``stamp``
+        # the wall time of that decode.  The consumed budget is the larger
+        # of the two — host overhead eats latency no cost model predicts.
+        # The globals seed fresh entries so a newly tracked sid inherits
+        # the cost charged since the last decode of ANY session (exactly
+        # the engine-wide clock this table replaces).
+        self._decode: Dict[Hashable, list] = {}
+        self._decode_charge = 0.0
+        self._decode_stamp = time.perf_counter()
 
     # ------------------------------------------------------------- queueing
     def submit(self, req: PrefillRequest) -> None:
@@ -450,6 +462,96 @@ class WaveScheduler:
             self._queue = [r for r in self._queue if r.sid not in drop]
             self._queue.extend(requeue)
         return items
+
+    # ----------------------------------------------------- decode deadlines
+    def track_decode(self, sid: Hashable, slo_us: float) -> None:
+        """Register (or re-SLO) a decoding session.  A fresh entry inherits
+        the globally-accrued charge/stamp, so tracking a sid mid-serve does
+        not grant it a free budget reset.  Per-session SLOs are what make
+        serve tiers real: a premium sid with a tight ``slo_us`` comes due —
+        and decodes — ahead of relaxed ones (see :meth:`due_decode_sids`)."""
+        if slo_us is None or slo_us <= 0:
+            raise ValueError(f"decode SLO for {sid!r} must be positive, "
+                             f"got {slo_us}")
+        ent = self._decode.get(sid)
+        if ent is None:
+            self._decode[sid] = [float(slo_us), self._decode_charge,
+                                 self._decode_stamp]
+        else:
+            ent[0] = float(slo_us)
+
+    def untrack_decode(self, sid: Hashable) -> None:
+        self._decode.pop(sid, None)
+
+    def decode_slo_of(self, sid: Hashable) -> Optional[float]:
+        ent = self._decode.get(sid)
+        return None if ent is None else ent[0]
+
+    @property
+    def tracked_decoders(self) -> List[Hashable]:
+        return list(self._decode)
+
+    def charge_decode_cost(self, us: float) -> None:
+        """Charge non-decode wave cost (prefill / page / refit, predicted or
+        measured) against every tracked session's budget."""
+        self._decode_charge += us
+        for ent in self._decode.values():
+            ent[1] += us
+
+    def note_decoded(self, sids, wall: Optional[float] = None) -> None:
+        """A decode wave just produced tokens for ``sids``: their charge
+        and wall stamp reset — and so do the globals (the engine-wide
+        "cost since the last decode" clock restarts on any decode)."""
+        wall = time.perf_counter() if wall is None else wall
+        self._decode_charge = 0.0
+        self._decode_stamp = wall
+        for sid in sids:
+            ent = self._decode.get(sid)
+            if ent is not None:
+                ent[1] = 0.0
+                ent[2] = wall
+
+    def _decode_budgets(self, reserve_us: float, among=None
+                        ) -> List[Tuple[float, Hashable]]:
+        now = time.perf_counter()
+        out = []
+        sel = None if among is None else set(among)
+        for sid, (slo, charged, stamp) in self._decode.items():
+            if sel is not None and sid not in sel:
+                continue
+            elapsed = max(charged, (now - stamp) * 1e6)
+            out.append((slo - elapsed - reserve_us, sid))
+        return out
+
+    def decode_budget(self, reserve_us: float = 0.0,
+                      among=None) -> Optional[float]:
+        """Remaining decode latency budget in microseconds: the *tightest*
+        tracked session's ``slo - consumed - reserve`` (``reserve_us``: the
+        upcoming decode wave's own predicted cost — the gap the SLO bounds
+        ends when tokens exist, not when the wave starts).  ``among``
+        restricts to a subset (a flush's protected decoders).  None when no
+        session is tracked."""
+        b = self._decode_budgets(reserve_us, among)
+        return min(v for v, _ in b) if b else None
+
+    def due_decode_sids(self, reserve_us: float = 0.0,
+                        among=None) -> List[Hashable]:
+        """The sessions the next decode wave should serve, most urgent
+        first: every tracked sid whose remaining budget is spent (<= 0),
+        or — when the planner preempts early, before anyone is overdue —
+        the sids tied (~1us) with the tightest budget.  Uniform SLOs tie
+        everything, so the wave serves all tracked decoders exactly as the
+        engine-wide clock did; mixed SLOs are where premium sessions
+        decode first while relaxed ones keep waiting."""
+        b = self._decode_budgets(reserve_us, among)
+        if not b:
+            return []
+        b.sort(key=lambda e: e[0])
+        due = [sid for v, sid in b if v <= 0.0]
+        if due:
+            return due
+        floor = b[0][0]
+        return [sid for v, sid in b if v <= floor + 1.0]
 
     # ------------------------------------------------------------- lookahead
     def _score(self, waves: List[Tuple[int, List[WaveItem]]]) -> float:

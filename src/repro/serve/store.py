@@ -430,7 +430,7 @@ def _stats_rec(sid, st) -> dict:
 
 
 def _stats_from_rec(rec):
-    from .engine import SessionStats
+    from .ingest import SessionStats
     return SessionStats(slot=rec["slot"], tokens_prefilled=rec["tp"],
                         tokens_decoded=rec["td"],
                         prefill_pending=rec["pending"],
@@ -705,7 +705,7 @@ def restore_engine(cls, path: str, *, mesh=None):
     # its restored ``tenant``).  Both absent in pre-learn snapshots —
     # ``get`` keeps those restorable.
     for i, rec in enumerate(m.get("learn_state", [])):
-        from .engine import _GramAcc, _LearnState
+        from .learn import _GramAcc, _LearnState
         acc = _GramAcc(pairs=rec["pairs"], skip_left=rec["skip_left"],
                        drift=rec["drift"])
         if rec["gram"]:

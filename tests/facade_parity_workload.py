@@ -1,0 +1,120 @@
+"""Deterministic mixed workload replayed for the facade-parity test.
+
+Runs churn (submit/flush over a paged 3-slot arena), chunked prefill,
+teacher-forced streaming + refit, closed-loop decode, release/evict and a
+snapshot of the surviving per-session state through the PUBLIC engine
+surface only.  The recorded outputs (``tests/data/facade_parity_ref.npz``)
+were captured on the pre-plane-split monolith; the refactored facade must
+reproduce them <= 1e-5 (see tests/test_serving_planes.py).
+
+Wall-clock-dependent paths (``decode_slo_us`` interleave, autotune) are
+deliberately OFF: the workload must be a pure function of the model and
+the script below.
+
+Record / refresh the reference (only on a known-good engine; x64 is forced
+to match the conftest the replay runs under):
+
+    PYTHONPATH=src python tests/facade_parity_workload.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import esn as esn_fn
+from repro.core.esn import ESNConfig, LinearESN
+from repro.data.signals import mso_series
+
+REF_PATH = os.path.join(os.path.dirname(__file__), "data",
+                        "facade_parity_ref.npz")
+
+CFG = ESNConfig(n=24, d_in=1, d_out=1, spectral_radius=0.9, leak=0.8,
+                input_scaling=0.5, ridge_alpha=1e-4, seed=11,
+                use_feedback=True)
+
+
+def build_model():
+    sig = mso_series(3, 901)
+    u, y = sig[:-1, None], sig[1:, None]
+    std = LinearESN.standard(CFG).fit(u[:400], y[:400], washout=50)
+    model = LinearESN.diagonalized(CFG).ewt_from(std)
+    return model, u, y
+
+
+def run_workload(engine_cls=None):
+    """Drive one scripted mixed workload; return {name: np.ndarray}."""
+    if engine_cls is None:
+        from repro.serve import ReservoirEngine as engine_cls
+    model, u, y = build_model()
+    eng = engine_cls(model, max_slots=3, learn=True, refit_washout=0,
+                     park_host_rows=4,
+                     cold_dir=tempfile.mkdtemp(prefix="parity_cold_"),
+                     decode_wave_tokens=2, chunk_max=48)
+    out = {}
+
+    # -- wave 1: churn 6 sessions through a 3-slot paged arena; one long
+    # prompt drains as resumable chunk waves (chunk_max=48 < 130).
+    lens = [24, 40, 130, 17, 24, 40]
+    for i, t in enumerate(lens):
+        off = 60 + 31 * i
+        tenant = "acme" if i % 2 == 0 else None
+        eng.submit(f"s{i}", u[off:off + t], y[off:off + t], tenant=tenant)
+    eng.flush()
+
+    # -- closed-loop decode on a mix of hot and parked sessions (parked
+    # targets promote transparently -> paging churn).
+    eng.decode_closed_loop(4, sids=["s0", "s2", "s4"])
+
+    # -- teacher-forced streaming (learn accumulation) on two sessions.
+    for t in range(300, 340):
+        eng.decode_step({"s1": u[t], "s3": u[t + 100]})
+        eng.observe("s1", y[t])
+        eng.observe("s3", y[t + 100])
+
+    # -- refit the dirty sessions; the new readouts serve immediately.
+    w = eng.refit()
+    for sid, arr in sorted(w.items()):
+        out[f"refit_w:{sid}"] = np.asarray(arr)
+
+    # -- churn: release one session with state, drop another, re-admit the
+    # released state under a new sid, plus a fresh prompt.
+    ev = eng.release("s5")
+    out["release_s5_state"] = np.asarray(ev[0])
+    out["release_s5_yprev"] = np.asarray(ev[1])
+    eng.release("s4", drop=True)
+    eng.submit("s5b", h0=ev[0], y0=ev[1])
+    eng.submit("s6", u[500:540], y[500:540])
+    eng.flush(refit=True)
+
+    # -- second decode burst over the survivors.
+    eng.decode_closed_loop(3, sids=["s1", "s5b", "s6"])
+
+    # -- drain every buffered token and snapshot surviving state.
+    dec = eng.collect_decoded()
+    for sid, arr in sorted(dec.tokens.items()):
+        out[f"decoded:{sid}"] = np.asarray(arr)
+    for sid in ["s0", "s1", "s2", "s3", "s5b", "s6"]:
+        out[f"state:{sid}"] = np.asarray(eng.state_of(sid))
+        ro = eng.readout_for(sid)
+        if ro is not None:
+            out[f"readout:{sid}"] = np.asarray(ro)
+    st = eng.stats()
+    for k in ("waves_total", "rows_total", "prefill_tokens", "decode_tokens",
+              "refit_waves_total", "refit_rows_total", "page_rows_total",
+              "sessions_active", "sessions_parked"):
+        out[f"stat:{k}"] = np.asarray(getattr(st, k))
+    return out
+
+
+def main():
+    os.makedirs(os.path.dirname(REF_PATH), exist_ok=True)
+    out = run_workload()
+    np.savez(REF_PATH, **out)
+    print(f"wrote {REF_PATH} ({len(out)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,6 @@ The acceptance bars pinned here:
 """
 import os
 import tempfile
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -239,7 +238,7 @@ def test_sessions_sharing_tenant_share_one_readout():
 
 
 # ------------------------------------------------------- typed EngineStats
-def test_stats_is_typed_dataclass_with_dict_compat():
+def test_stats_is_typed_dataclass_dict_access_removed():
     cfg = _cfg()
     dia, u, y = _model(cfg)
     eng = ReservoirEngine(dia, max_slots=2, learn=True)
@@ -250,15 +249,12 @@ def test_stats_is_typed_dataclass_with_dict_compat():
     assert st.sessions_active == 1                       # attribute access
     d = st.to_dict()
     assert d["sessions_active"] == 1 and isinstance(d, dict)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        assert st["sessions_active"] == 1                # compat, one release
-    assert rec and issubclass(rec[0].category, DeprecationWarning)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        assert "sessions_active" in st
-        assert dict(st)["sessions_active"] == 1          # Mapping protocol
-    assert rec and issubclass(rec[0].category, DeprecationWarning)
+    # The deprecated Mapping compat (one release of DeprecationWarning) is
+    # REMOVED: EngineStats is a plain frozen dataclass now.  Pin the
+    # removal so the shim cannot quietly return.
+    with pytest.raises(TypeError):
+        st["sessions_active"]
+    assert not hasattr(st, "keys") and not hasattr(st, "__contains__")
     # refit telemetry fields exist from the start
     assert st.refit_waves_total == 0 and st.growth_events == 0
 

@@ -164,7 +164,7 @@ def test_8_slot_paged_engine_serves_64_sessions_like_manual_parking():
         np.testing.assert_array_equal(np.concatenate(toks_eng[sid]),
                                       np.concatenate(toks_ref[sid]))
     st_ = eng.stats()
-    assert st_["promote_waves"] > 0 and st_["demote_waves"] > 0
+    assert st_.promote_waves > 0 and st_.demote_waves > 0
 
 
 def test_arena_width_ulp_effect_is_not_a_paging_bug():
